@@ -1,0 +1,69 @@
+"""Pallas kernel micro-bench: interpret-mode correctness + oracle timing
+across the paper's PE menu, plus the serving-form storage savings per arch
+(the paper's memory claim at LM scale)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.precision import PAPER_CONFIGS
+from repro.kernels import binary_matmul, pack_weight, quantized_matmul
+from repro.kernels import ref
+
+
+def kernel_vs_oracle():
+    rng = np.random.default_rng(0)
+    m, k, n = 128, 512, 256
+    x = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
+    out = []
+    for name in ["8xT", "4x4", "2xT", "2x2"]:
+        cfg = PAPER_CONFIGS[name]
+        pw = pack_weight(jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)), cfg)
+        want = quantized_matmul(x, pw, use_pallas=False)
+        t0 = time.perf_counter()
+        got = quantized_matmul(x, pw, use_pallas=True, interpret=True,
+                               bm=128, bn=128, bk=512)
+        us = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(got - want)))
+        out.append((name, us, err))
+    # binary XNOR-popcount
+    a = rng.choice([-1, 1], (m, k)).astype(np.int8)
+    w = rng.choice([-1, 1], (n, k)).astype(np.int8)
+    ap, wp = packing.pack_binary_pm1(jnp.asarray(a)), packing.pack_binary_pm1(jnp.asarray(w))
+    t0 = time.perf_counter()
+    got = binary_matmul(ap, wp, k=k, bm=128, bn=128, interpret=True)
+    us = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(np.asarray(got) - a.astype(np.int32) @ w.T)))
+    out.append(("1x1", us, err))
+    return out
+
+
+def serving_storage():
+    """Per-arch serving parameter bytes: bf16 vs 2xT packed (paper's claim)."""
+    from repro.configs import get_config
+    from repro.models import build_model, to_serving
+    from repro.models.config import reduce_for_smoke
+    from repro.models.convert import serving_param_bytes
+    out = []
+    for arch in ["glm4-9b", "granite-moe-1b-a400m"]:
+        cfg = reduce_for_smoke(get_config(arch, precision="2xT"))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        base = serving_param_bytes(params)
+        packed = serving_param_bytes(to_serving(params, cfg, tp=1))
+        out.append((arch, base / packed))
+    return out
+
+
+def main():
+    for name, us, err in kernel_vs_oracle():
+        print(f"kernel_{name}_interp,{us:.0f},maxerr{err:.2e}")
+        assert err < 1e-4, (name, err)
+    for arch, ratio in serving_storage():
+        print(f"kernel_storage_{arch},0,{ratio:.2f}x_smaller_2xT")
+
+
+if __name__ == "__main__":
+    main()

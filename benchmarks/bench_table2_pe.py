@@ -1,0 +1,60 @@
+"""Table II — PE configuration cost: FPGA ALMs/dot + the TPU kernel analogue.
+
+FPGA side: the paper's ALMs-per-dot table and the compute density
+(ops/cycle/kALM) it implies.  TPU side: per PrecisionConfig the storage
+bits/weight, HBM-bandwidth advantage over bf16 (the v5e analogue of "more
+lanes", DESIGN.md §2), and the measured interpret-mode kernel latency vs the
+jnp oracle on a fixed (256x512x512) problem.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pe_model as pm
+from repro.core.precision import PAPER_CONFIGS
+from repro.kernels import pack_weight, quantized_matmul
+
+
+def rows():
+    out = []
+    for (a, w, words), alms in sorted(pm.PE_TABLE.items()):
+        density = words * 2 / alms * 1000  # ops/cycle per kALM
+        out.append((f"{a}x{w}@{words}", alms, density))
+    return out
+
+
+def tpu_rows():
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 512, 512
+    x_codes = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
+    x_pm1 = jnp.asarray(rng.choice([-1, 1], (m, k)).astype(np.int8))
+    wf = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    out = []
+    for name in ["8x8", "8xT", "8xB", "4x4", "3x3", "2x2", "2xT", "1x1"]:
+        cfg = PAPER_CONFIGS[name]
+        pw = pack_weight(wf, cfg)
+        x = x_pm1 if name == "1x1" else x_codes
+        f = lambda: quantized_matmul(x, pw, use_pallas=False)
+        f()  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            f().block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        bw_gain = 16.0 / cfg.weight_storage_bits
+        out.append((name, us, cfg.weight_storage_bits, bw_gain))
+    return out
+
+
+def main():
+    print("# Table II: PE config -> ALMs/dot, ops/cycle/kALM (FPGA model)")
+    for name, alms, density in rows():
+        print(f"table2_fpga_{name},0,{alms}:{density:.1f}")
+    print("# TPU analogue: storage bits/weight, HBM advantage vs bf16, "
+          "oracle latency on 256x512x512 (CPU)")
+    for name, us, bits, gain in tpu_rows():
+        print(f"table2_tpu_{name},{us:.0f},{bits}b:{gain:.0f}x_bw")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table V — Stratix 10 vs Titan X Pascal, images/second (batch 1).
+
+Model must reproduce the paper's S10 b1 column within 15% per row (3-bit row
+uses the 4x4 PE — see pe_model.images_per_sec).  Titan X numbers are the
+paper's measured reference data.  Also checks the paper's qualitative claim:
+at batch 1 the reduced-precision FPGA beats the GPU everywhere below 8-bit.
+"""
+import time
+
+from repro.core import pe_model as pm
+
+NETS = ["resnet34", "resnet50", "alexnet"]
+
+
+def main():
+    t0 = time.perf_counter()
+    worst = 0.0
+    for (a, w), paper_row in pm.TABLE5_S10_B1.items():
+        if a == "fp32":
+            model_row = [pm.fp32_images_per_sec(pm.STRATIX10, pm.GOPS[n])
+                         for n in NETS]
+        else:
+            model_row = [pm.images_per_sec(pm.TABLE4_PE[(a, w)], pm.STRATIX10,
+                                           pm.GOPS[n]) for n in NETS]
+        for n, m, p in zip(NETS, model_row, paper_row):
+            err = abs(m / p - 1)
+            worst = max(worst, err)
+            print(f"table5_{a}x{w}_{n},0,{m:.0f}_vs_{p}")
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"table5_worst_rel_err,{us:.0f},{worst:.3f}")
+    assert worst < 0.15, f"Table V worst error {worst:.3f} > 15%"
+
+    # qualitative: sub-8-bit S10 b1 beats Titan X b1 (which pads to int8)
+    tx_b1 = pm.TABLE5_TITANX["resnet34_int8"][0]
+    for (a, w) in [("2", "T"), ("2", "2"), ("1", "1"), ("8", "T"), ("8", "B")]:
+        s10 = pm.images_per_sec(pm.TABLE4_PE[(a, w)], pm.STRATIX10,
+                                pm.GOPS["resnet34"])
+        assert s10 > tx_b1, (a, w, s10, tx_b1)
+    print(f"table5_claim_b1_fpga_wins,0,all_sub8_rows_beat_TX_{tx_b1}")
+
+
+if __name__ == "__main__":
+    main()

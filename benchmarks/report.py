@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+dry-run JSONs.  Usage: PYTHONPATH=src python -m benchmarks.report"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, terms
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def _fmt(v):
+    return f"{v:.3g}"
+
+
+def render(results_dir=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir or RESULTS, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+
+    out = []
+    out.append("### Dry-run matrix (status per arch x shape x mesh)\n")
+    out.append("| arch | shape | 16x16 | 2x16x16 | HBM/dev (16x16) | compile s |")
+    out.append("|---|---|---|---|---|---|")
+    by_key = {}
+    for r in recs:
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    archshapes = sorted({(r["arch"], r["shape"]) for r in recs})
+    for arch, shape in archshapes:
+        r1 = by_key.get((arch, shape, "16x16"))
+        r2 = by_key.get((arch, shape, "2x16x16"))
+        s1 = "ok" if r1 and r1["status"] == "ok" else "ERR"
+        s2 = "ok" if r2 and r2["status"] == "ok" else "ERR"
+        mem = (r1.get("memory_analysis") or {}).get("total_bytes", 0) / 1e9 \
+            if r1 else 0
+        cs = r1.get("compile_s", 0) if r1 else 0
+        out.append(f"| {arch} | {shape} | {s1} | {s2} | {mem:.1f} GB | {cs} |")
+
+    out.append("\n### Roofline terms (single-pod 16x16, per-device seconds/step)\n")
+    out.append("| arch | shape | compute s | memory s | collective s | dominant "
+               "| MODEL_FLOPS/dev | useful/HLO | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for arch, shape in archshapes:
+        r = by_key.get((arch, shape, "16x16"))
+        if not r or r["status"] != "ok":
+            continue
+        t = terms(r)
+        out.append(
+            f"| {arch} | {shape} | {_fmt(t['compute_s'])} | "
+            f"{_fmt(t['memory_s'])} | {_fmt(t['collective_s'])} | "
+            f"{t['dominant']} | {_fmt(t['model_flops_per_dev'])} | "
+            f"{_fmt(t['useful_flops_ratio'])} | "
+            f"{_fmt(t['roofline_fraction'])} |")
+    return "\n".join(out)
+
+
+def render_hillclimb(hc_dir=None):
+    hc_dir = hc_dir or os.path.join(os.path.dirname(__file__), "..",
+                                    "results", "hillclimb")
+    out = ["| cell variant | flops/dev | bytes/dev | coll bytes/dev | HBM GB |",
+           "|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(hc_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r["status"] != "ok":
+            continue
+        hc = r["hlo_corrected"]
+        mem = (r.get("memory_analysis") or {}).get("total_bytes", 0) / 1e9
+        name = os.path.basename(path)[:-5]
+        out.append(f"| {name} | {hc['flops_corrected']:.3g} | "
+                   f"{hc['bytes_corrected']:.3g} | "
+                   f"{hc['collective_bytes_corrected']:.3g} | {mem:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render())
+    print("\n### Hillclimb variants\n")
+    print(render_hillclimb())

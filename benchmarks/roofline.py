@@ -1,0 +1,106 @@
+"""Roofline analysis — reads results/dryrun/*.json, derives the three terms.
+
+Per (arch x shape x mesh) cell:
+    compute    = FLOPs / (chips_eff x 197e12)         [bf16 peak / chip]
+    memory     = HBM bytes / (chips_eff x 819e9)
+    collective = collective bytes / (links x 50e9)
+
+All dry-run numbers are PER DEVICE (the partitioned HLO is the per-device
+program), so chips_eff = 1 in the denominators and the terms are per-device
+step times directly.  FLOPs/bytes/collectives are the trip-count-corrected
+values from launch.hlo_cost (raw cost_analysis counts scan bodies once —
+recorded alongside for reference).  Collective term uses a simple model:
+every collective byte crosses one ICI link at 50 GB/s (v5e has multiple
+links/chip; this is the conservative single-link figure the assignment
+specifies).
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference); the ratio
+MODEL_FLOPS/HLO_FLOPS flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(results_dir: str = None, mesh: str = None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir or RESULTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            cells.append(rec)
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def terms(rec):
+    """The three roofline terms (seconds, per device-step) + diagnostics."""
+    hc = rec["hlo_corrected"]
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    compute = hc["flops_corrected"] / PEAK_FLOPS
+    memory = hc["bytes_corrected"] / HBM_BW
+    collective = hc["collective_bytes_corrected"] / LINK_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])
+    model_flops_dev = rec["model_flops"] / n_dev
+    util = model_flops_dev / max(hc["flops_corrected"], 1.0)
+    bound = max(compute, memory, collective)
+    # roofline fraction: useful model flops vs what the machine could do in
+    # the time the dominant term takes
+    frac = model_flops_dev / (bound * PEAK_FLOPS) if bound else 0.0
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant[0], "bound_s": bound,
+        "model_flops_per_dev": model_flops_dev,
+        "useful_flops_ratio": util, "roofline_fraction": frac,
+    }
+
+
+def summarize(results_dir=None, mesh="16x16"):
+    rows = []
+    for rec in load_cells(results_dir, mesh=mesh):
+        if rec.get("status") != "ok":
+            rows.append({"cell": f"{rec['arch']}__{rec['shape']}",
+                         "status": rec.get("error", "error")})
+            continue
+        t = terms(rec)
+        rows.append({
+            "cell": f"{rec['arch']}__{rec['shape']}",
+            "variant": rec.get("precision", "fp32"),
+            "mesh": rec["mesh"],
+            **{k: (f"{v:.4g}" if isinstance(v, float) else v)
+               for k, v in t.items()},
+            "mem_hbm_gb": f"{(rec.get('memory_analysis') or {}).get('total_bytes', 0) / 1e9:.1f}",
+        })
+    return rows
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = summarize(mesh=mesh)
+        if not rows:
+            continue
+        print(f"# roofline terms per cell ({mesh}, per-device seconds)")
+        for r in rows:
+            if "status" in r:
+                print(f"roofline_{r['cell']},0,ERROR")
+                continue
+            print(f"roofline_{r['cell']}_{r['variant']},0,"
+                  f"c{r['compute_s']}|m{r['memory_s']}|x{r['collective_s']}"
+                  f"|{r['dominant']}|rf{r['roofline_fraction']}"
+                  f"|hbm{r['mem_hbm_gb']}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Paper-model benches assert
+reproduction tolerances; the roofline bench summarizes the dry-run artifacts
+(run ``python -m repro.launch.dryrun --all`` first to populate them).
+"""
+from __future__ import annotations
+
+import traceback
+
+from benchmarks import (bench_fig6_widening, bench_kernels, bench_table2_pe,
+                        bench_table3_alexnet, bench_table4_resnet,
+                        bench_table5_device_compare, roofline)
+
+BENCHES = [
+    ("table2", bench_table2_pe.main),
+    ("table3", bench_table3_alexnet.main),
+    ("table4", bench_table4_resnet.main),
+    ("table5", bench_table5_device_compare.main),
+    ("fig6", bench_fig6_widening.main),
+    ("kernels", bench_kernels.main),
+    ("roofline", roofline.main),
+]
+
+
+def main() -> None:
+    failures = []
+    for name, fn in BENCHES:
+        print(f"## bench:{name}")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"{name}_FAILED,0,{type(e).__name__}")
+            traceback.print_exc()
+    print(f"## done, failures={failures}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart — the paper's precision knob in five steps.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import PAPER_CONFIGS, fuse_bns, reference_bn_scale
+from repro.models import build_model, make_batch, reduce_for_smoke, to_serving
+from repro.models.config import ShapeConfig
+from repro.models.convert import serving_param_bytes
+
+# 1. pick an architecture and a PE config from the paper's menu (Table II)
+cfg = reduce_for_smoke(get_config("smollm-135m", precision="2xT", kv_bits=8))
+print(f"arch={cfg.name}  precision={cfg.precision} "
+      f"(2-bit activations x ternary weights — the Arria 10 PoC config)")
+
+# 2. init and run a QAT-style forward (fake-quant STE under the hood)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+batch = make_batch(cfg, ShapeConfig("demo", 32, 2, "train"))
+logits, _ = model.forward(params, batch)
+print(f"train-form forward: logits {logits.shape}, "
+      f"loss {float(model.loss(params, batch)):.3f}")
+
+# 3. convert to the serving form: weights quantize + bit-pack, scales fold
+#    into a single per-feature multiply-add (paper eqs. 1/2 — BNS fusion)
+sparams = to_serving(params, cfg, tp=1)
+print(f"serving form: {serving_param_bytes(params)/1e6:.2f} MB -> "
+      f"{serving_param_bytes(sparams)/1e6:.2f} MB packed")
+
+# 4. the BNS fold itself, in isolation (paper §III.A):
+acc = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)).astype(np.float32))
+mean, var = jnp.zeros(8), jnp.ones(8)
+scale, shift, alpha = jnp.full(8, 2.0), jnp.full(8, -1.0), jnp.full(8, 0.5)
+fused = fuse_bns(mean, var, 1e-5, scale, shift, alpha=alpha)
+ref = reference_bn_scale(acc, mean, var, 1e-5, scale, shift, alpha=alpha)
+print(f"BNS fusion max err: "
+      f"{float(jnp.max(jnp.abs(acc*fused.gamma+fused.beta - ref))):.2e}")
+
+# 5. serve: prefill a prompt, decode greedily with the int8 KV cache
+prompt = make_batch(cfg, ShapeConfig("p", 16, 2, "prefill"))
+logits, cache = model.prefill(sparams, prompt, 24)
+tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+for i in range(4):
+    logits, cache = model.decode_step(sparams, tok, cache, jnp.int32(16 + i))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+print(f"decoded tokens: {np.asarray(tok).ravel()}  (finite: "
+      f"{bool(np.all(np.isfinite(np.asarray(logits))))})")
+print("\nPE menu available:", ", ".join(sorted(PAPER_CONFIGS)))

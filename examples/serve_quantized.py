@@ -1,0 +1,34 @@
+"""End-to-end serving driver (deliverable b): batched requests against a
+quantized model — the paper's deployment story, LM-shaped.
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py
+      PYTHONPATH=src python examples/serve_quantized.py --precision 1x1
+
+Sweeps the paper's PE menu over the same request batch and prints the
+weight-storage/latency table — the TPU analogue of Table V's rows.
+"""
+import argparse
+
+from repro.launch import serve as serve_launcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--precision", default=None,
+                    help="single config; default sweeps the menu")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    menu = [args.precision] if args.precision else ["8x8", "8xT", "4x4", "2xT"]
+    for prec in menu:
+        print(f"\n=== precision {prec} ===")
+        serve_launcher.main([
+            "--arch", "smollm-135m", "--reduced", "--precision", prec,
+            "--kv-bits", "8", "--requests", str(args.requests),
+            "--prompt-len", "32", "--gen", str(args.gen),
+        ])
+
+
+if __name__ == "__main__":
+    main()

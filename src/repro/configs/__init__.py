@@ -1,0 +1,58 @@
+"""Config registry: ``get_config(arch_id)`` + the assigned shape grid."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+
+ARCH_IDS = [
+    "jamba-v0.1-52b",
+    "glm4-9b",
+    "smollm-135m",
+    "gemma2-27b",
+    "starcoder2-15b",
+    "whisper-base",
+    "internvl2-76b",
+    "kimi-k2-1t-a32b",
+    "granite-moe-1b-a400m",
+    "falcon-mamba-7b",
+]
+
+_MODULES = {
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "glm4-9b": "glm4_9b",
+    "smollm-135m": "smollm_135m",
+    "gemma2-27b": "gemma2_27b",
+    "starcoder2-15b": "starcoder2_15b",
+    "whisper-base": "whisper_base",
+    "internvl2-76b": "internvl2_76b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+
+def get_config(arch_id: str, precision: str = None, kv_bits: int = None,
+               **overrides) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}").CONFIG
+    if precision is not None:
+        overrides["precision"] = precision
+    if kv_bits is not None:
+        overrides["kv_bits"] = kv_bits
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def iter_cells():
+    """All (arch, shape) dry-run cells, with applicability flags."""
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for shape in SHAPES.values():
+            skip = None
+            if shape.name == "long_500k" and not cfg.sub_quadratic:
+                skip = "pure full attention at 524k ctx (DESIGN.md §4)"
+            yield arch_id, shape, skip

@@ -1,0 +1,29 @@
+"""gemma2-27b [dense] — local+global alternating, logit softcaps.
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000  [arXiv:2408.00118]
+Period of 2: sliding-window (4096) then global attention; attn softcap 50,
+final-logit softcap 30; pre+post norms per sub-block; embeddings scaled by
+sqrt(d_model).  long_500k run as a documented partial (23/46 layers are
+4k-window; decode is linear-time) — see DESIGN.md §4.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=36864,
+    vocab=256000,
+    layer_pattern=("attn_local", "attn"),
+    ffn_pattern=("dense", "dense"),
+    window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    act_fn="gelu",
+    tie_embeddings=True,
+    sub_quadratic=True,   # half the layers; long_500k partial — see DESIGN.md
+    notes="local:global 1:1 alternation; softcaps per arXiv:2408.00118",
+)

@@ -1,0 +1,21 @@
+"""smollm-135m [dense] — llama-arch small.
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152  [hf:HuggingFaceTB/SmolLM-135M]
+9 heads don't divide the 16-way model axis -> attention replicated over TP,
+FFN/vocab sharded (parallel/sharding.py divisibility rule).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab=49152,
+    layer_pattern=("attn",),
+    ffn_pattern=("dense",),
+    tie_embeddings=True,
+    sub_quadratic=False,
+)

@@ -1,0 +1,77 @@
+"""BNS fusion — paper §III.A eqs. (1)/(2).
+
+During training the datapath after a low-bit dot product is:
+
+    y = dot(x, w_q)                    # integer/ternary/binary accumulate
+    y = alpha * y                      # per-feature weight scale (TWN/XNOR alpha)
+    y = (y - mu) / sigma               # batch-norm statistics  (w = mu, x = sigma
+                                       #   in the paper's notation)
+    y = scale * y + shift              # learned scale kernel   (y = scale, z = shift)
+    y = relu(y); y = q(y)              # eq. (4) re-quantize
+
+At inference the paper folds alpha + BN + scale into ONE per-feature
+multiply-add:   gamma = (y/x) * alpha ,   beta = z - (y/x) * w
+so the accelerator applies a single fused scale-shift ("BNS") after the PE
+array.  This module implements that fold and its transformer-era analogue
+(folding dequant scales into RMSNorm / matmul epilogues).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class BNSParams(NamedTuple):
+    """Fused per-feature scale-shift: y = gamma * acc + beta."""
+    gamma: jnp.ndarray
+    beta: jnp.ndarray
+
+
+def fuse_bns(bn_mean, bn_var, bn_eps, scale, shift, alpha=None) -> BNSParams:
+    """Paper eqs. (1)/(2).
+
+    In the paper's notation: w = bn shift (mean), x = bn scale (sqrt(var+eps)),
+    y = learned scale, z = learned shift, alpha = ternary/binary weight scale.
+
+        gamma = (y / x) * alpha
+        beta  = z - (y / x) * w
+    """
+    x = jnp.sqrt(bn_var + bn_eps)
+    y_over_x = scale / x
+    if alpha is None:
+        alpha = jnp.ones_like(scale)
+    gamma = y_over_x * alpha
+    beta = shift - y_over_x * bn_mean
+    return BNSParams(gamma=gamma, beta=beta)
+
+
+def apply_bns(acc, p: BNSParams):
+    """Apply the fused scale-shift to raw PE-array accumulators."""
+    return acc * p.gamma + p.beta
+
+
+def reference_bn_scale(acc, bn_mean, bn_var, bn_eps, scale, shift, alpha=None):
+    """The unfused datapath (training graph), used to verify the fold."""
+    if alpha is not None:
+        acc = acc * alpha
+    y = (acc - bn_mean) / jnp.sqrt(bn_var + bn_eps)
+    return y * scale + shift
+
+
+def fold_dequant_into_gamma(p: BNSParams, act_scale: float, w_scale) -> BNSParams:
+    """Transformer-era analogue (DESIGN.md §4): the integer-GEMM dequant scales
+    (activation per-tensor scale x weight per-channel scale) fold into gamma
+    the same way alpha does.  Keeps the 'one fused scale-shift per feature'
+    invariant of the paper."""
+    return BNSParams(gamma=p.gamma * act_scale * w_scale, beta=p.beta)
+
+
+def fuse_act_quant_levels(p: BNSParams, bits: int) -> BNSParams:
+    """Fold the /(2^k - 1) of eq. (4) dequant into the NEXT layer's gamma.
+
+    Activations are stored as integer codes 0..2^k-1; instead of dividing by
+    (2^k - 1) when dequantizing, scale the next fused gamma — this is the
+    'hide the scalar in with other computation' trick of §III.A."""
+    levels = (1 << bits) - 1
+    return BNSParams(gamma=p.gamma / levels, beta=p.beta)

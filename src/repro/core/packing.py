@@ -1,0 +1,82 @@
+"""Bit packing — the paper's bandwidth/memory saving, made concrete for HBM.
+
+k-bit codes (k in {1, 2, 4, 8}) are packed little-endian into int32 words:
+32/k codes per word.  Signed codes are stored in two's-complement within their
+k-bit field (binary {-1,+1} is stored as the 1-bit field {1,0} -> sign map,
+matching the paper's "represented in hardware as either 0 or 1").
+
+These are the HBM-resident formats the Pallas kernels consume; ``unpack_*``
+are the in-VMEM decode steps and double as the pure-jnp oracles.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PACK_DTYPE = jnp.int32
+WORD_BITS = 32
+
+
+def codes_per_word(bits: int) -> int:
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"packable bit-widths are 1/2/4/8, got {bits}")
+    return WORD_BITS // bits
+
+
+def pack(codes, bits: int):
+    """Pack int codes (any int dtype; values must fit in `bits` signed — or
+    {0,1} for bits==1) along the LAST axis into int32 words.
+
+    Last-axis length must be a multiple of 32/bits (pad upstream).
+    """
+    n = codes_per_word(bits)
+    *lead, k = codes.shape
+    if k % n:
+        raise ValueError(f"last axis {k} not a multiple of {n} for {bits}-bit packing")
+    mask = (1 << bits) - 1
+    c = codes.astype(jnp.uint32) & mask                  # two's-complement field
+    c = c.reshape(*lead, k // n, n)
+    shifts = (jnp.arange(n, dtype=jnp.uint32) * bits)
+    word = jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)  # fields are disjoint: sum == or
+    return word.astype(PACK_DTYPE)
+
+
+def unpack(words, bits: int, signed: bool = True):
+    """Inverse of :func:`pack`.  Returns int8 codes, last axis expanded 32/bits.
+
+    ``signed``: sign-extend the k-bit field (two's complement).  For bits==1
+    with signed=True the field {1,0} decodes to {-1,+1}?? No — 1-bit signed
+    two's complement is {0 -> 0, 1 -> -1}; binary weights use the explicit
+    {0,1}->{-1,+1} map below instead (`unpack_binary_pm1`).
+    """
+    n = codes_per_word(bits)
+    mask = (1 << bits) - 1
+    w = words.astype(jnp.uint32)
+    shifts = (jnp.arange(n, dtype=jnp.uint32) * bits)
+    fields = (w[..., None] >> shifts) & mask             # [..., words, n]
+    fields = fields.reshape(*words.shape[:-1], words.shape[-1] * n)
+    if signed and bits > 1:
+        sign_bit = 1 << (bits - 1)
+        fields = jnp.where(fields >= sign_bit, fields.astype(jnp.int32) - (1 << bits),
+                           fields.astype(jnp.int32))
+    return fields.astype(jnp.int8)
+
+
+def pack_binary_pm1(codes_pm1, ):
+    """Binary weights {-1,+1} -> 1-bit fields {0,1} (paper Fig. 1 convention:
+    +1 stored as 1, -1 stored as 0), packed into int32."""
+    bits01 = (codes_pm1 > 0).astype(jnp.int8)
+    return pack(bits01, 1)
+
+
+def unpack_binary_pm1(words):
+    """Inverse: 1-bit {0,1} -> {-1,+1} int8."""
+    b = unpack(words, 1, signed=False)
+    return (2 * b - 1).astype(jnp.int8)
+
+
+def packed_last_dim(k: int, bits: int) -> int:
+    """Length of the packed last axis for an unpacked length k."""
+    n = codes_per_word(bits)
+    if k % n:
+        raise ValueError(f"{k} not a multiple of {n}")
+    return k // n

@@ -1,0 +1,149 @@
+"""Quantizers — paper §III.A eqs. (3)/(4) and the ternary/binary weight schemes.
+
+Activation quantization (paper eq. 4, generalized from k=2 to k bits):
+
+    q(x) = floor(min(1, x) * (2^k - 1) + 0.5) / (2^k - 1)        x >= 0 (post-ReLU)
+
+i.e. clip-to-[0,1], round to 2^k-1 uniform levels.  The hardware stores the
+integer code (0..2^k-1); the /(2^k-1) is folded into the next layer's scale
+(BNS fusion, see bns.py).
+
+Weight quantization:
+  * k-bit signed ints with a per-output-channel scale (symmetric, WRPN-style).
+  * ternary (TWN, ref [15]): w_q = alpha * sign(w) * 1{|w| > delta},
+    delta = 0.7 * mean|w|, alpha = mean |w| over the retained entries.
+  * binary (BinaryConnect/XNOR, refs [14][17]): w_q = alpha * sign(w),
+    alpha = mean |w| per output channel.
+
+All quantizers come in a straight-through-estimator (STE) flavour for QAT:
+forward uses the quantized value, backward passes gradients through unchanged
+(clipped to the active range for activations).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .precision import (
+    A_FLOAT,
+    A_SIGNED,
+    A_UNSIGNED,
+    PrecisionConfig,
+    W_BINARY,
+    W_FLOAT,
+    W_INT,
+    W_TERNARY,
+)
+
+# ---------------------------------------------------------------------------
+# Activation quantizers (paper eqs. 3/4)
+# ---------------------------------------------------------------------------
+
+def act_quant_codes_unsigned(x: jax.Array, bits: int) -> jax.Array:
+    """Paper eq. (4): integer codes 0..2^k-1 for post-ReLU activations.
+
+    ``floor(min(1, x) * (2^k - 1) + 0.5)`` — the clip below 0 is already done
+    by ReLU in the datapath (paper: "only values greater than 1 need to be
+    clipped"), but we clamp defensively so the function is total.
+    """
+    levels = (1 << bits) - 1
+    x = jnp.clip(x, 0.0, 1.0)
+    return jnp.floor(x * levels + 0.5).astype(jnp.int8)
+
+
+def act_quant_codes_signed(x: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric signed k-bit codes with a per-tensor scale (DESIGN.md §8.3).
+
+    Returns (codes in [-(2^{k-1}-1), 2^{k-1}-1] as int8, scale) with
+    dequant = codes * scale.  Scale is the absmax over the last axis group
+    (per-tensor here; per-row variants live in the kernels' epilogues).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _round_ste(x: jax.Array) -> jax.Array:
+    """round(x) with identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def act_fake_quant(x: jax.Array, cfg: PrecisionConfig) -> jax.Array:
+    """Fake-quantized (quantize->dequantize) activations with STE, for QAT and
+    for the pure-jnp reference paths."""
+    if cfg.a_mode == A_FLOAT:
+        return x
+    bits = cfg.a_bits
+    if cfg.a_mode == A_UNSIGNED:
+        levels = (1 << bits) - 1
+        xc = jnp.clip(x, 0.0, 1.0)
+        return _round_ste(xc * levels) / levels
+    if cfg.a_mode == A_SIGNED:
+        if bits == 1:
+            # binary activations: sign(x) (XNOR-net style)
+            return jnp.sign(x) + jax.lax.stop_gradient(0.0 * x)
+        qmax = (1 << (bits - 1)) - 1
+        scale = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)) / qmax
+        xc = jnp.clip(x / scale, -qmax, qmax)
+        return _round_ste(xc) * scale
+    raise ValueError(cfg.a_mode)
+
+
+# ---------------------------------------------------------------------------
+# Weight quantizers
+# ---------------------------------------------------------------------------
+
+def ternary_quant(w: jax.Array, axis=0) -> Tuple[jax.Array, jax.Array]:
+    """TWN ternarization (ref [15]).  Returns (codes in {-1,0,1} int8, alpha).
+
+    ``axis`` indexes the reduction axes = everything except the output-channel
+    axis; default reduces axis 0 (w shaped [in, out] -> per-out-channel alpha),
+    matching the paper's per-feature alpha scale.
+    """
+    delta = 0.7 * jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+    mask = jnp.abs(w) > delta
+    codes = jnp.where(mask, jnp.sign(w), 0.0)
+    denom = jnp.maximum(jnp.sum(mask, axis=axis, keepdims=True), 1)
+    alpha = jnp.sum(jnp.abs(w) * mask, axis=axis, keepdims=True) / denom
+    return codes.astype(jnp.int8), alpha.astype(jnp.float32)
+
+
+def binary_quant(w: jax.Array, axis=0) -> Tuple[jax.Array, jax.Array]:
+    """XNOR-net binarization (ref [17]): codes {-1,+1}, alpha = mean|w|."""
+    alpha = jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+    codes = jnp.where(w >= 0, 1.0, -1.0)
+    return codes.astype(jnp.int8), alpha.astype(jnp.float32)
+
+
+def int_quant(w: jax.Array, bits: int, axis=0) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric k-bit signed weight quantization with per-channel scale."""
+    qmax = (1 << (bits - 1)) - 1
+    absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=axis, keepdims=True), 1e-8)
+    scale = absmax / qmax
+    codes = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def weight_quant(w: jax.Array, cfg: PrecisionConfig, axis=0) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch by config.  Returns (int8 codes, float32 per-channel alpha/scale)."""
+    if cfg.w_mode == W_FLOAT:
+        raise ValueError("float weights are not quantized")
+    if cfg.w_mode == W_TERNARY:
+        return ternary_quant(w, axis=axis)
+    if cfg.w_mode == W_BINARY:
+        return binary_quant(w, axis=axis)
+    if cfg.w_mode == W_INT:
+        return int_quant(w, cfg.w_bits, axis=axis)
+    raise ValueError(cfg.w_mode)
+
+
+def weight_fake_quant(w: jax.Array, cfg: PrecisionConfig, axis=0) -> jax.Array:
+    """Quantize->dequantize weights with STE (QAT forward path)."""
+    if cfg.w_mode == W_FLOAT:
+        return w
+    codes, alpha = weight_quant(jax.lax.stop_gradient(w), cfg, axis=axis)
+    wq = codes.astype(w.dtype) * alpha.astype(w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)

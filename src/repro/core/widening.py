@@ -1,0 +1,43 @@
+"""WRPN widening (ref [16], paper §II.A / §IV).
+
+Accuracy lost to low-bit quantization is recovered by widening filter counts.
+For CNNs that is the number of feature maps per conv layer; for the LM
+architectures in this repo it is d_ff (and optionally head count).  Ops grow
+~width^2, which is the denominator of the paper's "Eq TOPS" normalization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def widen_cnn_channels(channels, width_mult: float, keep_first: bool = True,
+                       keep_last: bool = True):
+    """Widen a list of per-layer channel counts.  The paper (following WRPN)
+    keeps the input layer and the classifier at their original width."""
+    out = []
+    n = len(channels)
+    for i, c in enumerate(channels):
+        if (keep_first and i == 0) or (keep_last and i == n - 1):
+            out.append(c)
+        else:
+            out.append(int(round(c * width_mult)))
+    return out
+
+
+def eq_ops_factor(width_mult: float) -> float:
+    """Paper §IV.C: 'for the increase in computation in 2x and 3x wide
+    topologies, we divide the total achievable performance by 4 and 9'."""
+    return float(width_mult) ** 2
+
+
+def widen_config(cfg, width_mult: float):
+    """Widen an LM ModelConfig dataclass: scales d_ff (and MoE expert d_ff).
+    Returns a new config; width_mult=1 is the identity."""
+    if width_mult == 1:
+        return cfg
+    updates = {}
+    if getattr(cfg, "d_ff", 0):
+        updates["d_ff"] = int(cfg.d_ff * width_mult)
+    if getattr(cfg, "moe_d_ff", 0):
+        updates["moe_d_ff"] = int(cfg.moe_d_ff * width_mult)
+    return dataclasses.replace(cfg, **updates)

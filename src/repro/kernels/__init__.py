@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the paper's low-precision processing elements.
+
+packed_matmul    — k-bit packed-weight matmul (unpack-in-VMEM -> int8 MXU)
+ternary_matmul   — 2-bit {-1,0,+1} weights, sign-flip+mux PE analogue
+binary_matmul    — 1x1 XNOR + popcount PE
+act_quant        — fused eq.(4) clip-round quantizer
+decode_attention — flash-decode over an int8-quantized KV cache
+
+Each kernel has a pure-jnp oracle (ref.py / module-level *_ref); tests sweep
+shapes/dtypes in interpret mode and assert_allclose (integer paths match
+exactly).
+"""
+from .ops import (  # noqa: F401
+    PackedWeight,
+    act_quant,
+    act_quant_signed,
+    hbm_bytes,
+    pack_weight,
+    quantized_matmul,
+)
+from .packed_matmul import packed_matmul  # noqa: F401
+from .ternary_matmul import ternary_matmul  # noqa: F401
+from .binary_matmul import binary_matmul  # noqa: F401
+from .decode_attention import decode_attention  # noqa: F401

@@ -1,0 +1,68 @@
+"""Fused activation quantization — paper eq. (4) as a single elementwise pass.
+
+The paper's optimized quantizer is "a clip and round with a multiplication",
+fused into the ReLU at the end of the BNS block.  This kernel produces the
+integer codes that feed the next layer's packed matmul; the /(2^k-1) dequant
+is folded into the next BNS gamma (core.bns.fuse_act_quant_levels), so no
+extra op is spent on it — the paper's "hide the scalar" trick.
+
+Two variants:
+  * unsigned (post-ReLU, eq. 4): codes 0..2^k-1
+  * signed symmetric (transformer activations): codes -(2^{k-1}-1)..2^{k-1}-1
+    with a precomputed per-tensor scale
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_unsigned(x_ref, out_ref, *, bits: int):
+    levels = (1 << bits) - 1
+    x = jnp.clip(x_ref[...].astype(jnp.float32), 0.0, 1.0)
+    out_ref[...] = jnp.floor(x * levels + 0.5).astype(jnp.int8)
+
+
+def _kernel_signed(x_ref, scale_ref, out_ref, *, bits: int):
+    qmax = float((1 << (bits - 1)) - 1)
+    x = x_ref[...].astype(jnp.float32) / scale_ref[0, 0]
+    out_ref[...] = jnp.clip(jnp.round(x), -qmax, qmax).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def act_quant(x, *, bits: int, bm: int = 256, interpret: bool = False):
+    """Unsigned eq.(4) codes.  x: (M, F) float -> (M, F) int8."""
+    m, f = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0
+    return pl.pallas_call(
+        functools.partial(_kernel_unsigned, bits=bits),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, f), jnp.int8),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def act_quant_signed(x, scale, *, bits: int, bm: int = 256,
+                     interpret: bool = False):
+    """Signed symmetric codes with per-tensor scale.  scale: scalar array."""
+    m, f = x.shape
+    bm = min(bm, m)
+    assert m % bm == 0
+    return pl.pallas_call(
+        functools.partial(_kernel_signed, bits=bits),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, f), jnp.int8),
+        interpret=interpret,
+    )(x, scale.reshape(1, 1).astype(jnp.float32))

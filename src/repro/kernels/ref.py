@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must ``assert_allclose`` against them
+(integer paths match EXACTLY, float epilogues to tolerance).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+# ---------------------------------------------------------------------------
+# packed_matmul: x @ unpack(Wt)^T * scale (+ bias)
+# ---------------------------------------------------------------------------
+def packed_matmul_ref(x, wt_packed, scale, bits: int, bias=None, out_dtype=jnp.float32):
+    """Reference for the k-bit packed-weight matmul.
+
+    x         : (M, K)  int8 activation codes OR float activations
+    wt_packed : (N, K // (32/bits)) int32 — W^T packed along K (signed fields)
+    scale     : (N,) float32 per-output-channel dequant scale
+                (weight scale, already folded with act scale where applicable)
+    returns   : (M, N) float
+    """
+    wt = packing.unpack(wt_packed, bits, signed=True)          # (N, K) int8
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc = jnp.dot(x.astype(jnp.int32), wt.T.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+        out = acc.astype(jnp.float32) * scale[None, :]
+    else:
+        acc = jnp.dot(x.astype(jnp.float32), wt.T.astype(jnp.float32))
+        out = acc * scale[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# ternary_matmul: 2-bit {-1,0,+1} weights, the paper's sign-flip + mux PE
+# ---------------------------------------------------------------------------
+def ternary_matmul_ref(x, wt_packed, alpha, bias=None, out_dtype=jnp.float32):
+    """x: (M,K) int8/float; wt_packed: (N, K//16) int32 of 2-bit signed codes
+    in {-1,0,+1}; alpha: (N,) per-feature TWN scale.
+
+    Semantics of the PE: out[m,n] = alpha[n] * sum_k (x[m,k] if w=+1;
+    -x[m,k] if w=-1; 0 if w=0) — i.e. a plain dot with ternary weights."""
+    wt = packing.unpack(wt_packed, 2, signed=True)             # (N, K) in {-1,0,1}
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        pos = jnp.dot(x.astype(jnp.int32), (wt.T == 1).astype(jnp.int32))
+        neg = jnp.dot(x.astype(jnp.int32), (wt.T == -1).astype(jnp.int32))
+        acc = (pos - neg).astype(jnp.float32)
+    else:
+        acc = jnp.dot(x.astype(jnp.float32), wt.T.astype(jnp.float32))
+    out = acc * alpha[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# binary_matmul: XNOR + popcount (paper Fig. 1 right)
+# ---------------------------------------------------------------------------
+def binary_matmul_ref(x_packed, wt_packed, k: int, alpha=None, out_dtype=jnp.float32):
+    """1-bit x 1-bit dot products over +/-1 values stored as {1,0} bits.
+
+    x_packed  : (M, K//32) int32
+    wt_packed : (N, K//32) int32
+    k         : the unpacked reduction length K
+    out[m,n] = sum_k a_k*w_k  (a,w in {-1,+1})  =  K - 2*popcount(a XOR w)
+    """
+    a = packing.unpack_binary_pm1(x_packed).astype(jnp.int32)   # (M, K)
+    w = packing.unpack_binary_pm1(wt_packed).astype(jnp.int32)  # (N, K)
+    acc = jnp.dot(a, w.T).astype(jnp.float32)
+    if alpha is not None:
+        acc = acc * alpha[None, :]
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# act_quant: fused eq.(4) clip-round -> integer codes
+# ---------------------------------------------------------------------------
+def act_quant_ref(x, bits: int):
+    """Paper eq. (4): codes = floor(min(1,x)*(2^k-1)+0.5), input pre-clipped at
+    0 by ReLU (clamped here for totality).  Returns int8 codes."""
+    levels = (1 << bits) - 1
+    return jnp.floor(jnp.clip(x, 0.0, 1.0) * levels + 0.5).astype(jnp.int8)
+
+
+def act_quant_signed_ref(x, bits: int, scale):
+    """Symmetric signed k-bit with a fixed (precomputed) scale."""
+    qmax = (1 << (bits - 1)) - 1
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)

@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: pjit must
+partition every step function over the 16x16 single-pod mesh AND the 2x16x16
+multi-pod mesh.  Per cell we record:
+  * compiled.memory_analysis()  — per-device bytes (does it fit 16 GB HBM)
+  * compiled.cost_analysis()    — per-device FLOPs / bytes for §Roofline
+  * the HLO collective parse    — per-device collective bytes by op kind
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+  python -m repro.launch.dryrun --arch X --shape decode_32k \
+      --precision 2xT --kv-bits 8        # the paper's technique, serving form
+
+Results cached as results/dryrun/<arch>__<shape>__<mesh>__<variant>.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, iter_cells
+from repro.launch.hlo_cost import analyze_hlo_text
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_decode_fn, make_prefill_fn, make_train_step
+from repro.models import build_model, make_batch, to_serving
+from repro.models import transformer as tfm
+from repro.optim import make_optimizer
+from repro.parallel.sharding import (batch_specs, cache_specs, logits_spec,
+                                     param_specs)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# archs whose training state needs FSDP + factored optimizer (DESIGN.md §5)
+FSDP_ARCHS = {"kimi-k2-1t-a32b", "internvl2-76b", "jamba-v0.1-52b"}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5}
+
+_COLL_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device output bytes of collective ops in partitioned HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dtype, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        out[kind] += int(size * nbytes)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def _shardings(mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(cfg, shape, for_training=None):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    return jax.eval_shape(
+        lambda: make_batch(cfg, shape, key=jax.random.PRNGKey(0),
+                           for_training=for_training))
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    fields = ["argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"]
+    out = {}
+    for f in fields:
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if out:
+        out["total_bytes"] = int(
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float)) and
+            ("flops" in k or "bytes" in k or "utilization" not in k and False) or
+            k in ("flops", "transcendentals", "bytes accessed")}
+
+
+def build_cell(arch: str, shape_name: str, mesh, precision: str = "fp32",
+               kv_bits: int = 0, fsdp=None, remat: bool = True,
+               capacity_factor: float = None, grad_compress_bits: int = 0,
+               accum_steps: int = None, kv_seq_shard: bool = False,
+               force_pure_dp: bool = False, quantize_lm_head: bool = False,
+               moe_ep_constraints: str = "",
+               attn_probs_bf16: bool = False, moe_impl: str = ""):
+    """Construct (fn, args, in_shardings, out_shardings) for one cell."""
+    from repro.parallel.sharding import _batch_axes
+
+    shape = SHAPES[shape_name]
+    over = {}
+    if capacity_factor is not None:
+        over["capacity_factor"] = capacity_factor
+    if force_pure_dp:
+        over["force_pure_dp"] = True
+    if quantize_lm_head:
+        over["quantize_lm_head"] = True
+    if moe_ep_constraints:
+        over["moe_ep_constraints"] = moe_ep_constraints
+    if attn_probs_bf16:
+        over["attn_probs_bf16"] = True
+    if moe_impl:
+        over["moe_impl"] = moe_impl
+    cfg = get_config(arch, precision=precision, kv_bits=kv_bits, **over)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    if fsdp is None:
+        fsdp = arch in FSDP_ARCHS
+
+    if shape.mode == "train":
+        opt = make_optimizer("adafactor" if fsdp else "adamw")
+        params_s = jax.eval_shape(model.init, key)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        batch_s = input_specs(cfg, shape, for_training=True)
+        pspecs = param_specs(params_s, cfg, mesh, fsdp=fsdp)
+        ospecs = opt.state_specs(pspecs, params_s)
+        bspecs = batch_specs(batch_s, cfg, mesh)
+        # gradient accumulation default: microbatch so the per-data-shard
+        # batch is ~4 (1 for the FSDP giants); only when the microbatch still
+        # divides the batch-sharding factor
+        if accum_steps is None:
+            baxes = _batch_axes(cfg, mesh, shape.global_batch) or ()
+            nshard = 1
+            for a in baxes:
+                nshard *= mesh.shape[a]
+            per_shard = shape.global_batch // nshard
+            want = per_shard     # microbatch = 1 per data shard
+            accum_steps = 1
+            for cand in range(want, 0, -1):
+                if (shape.global_batch % cand == 0 and
+                        (shape.global_batch // cand) % nshard == 0):
+                    accum_steps = cand
+                    break
+        micro_sh = None
+        if accum_steps > 1:
+            micro_sh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, P(None, *tuple(s))), bspecs,
+                is_leaf=lambda x: isinstance(x, P))
+        step = make_train_step(
+            model, opt, grad_compress_bits=grad_compress_bits,
+            accum_steps=accum_steps,
+            accum_dtype=jnp.bfloat16 if fsdp else jnp.float32,
+            micro_shardings=micro_sh)
+        in_sh = (_shardings(mesh, pspecs), _shardings(mesh, ospecs),
+                 _shardings(mesh, bspecs))
+        out_sh = (in_sh[0], in_sh[1],
+                  _shardings(mesh, {"loss": P(), "grad_norm": P()}))
+        return step, (params_s, opt_s, batch_s), in_sh, out_sh, cfg, (0, 1)
+
+    # ---- serving ----
+    params_s = jax.eval_shape(model.init, key)
+    if precision != "fp32":
+        params_s = jax.eval_shape(
+            lambda p: to_serving(p, cfg, tp=mesh.shape["model"]), params_s)
+    pspecs = param_specs(params_s, cfg, mesh)
+    s_max = shape.seq_len
+
+    if shape.mode == "prefill":
+        batch_s = input_specs(cfg, shape, for_training=False)
+        bspecs = batch_specs(batch_s, cfg, mesh)
+        fn = make_prefill_fn(model, s_max)
+        _, cache_s = jax.eval_shape(fn, params_s, batch_s)
+        cspecs = cache_specs(cache_s, cfg, mesh, shape.global_batch,
+                             kv_seq_shard=kv_seq_shard)
+        in_sh = (_shardings(mesh, pspecs), _shardings(mesh, bspecs))
+        lspec = logits_spec(cfg, mesh, shape.global_batch)
+        out_sh = (NamedSharding(mesh, lspec), _shardings(mesh, cspecs))
+        return fn, (params_s, batch_s), in_sh, out_sh, cfg, ()
+
+    # decode: one new token against a cache of seq_len
+    b = shape.global_batch
+    if cfg.kind == "encdec":
+        # cache struct from prefill trace (cheap eval_shape)
+        prompt = jax.eval_shape(lambda: make_batch(
+            cfg, shape, key=key, for_training=False))
+        fn_p = make_prefill_fn(model, s_max)
+        _, cache_s = jax.eval_shape(fn_p, params_s, prompt)
+        token_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    elif cfg.frontend == "embeds":
+        cache_s = jax.eval_shape(lambda: tfm.make_cache(cfg, b, s_max))
+        token_s = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.float32)
+    else:
+        cache_s = jax.eval_shape(lambda: tfm.make_cache(cfg, b, s_max))
+        token_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cspecs = cache_specs(cache_s, cfg, mesh, b, kv_seq_shard=kv_seq_shard)
+    dx = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    nb = 1
+    for a in dx:
+        nb *= mesh.shape[a]
+    tok_spec = P(dx if b % nb == 0 else None, *(None,) * (len(token_s.shape) - 1))
+    fn = make_decode_fn(model)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    in_sh = (_shardings(mesh, pspecs), NamedSharding(mesh, tok_spec),
+             _shardings(mesh, cspecs), NamedSharding(mesh, P()))
+    lspec = logits_spec(cfg, mesh, b)
+    out_sh = (NamedSharding(mesh, lspec), _shardings(mesh, cspecs))
+    return fn, (params_s, token_s, cache_s, pos_s), in_sh, out_sh, cfg, (2,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             precision: str = "fp32", kv_bits: int = 0, out_dir: str = None,
+             skip_existing: bool = False, verbose: bool = True, **kw):
+    out_dir = out_dir or RESULTS_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    variant = precision + (f"_kv{kv_bits}" if kv_bits else "")
+    for k, v in sorted(kw.items()):
+        if v is not None and v is not False:
+            variant += f"_{k}{v}"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}__{variant}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "precision": precision, "kv_bits": kv_bits, **kw}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, out_sh, cfg, donate = build_cell(
+            arch, shape_name, mesh, precision=precision, kv_bits=kv_bits, **kw)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        rec["memory_analysis"] = _mem_analysis(compiled)
+        rec["cost_analysis"] = _cost_analysis(compiled)
+        hlo_text = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo_text)
+        # trip-count-corrected per-device totals (see hlo_cost.py: raw
+        # cost_analysis counts while bodies once)
+        rec["hlo_corrected"] = analyze_hlo_text(hlo_text)
+        shape = SHAPES[shape_name]
+        n = cfg.n_params
+        na = cfg.n_active_params
+        if shape.mode == "train":
+            tokens = shape.seq_len * shape.global_batch
+            rec["model_flops"] = 6.0 * na * tokens
+        elif shape.mode == "prefill":
+            tokens = shape.seq_len * shape.global_batch
+            rec["model_flops"] = 2.0 * na * tokens
+        else:
+            rec["model_flops"] = 2.0 * na * shape.global_batch
+        rec["n_params"] = int(n)
+        rec["n_active_params"] = int(na)
+        rec["status"] = "ok"
+        if verbose:
+            ma = rec["memory_analysis"] or {}
+            hc = rec["hlo_corrected"]
+            print(f"[ok] {cell_id}: lower {rec['lower_s']}s "
+                  f"compile {rec['compile_s']}s "
+                  f"flops {hc['flops_corrected']:.3e} "
+                  f"bytes {hc['bytes_corrected']:.3e} "
+                  f"coll {hc['collective_bytes_corrected']:.3e}B "
+                  f"mem {ma.get('total_bytes', 0):.3e}B", flush=True)
+            print("  memory_analysis:", ma, flush=True)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[ERR] {cell_id}: {rec['error']}")
+    rec["wall_s"] = round(time.time() - t0, 2)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--precision", default="fp32")
+    ap.add_argument("--kv-bits", type=int, default=0)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        failures = 0
+        for arch, shape, skip in iter_cells():
+            if skip:
+                print(f"[skip] {arch}__{shape.name}: {skip}")
+                continue
+            for mp in ([False, True] if not args.multi_pod else [True]):
+                rec = run_cell(arch, shape.name, multi_pod=mp,
+                               precision=args.precision, kv_bits=args.kv_bits,
+                               out_dir=args.out_dir,
+                               skip_existing=args.skip_existing)
+                failures += rec["status"] != "ok"
+        print(f"done; failures={failures}")
+        raise SystemExit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        run_cell(args.arch, args.shape, multi_pod=mp, precision=args.precision,
+                 kv_bits=args.kv_bits, out_dir=args.out_dir,
+                 skip_existing=args.skip_existing)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb battery — re-lowers the three chosen cells under each
+candidate change and records the roofline terms per variant.
+
+Cells (chosen from the baseline table, see EXPERIMENTS.md §Perf):
+  A kimi-k2-1t-a32b/train_4k    — worst absolute memory+collective terms
+  B granite-moe-1b-a400m/decode_32k — most collective-bound (x > m)
+  C glm4-9b/decode_32k          — most representative of the paper's lever
+                                   (weights/KV are the decode bytes)
+"""
+from repro.launch.dryrun import run_cell
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "results", "hillclimb")
+
+BATTERY = [
+    # --- A: kimi train ---
+    ("kimi-k2-1t-a32b", "train_4k", {}),                       # iter1: slot-map dispatch
+    ("kimi-k2-1t-a32b", "train_4k", {"capacity_factor": 1.0}),
+    ("kimi-k2-1t-a32b", "train_4k", {"capacity_factor": 1.0,
+                                     "grad_compress_bits": 8}),
+    # --- B: granite decode ---
+    ("granite-moe-1b-a400m", "decode_32k", {}),                # iter1: slot-map dispatch
+    ("granite-moe-1b-a400m", "decode_32k", {"force_pure_dp": True}),
+    ("granite-moe-1b-a400m", "decode_32k", {"force_pure_dp": True,
+                                            "precision": "2xT", "kv_bits": 8}),
+    # --- C: glm4 decode ---
+    ("glm4-9b", "decode_32k", {"kv_seq_shard": True}),
+    ("glm4-9b", "decode_32k", {"kv_seq_shard": True, "kv_bits": 8}),
+    ("glm4-9b", "decode_32k", {"kv_seq_shard": True, "kv_bits": 8,
+                               "precision": "2xT"}),
+    ("glm4-9b", "decode_32k", {"kv_seq_shard": True, "kv_bits": 8,
+                               "precision": "2xT", "quantize_lm_head": True}),
+]
+
+
+def main():
+    for arch, shape, kw in BATTERY:
+        prec = kw.pop("precision", "fp32")
+        kvb = kw.pop("kv_bits", 0)
+        run_cell(arch, shape, multi_pod=False, precision=prec, kv_bits=kvb,
+                 out_dir=OUT, skip_existing=True, **kw)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init;
+tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 v5e pod (256 chips) or 2x16x16 (512 chips, 2 pods).
+
+    Axes: 'data' carries DP/FSDP + sequence-parallel long-context KV;
+    'model' carries TP/EP; 'pod' (multi-pod) carries pure DP — gradient
+    all-reduce on the inter-pod DCI link, everything else intra-pod ICI
+    (DESIGN.md §5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(n_data: int, n_model: int, n_pod: int = 1):
+    """Arbitrary mesh for elastic restarts / smaller slices."""
+    if n_pod > 1:
+        return jax.make_mesh((n_pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch (pod joins data when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

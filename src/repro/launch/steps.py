@@ -1,0 +1,88 @@
+"""Step functions — the units that pjit lowers for training and serving.
+
+  make_train_step(model, opt)  -> train_step(params, opt_state, batch)
+  make_prefill_fn(model)       -> prefill(params, batch)       (serving)
+  make_decode_fn(model)        -> decode(params, token, cache, pos)
+
+All pure; the distribution layer decides shardings (parallel.sharding) and
+the launcher/dry-run applies them via jax.jit(in_shardings=..., out_shardings=...).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+
+
+def make_train_step(model: Model, opt, grad_compress_bits: int = 0,
+                    accum_steps: int = 1, accum_dtype=jnp.float32,
+                    micro_shardings=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum_steps``: gradient accumulation — the batch is processed in
+    ``accum_steps`` microbatches under a lax.scan, dividing activation memory
+    by the same factor (the standard production lever for fitting train
+    shapes in HBM).  ``accum_dtype``: the persistent grad accumulator dtype —
+    bf16 for the 1T-param arch (paper-thematic low-bit state).
+
+    ``grad_compress_bits``: optionally quantize gradients to int8 with a
+    per-tensor scale before the update — the paper's bandwidth saving applied
+    to the gradient channel (under DP the all-reduce moves int8,
+    DESIGN.md §5)."""
+
+    def compress(g):
+        if grad_compress_bits == 0:
+            return g
+        qmax = (1 << (grad_compress_bits - 1)) - 1
+        s = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / qmax
+        q = jnp.clip(jnp.round(g / s), -qmax, qmax).astype(jnp.int8)
+        return q.astype(jnp.float32) * s
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if grad_compress_bits:
+            grads = jax.tree_util.tree_map(compress, grads)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            if micro_shardings is not None:
+                # keep the batch dim sharded across the reshape — XLA's
+                # propagation otherwise replicates the microbatches
+                micro = jax.lax.with_sharding_constraint(micro, micro_shardings)
+
+            def body(acc, mb):
+                loss_mb, g = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(a.dtype), acc, g)
+                return acc, loss_mb
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            gsum, losses = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / accum_steps).astype(jnp.float32), gsum)
+            loss = jnp.mean(losses)
+        new_params, new_opt_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_fn(model: Model, s_max: int):
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, s_max)
+    return prefill_fn
+
+
+def make_decode_fn(model: Model):
+    def decode_fn(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+    return decode_fn

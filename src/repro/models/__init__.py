@@ -1,0 +1,95 @@
+"""Model zoo facade.
+
+``build_model(cfg)`` returns a ``Model`` with a uniform functional API across
+decoder-only LMs (incl. hybrid/SSM) and the enc-dec backbone:
+
+    model.init(key)                               -> params
+    model.forward(params, batch)                  -> (logits, aux)   [train]
+    model.prefill(params, batch, s_max)           -> (logits, cache)
+    model.decode_step(params, token, cache, pos)  -> (logits, cache)
+    model.loss(params, batch)                     -> scalar
+
+``batch`` is a dict: {"tokens": (B,S)} for token LMs, {"embeds": (B,S,D)}
+for stub-frontend archs, plus {"frames": (B,S,D)} for enc-dec, and
+{"labels": (B,S)} for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import SHAPES, ModelConfig, ShapeConfig, reduce_for_smoke  # noqa: F401
+from .convert import to_serving  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        v = logits.shape[-1]
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = labels[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll) + 0.01 * aux
+
+
+def _lm_inputs(batch, cfg):
+    return batch["embeds"] if cfg.frontend == "embeds" else batch["tokens"]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.kind == "lm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(key, cfg),
+            forward=lambda p, b, remat=True: transformer.forward(
+                p, _lm_inputs(b, cfg), cfg, remat=remat),
+            prefill=lambda p, b, s_max: transformer.prefill(
+                p, _lm_inputs(b, cfg), cfg, s_max),
+            decode_step=lambda p, tok, cache, pos: transformer.decode_step(
+                p, tok, cache, pos, cfg),
+        )
+    if cfg.kind == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            forward=lambda p, b, remat=True: encdec.forward(
+                p, b["tokens"], b["frames"], cfg, remat=remat),
+            prefill=lambda p, b, s_max: encdec.prefill(
+                p, b["tokens"], b["frames"], cfg, s_max),
+            decode_step=lambda p, tok, cache, pos: encdec.decode_step(
+                p, tok, cache, pos, cfg),
+        )
+    raise ValueError(cfg.kind)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None,
+               batch_override: int = None, for_training: bool = None):
+    """Concrete (or spec-only, see launch.dryrun.input_specs) input batch."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    batch: Dict[str, Any] = {}
+    from .frontends import audio_frames_stub, vision_patches_stub
+    if cfg.kind == "encdec":
+        batch["frames"] = audio_frames_stub(key, b, s, cfg.d_model)
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    elif cfg.frontend == "embeds":
+        batch["embeds"] = vision_patches_stub(key, b, s, cfg.d_model)
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    train = shape.mode == "train" if for_training is None else for_training
+    if train:
+        batch["labels"] = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    return batch

@@ -1,0 +1,203 @@
+"""AlexNet / ResNet with quantized convolutions — the paper's own topologies.
+
+Conv = im2col + the SAME quantization-aware dot path as the LM stack
+(qlinear semantics), followed by a fused BNS block (paper eqs. 1/2: BN +
+scale + alpha folded to one per-feature multiply-add) and eq.(4) activation
+re-quantization — i.e. the paper's §III datapath, end to end:
+
+    PE array (quantized dot) -> BNS -> ReLU -> q(x) -> next layer
+
+Used by the widening/accuracy examples and the paper-table benchmarks; the
+LM architectures are the deployment targets (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bns import BNSParams, apply_bns
+from repro.core.precision import PrecisionConfig, W_FLOAT, get_precision
+from repro.core.quantize import act_fake_quant, weight_fake_quant
+from repro.core.widening import widen_cnn_channels
+
+
+def _im2col(x, r, s, stride, pad):
+    """x: (B,H,W,C) -> patches (B,P,Q,R*S*C)."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    p = (h + 2 * pad - r) // stride + 1
+    q = (w + 2 * pad - s) // stride + 1
+    idx_i = (jnp.arange(p) * stride)[:, None] + jnp.arange(r)[None, :]
+    idx_j = (jnp.arange(q) * stride)[:, None] + jnp.arange(s)[None, :]
+    # gather rows then cols
+    rows = xp[:, idx_i]                    # (B,P,R,Wp,C)
+    cols = rows[:, :, :, idx_j]            # (B,P,R,Q,S,C)
+    patches = cols.transpose(0, 1, 3, 2, 4, 5).reshape(b, p, q, r * s * c)
+    return patches
+
+
+def qconv_init(key, c_in, c_out, r, cfg_dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    fan_in = c_in * r * r
+    w = jax.random.normal(k1, (fan_in, c_out), jnp.float32) * (2.0 / fan_in) ** 0.5
+    bns = BNSParams(gamma=jnp.ones((c_out,), jnp.float32),
+                    beta=jnp.zeros((c_out,), jnp.float32))
+    return {"qw": w, "bns_gamma": bns.gamma, "bns_beta": bns.beta}
+
+
+def qconv_apply(p, x, r, stride, pad, pcfg: PrecisionConfig,
+                quantize_out: bool = True):
+    """Quantized conv + fused BNS + ReLU + eq.(4) requant."""
+    patches = _im2col(x, r, r, stride, pad)
+    w = p["qw"]
+    if pcfg.w_mode != W_FLOAT:
+        w = weight_fake_quant(w, pcfg, axis=0)
+    acc = jnp.einsum("bpqk,kn->bpqn", patches, w)
+    out = apply_bns(acc, BNSParams(p["bns_gamma"], p["bns_beta"]))
+    out = jax.nn.relu(out)
+    if quantize_out:
+        out = act_fake_quant(out, pcfg)
+    return out
+
+
+def _maxpool(x, k, stride):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, stride, stride, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# AlexNet (paper §IV.B topology, WRPN-widenable)
+# ---------------------------------------------------------------------------
+def alexnet_init(key, width_mult: float = 1.0, n_classes: int = 1000,
+                 input_ch: int = 3):
+    chans = widen_cnn_channels([input_ch, 64, 192, 384, 256, 256, n_classes],
+                               width_mult)[1:-1]
+    keys = jax.random.split(key, 8)
+    c_in = [input_ch] + chans[:-1]
+    rs = [11, 5, 3, 3, 3]
+    params = {"conv": [qconv_init(keys[i], c_in[i], chans[i], rs[i])
+                       for i in range(5)]}
+    fc_in = chans[-1] * 6 * 6
+    params["fc1"] = qconv_init(keys[5], fc_in, 4096, 1)
+    params["fc2"] = qconv_init(keys[6], 4096, 4096, 1)
+    params["head"] = {"qw": jax.random.normal(keys[7], (4096, n_classes),
+                                              jnp.float32) * 4096 ** -0.5}
+    return params
+
+
+def alexnet_apply(params, x, precision: str = "fp32"):
+    """x: (B, 224, 224, 3) -> logits (B, n_classes)."""
+    pcfg = get_precision(precision)
+    rs = [11, 5, 3, 3, 3]
+    strides = [4, 1, 1, 1, 1]
+    pads = [2, 2, 1, 1, 1]
+    pools = [True, True, False, False, True]
+    for i in range(5):
+        x = qconv_apply(params["conv"][i], x, rs[i], strides[i], pads[i], pcfg)
+        if pools[i]:
+            x = _maxpool(x, 3, 2)
+    b = x.shape[0]
+    x = x.reshape(b, 1, 1, -1)
+    x = qconv_apply(params["fc1"], x, 1, 1, 0, pcfg)
+    x = qconv_apply(params["fc2"], x, 1, 1, 0, pcfg)
+    # classifier stays full precision (paper/WRPN convention)
+    logits = jnp.dot(x.reshape(b, -1), params["head"]["qw"])
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Tiny CNN of the same family for CPU-scale accuracy experiments
+# ---------------------------------------------------------------------------
+def tinynet_init(key, width_mult: float = 1.0, n_classes: int = 10,
+                 input_ch: int = 1):
+    chans = widen_cnn_channels([input_ch, 16, 32, n_classes], width_mult)[1:-1]
+    keys = jax.random.split(key, 3)
+    params = {"conv": [qconv_init(keys[0], input_ch, chans[0], 3),
+                       qconv_init(keys[1], chans[0], chans[1], 3)],
+              "head": {"qw": jax.random.normal(keys[2],
+                                               (chans[1] * 7 * 7, n_classes),
+                                               jnp.float32) * 0.02}}
+    return params
+
+
+def tinynet_apply(params, x, precision: str = "fp32"):
+    """x: (B, 28, 28, C) -> logits."""
+    pcfg = get_precision(precision)
+    x = qconv_apply(params["conv"][0], x, 3, 1, 1, pcfg)
+    x = _maxpool(x, 2, 2)
+    x = qconv_apply(params["conv"][1], x, 3, 1, 1, pcfg)
+    x = _maxpool(x, 2, 2)
+    return jnp.dot(x.reshape(x.shape[0], -1), params["head"]["qw"])
+
+
+# ---------------------------------------------------------------------------
+# ResNet-34 / ResNet-50 (paper §IV.C projection topologies)
+# ---------------------------------------------------------------------------
+def _resnet_stages(width_mult: float):
+    base = [64, 128, 256, 512]
+    return [int(round(c * width_mult)) for c in base]
+
+
+def resnet_init(key, depth: int = 34, width_mult: float = 1.0,
+                n_classes: int = 1000, input_ch: int = 3):
+    """He et al. [23] configurations; widening multiplies stage channels
+    (WRPN).  depth in {34 (basic blocks), 50 (bottleneck)}."""
+    assert depth in (34, 50)
+    blocks_per_stage = [3, 4, 6, 3]
+    chans = _resnet_stages(width_mult)
+    expansion = 1 if depth == 34 else 4
+    keys = iter(jax.random.split(key, 256))
+    params = {"stem": qconv_init(next(keys), input_ch, chans[0], 7),
+              "stages": []}
+    c_in = chans[0]
+    for stage, (c, n_blocks) in enumerate(zip(chans, blocks_per_stage)):
+        blocks = []
+        for b in range(n_blocks):
+            blk = {}
+            c_out = c * expansion
+            if depth == 34:
+                blk["conv1"] = qconv_init(next(keys), c_in, c, 3)
+                blk["conv2"] = qconv_init(next(keys), c, c, 3)
+            else:
+                blk["conv1"] = qconv_init(next(keys), c_in, c, 1)
+                blk["conv2"] = qconv_init(next(keys), c, c, 3)
+                blk["conv3"] = qconv_init(next(keys), c, c_out, 1)
+            if c_in != c_out or (b == 0 and stage > 0):
+                blk["proj"] = qconv_init(next(keys), c_in, c_out, 1)
+            blocks.append(blk)
+            c_in = c_out
+        params["stages"].append(blocks)
+    params["head"] = {"qw": jax.random.normal(
+        next(keys), (c_in, n_classes), jnp.float32) * c_in ** -0.5}
+    return params
+
+
+def resnet_apply(params, x, depth: int = 34, precision: str = "fp32"):
+    """x: (B, H, W, 3) -> logits.  The paper's datapath per conv:
+    quantized dot -> fused BNS -> ReLU -> eq.(4) requant; residual adds in
+    higher precision (accumulators stay wide, paper §III.A)."""
+    pcfg = get_precision(precision)
+    x = qconv_apply(params["stem"], x, 7, 2, 3, pcfg)
+    x = _maxpool(x, 3, 2)
+    for stage, blocks in enumerate(params["stages"]):
+        for b, blk in enumerate(blocks):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            h = x
+            if depth == 34:
+                h = qconv_apply(blk["conv1"], h, 3, stride, 1, pcfg)
+                h = qconv_apply(blk["conv2"], h, 3, 1, 1, pcfg,
+                                quantize_out=False)
+            else:
+                h = qconv_apply(blk["conv1"], h, 1, stride, 0, pcfg)
+                h = qconv_apply(blk["conv2"], h, 3, 1, 1, pcfg)
+                h = qconv_apply(blk["conv3"], h, 1, 1, 0, pcfg,
+                                quantize_out=False)
+            sc = x
+            if "proj" in blk:
+                sc = qconv_apply(blk["proj"], sc, 1, stride, 0, pcfg,
+                                 quantize_out=False)
+            x = act_fake_quant(jax.nn.relu(h + sc), pcfg) \
+                if pcfg.a_mode != "float" else jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return jnp.dot(x, params["head"]["qw"])

@@ -1,0 +1,100 @@
+"""Train-form -> serving-form parameter conversion.
+
+Walks the param pytree and replaces every qlinear ``{"qw": (K, N)}`` with the
+packed inference form ``{"wt_packed", "scale"}`` (core quantizers + packing),
+and every 3-D MoE expert weight with its per-expert packed form.  This is the
+deployment step of the paper's framework: after it, HBM holds k-bit weights
+and every dot product runs on the integer path with a fused BNS epilogue.
+
+Pack-vs-int8 fallback rule (DESIGN.md §4): the K axis of a matrix is packed
+only if every TP shard's slice is word-aligned — ``K_eff % (32/bits) == 0``
+where K_eff = K/tp when this matrix is K-sharded (wo / w_down / w_out) and
+divisible, else K.  Misaligned cases store int8 codes (still 2-8x smaller
+than bf16).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.precision import PrecisionConfig, W_BINARY, W_FLOAT, W_TERNARY, get_precision
+from repro.core.quantize import weight_quant
+
+from .config import ModelConfig
+
+# matrices whose K (contraction) axis is sharded over the model axis
+_K_SHARDED = ("wo", "w_down", "w_out")
+# moe expert tensors (E, K, N): experts sharded, K unsharded
+_EXPERT = ("w_gate", "w_up", "w_down")
+
+
+def _bits_of(pcfg: PrecisionConfig) -> int:
+    if pcfg.w_mode == W_BINARY:
+        return 1
+    if pcfg.w_mode == W_TERNARY:
+        return 2
+    return pcfg.w_bits
+
+
+def _packable(k: int, bits: int, k_sharded: bool, tp: int) -> bool:
+    cpw = 32 // bits if 32 % bits == 0 else 0
+    if not cpw:
+        return False
+    k_eff = k // tp if (k_sharded and k % tp == 0) else k
+    return k_eff % cpw == 0
+
+
+def _convert_qw(w, pcfg, bits, k_sharded, tp):
+    """w: (..., K, N) — leading dims are scan stacking (periods, experts)."""
+    k = w.shape[-2]
+    codes, scale = weight_quant(w.astype(jnp.float32), pcfg, axis=-2)
+    scale = jnp.squeeze(scale, axis=-2)                # (..., N)
+    ct = jnp.swapaxes(codes, -1, -2)                   # (..., N, K)
+    want_pack = pcfg.pack_weights or pcfg.w_mode == W_BINARY
+    if want_pack and _packable(k, bits, k_sharded, tp):
+        if pcfg.w_mode == W_BINARY:
+            return {"wt_packed": packing.pack((ct > 0).astype(jnp.int8), 1),
+                    "scale": scale}
+        return {"wt_packed": packing.pack(ct, bits), "scale": scale}
+    return {"wt_packed": ct, "scale": scale}           # int8 codes fallback
+
+
+def _convert_expert(w, pcfg, bits, tp):
+    return _convert_qw(w, pcfg, bits, k_sharded=False, tp=tp)
+
+
+def to_serving(params, cfg: ModelConfig, tp: int = 16):
+    """Convert a trained/initialized param pytree to the packed serving form."""
+    pcfg = get_precision(cfg.precision)
+    if pcfg.w_mode == W_FLOAT:
+        return params
+    bits = _bits_of(pcfg)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "qw" in node and path and \
+                    (path[-1] != "lm_head" or cfg.quantize_lm_head):
+                k_sharded = path[-1] in _K_SHARDED
+                out = _convert_qw(node["qw"], pcfg, bits, k_sharded, tp)
+                for extra in node:
+                    if extra != "qw":
+                        out[extra] = node[extra]
+                return out
+            out = {}
+            for key, val in node.items():
+                if (key in _EXPERT and not isinstance(val, dict)
+                        and getattr(val, "ndim", 0) >= 3):
+                    out[key] = _convert_expert(val, pcfg, bits, tp)
+                else:
+                    out[key] = walk(val, path + (key,))
+            return out
+        return node
+
+    return walk(params, ())
+
+
+def serving_param_bytes(params) -> int:
+    """Total parameter bytes in serving form (the paper's memory claim)."""
+    import jax
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "dtype"))

@@ -1,0 +1,32 @@
+"""Stub modality frontends (per the assignment spec).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer BACKBONE only;
+the modality frontend is a STUB whose job is to provide precomputed frame /
+patch embeddings with the right shapes and statistics.  ``input_specs()`` /
+``make_batch()`` route through these so the contract is explicit:
+
+  * audio (whisper): mel frames -> conv-downsampled frame embeddings.  The
+    stub emits unit-variance embeddings of shape (B, S_frames, d_model).
+  * vision (internvl2): ViT patch embeddings, (B, S_patches, d_model).
+
+A real deployment replaces these with the actual conv stem / InternViT; the
+backbone, sharding, caches and kernels are unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frames_stub(key, batch: int, n_frames: int, d_model: int):
+    """Whisper-style frame embeddings (post conv-stem, stride-2 downsample
+    already applied — n_frames is the backbone sequence length)."""
+    return jax.random.normal(key, (batch, n_frames, d_model), jnp.float32)
+
+
+def vision_patches_stub(key, batch: int, n_patches: int, d_model: int):
+    """InternViT-style patch embeddings projected to the LM width."""
+    return jax.random.normal(key, (batch, n_patches, d_model), jnp.float32)
+
+
+STUBS = {"audio_stub": audio_frames_stub, "embeds": vision_patches_stub}

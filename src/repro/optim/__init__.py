@@ -1,0 +1,210 @@
+"""Optimizers (self-contained, optax-style functional API).
+
+  adamw     — baseline.
+  adafactor — factored second moment (rank-1 outer product): O(n+m) state per
+              (n, m) matrix; required posture for the 1T-param arch.
+  adam8bit  — Adam with int8-quantized moments + per-tensor scales: the
+              paper's low-bit storage trick applied to optimizer state
+              (beyond-paper, same mechanism — DESIGN.md §5).
+
+Each optimizer exposes ``init/update`` and ``state_specs(param_specs)`` so the
+distribution layer can shard optimizer state congruently with params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params) -> (new_params, new_state)
+    state_specs: Callable     # param_specs -> state specs
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _clip_by_global_norm(grads, max_norm):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm
+
+    def state_specs(pspecs, params=None):
+        return {"m": pspecs, "v": pspecs, "count": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment by default)
+# ---------------------------------------------------------------------------
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              grad_clip: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vstate(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree_util.tree_map(vstate, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd(g, vs, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * vs["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * vs["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms = (vr[..., None] * vc[..., None, :]) / \
+                    jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                step = g * jax.lax.rsqrt(rms + eps)
+                new_vs = {"vr": vr, "vc": vc}
+            else:
+                v = beta * vs["v"] + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v + eps)
+                new_vs = {"v": v}
+            # update clipping (Adafactor RMS rule)
+            d = jnp.maximum(1.0, jnp.sqrt(jnp.mean(step * step)))
+            step = lr * step / d
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), new_vs
+
+        is_vs = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        out = jax.tree_util.tree_map(upd, grads, state["v"], params,
+                                     is_leaf=lambda x: is_vs(x))
+        istup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup)
+        new_v = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup)
+        return new_params, {"v": new_v, "count": count}, gnorm
+
+    def state_specs(pspecs, params):
+        def vspec(spec, p):
+            spec_t = tuple(spec)
+            spec_t = spec_t + (None,) * (p.ndim - len(spec_t))
+            if _factored(p):
+                return {"vr": P(*spec_t[:-1]),
+                        "vc": P(*spec_t[:-2], spec_t[-1])}
+            return {"v": P(*spec_t)}
+        return {"v": jax.tree_util.tree_map(
+                    vspec, pspecs, params,
+                    is_leaf=lambda x: isinstance(x, P)),
+                "count": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit Adam — int8 moments with per-tensor scales (paper-thematic)
+# ---------------------------------------------------------------------------
+def adam8bit(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+             eps: float = 1e-8, grad_clip: float = 1.0,
+             weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        def q(p):
+            return {"q": jnp.zeros(p.shape, jnp.int8),
+                    "s": jnp.ones((), jnp.float32) * 1e-8}
+        return {"m": jax.tree_util.tree_map(q, params),
+                "v": jax.tree_util.tree_map(q, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def _deq(qs):
+        return qs["q"].astype(jnp.float32) * qs["s"]
+
+    def _q(x):
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+        return {"q": jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8),
+                "s": s}
+
+    def update(grads, state, params):
+        grads, gnorm = _clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, mq, vq, p):
+            g = g.astype(jnp.float32)
+            m = b1 * _deq(mq) + (1 - b1) * g
+            v = b2 * _deq(vq) + (1 - b2) * g * g
+            step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                    _q(m), _q(v))
+
+        isq = lambda x: isinstance(x, dict) and "q" in x
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params,
+                                     is_leaf=isq)
+        istup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istup)
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istup)
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=istup)
+        return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm
+
+    def state_specs(pspecs, params=None):
+        def qspec(spec):
+            return {"q": spec, "s": P()}
+        wrap = lambda: jax.tree_util.tree_map(
+            qspec, pspecs, is_leaf=lambda x: isinstance(x, P))
+        return {"m": wrap(), "v": wrap(), "count": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor, "adam8bit": adam8bit}
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)

@@ -1,0 +1,143 @@
+"""Fault-tolerance runtime — preemption, stragglers, elastic restarts.
+
+Pieces (all host-side; they wrap the pure step functions):
+  * ``PreemptionGuard``  — SIGTERM/SIGINT handler that flips a flag; the
+    train loop checkpoints and exits cleanly at the next step boundary
+    (standard TPU-pod preemption contract).
+  * ``StragglerMonitor`` — per-step wall-time EWMA + deviation; flags steps
+    (and on multi-host, hosts) exceeding mean + k*sigma, and recommends
+    replacement after repeated offenses.  On real pods per-host times come
+    from an all-gather of step times; here the host-local path is exercised.
+  * ``ElasticTrainer``   — the restart driver: resolve latest checkpoint,
+    rebuild the mesh for however many slices are healthy (make_mesh), re-
+    shard state onto it, continue.  Step granularity recovery.
+  * ``retry_with_backoff`` — transient-error wrapper for collectives-adjacent
+    host code (checkpoint IO, coordinator RPCs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, List, Optional
+
+
+class PreemptionGuard:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._old = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for s in self._signals:
+            self._old[s] = signal.signal(s, self._handler)
+        return self
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def __exit__(self, *exc):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+        return False
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    wall_s: float
+    mean_s: float
+    deviation: float
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags outliers > mean + k*std."""
+
+    def __init__(self, alpha: float = 0.1, k: float = 3.0, warmup: int = 5,
+                 replace_after: int = 3):
+        self.alpha = alpha
+        self.k = k
+        self.warmup = warmup
+        self.replace_after = replace_after
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.events: List[StragglerEvent] = []
+        self.consecutive = 0
+
+    def record(self, step: int, wall_s: float) -> Optional[StragglerEvent]:
+        self.n += 1
+        if self.n <= self.warmup:
+            self.mean = wall_s if self.n == 1 else \
+                (self.mean * (self.n - 1) + wall_s) / self.n
+            self.var = max(self.var, (wall_s - self.mean) ** 2)
+            return None
+        std = self.var ** 0.5
+        event = None
+        if wall_s > self.mean + self.k * max(std, 1e-2 * self.mean):
+            event = StragglerEvent(step, wall_s, self.mean,
+                                   (wall_s - self.mean) / max(std, 1e-9))
+            self.events.append(event)
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+        self.mean = (1 - self.alpha) * self.mean + self.alpha * wall_s
+        self.var = (1 - self.alpha) * self.var + \
+            self.alpha * (wall_s - self.mean) ** 2
+        return event
+
+    @property
+    def should_replace(self) -> bool:
+        """Recommend pulling the slow host after repeated offenses."""
+        return self.consecutive >= self.replace_after
+
+
+def retry_with_backoff(fn: Callable, retries: int = 3, base_s: float = 0.1,
+                       exceptions=(OSError, IOError)):
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except exceptions:
+            if attempt == retries:
+                raise
+            time.sleep(base_s * 2 ** attempt)
+
+
+class ElasticTrainer:
+    """Restart driver: checkpoint-resume onto whatever mesh is available.
+
+    ``build`` = (n_data, n_model) -> (mesh, state_like, shardings, step_fn)
+    On each (re)start: restore latest checkpoint (elastic re-shard), run
+    until preempted or done, checkpoint on exit.
+    """
+
+    def __init__(self, ckpt, build: Callable, save_every: int = 50):
+        self.ckpt = ckpt
+        self.build = build
+        self.save_every = save_every
+
+    def run(self, n_steps: int, n_data: int, n_model: int, data_iter,
+            monitor: Optional[StragglerMonitor] = None):
+        mesh, state, shardings, step_fn = self.build(n_data, n_model)
+        start = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state = self.ckpt.restore(latest, state, shardings)
+            if hasattr(data_iter, "load_state_dict"):
+                data_iter.load_state_dict({"step": latest})
+            start = latest
+        metrics_log = []
+        with PreemptionGuard() as guard:
+            for step in range(start, n_steps):
+                t0 = time.time()
+                state, metrics = step_fn(state, next(data_iter))
+                wall = time.time() - t0
+                if monitor is not None:
+                    monitor.record(step, wall)
+                metrics_log.append(metrics)
+                if guard.requested or (step + 1) % self.save_every == 0:
+                    self.ckpt.save(step + 1, state)
+                if guard.requested:
+                    return state, metrics_log, "preempted"
+        self.ckpt.save(n_steps, state)
+        return state, metrics_log, "done"

@@ -1,0 +1,137 @@
+"""Continuous-batching serving scheduler.
+
+Production serving loop around the model's prefill/decode step functions:
+  * a bounded request queue; admission at prefill granularity;
+  * fixed-capacity decode slots (the compiled decode step has a static batch
+    shape — slots are recycled, finished slots admit new requests);
+  * per-slot state: position, remaining budget, EOS detection;
+  * latency accounting per request (queue / prefill / per-token decode).
+
+The scheduler is host-side and model-agnostic: it owns a padded
+(slots, s_max) cache built once and re-used; joins happen by writing a new
+request's prefilled KV into its slot (jax dynamic_update_slice on the batch
+axis).  On a pod the same loop runs with the sharded step functions — the
+cache lives sharded on device (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                 # prompt (1, S_prompt)
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    # filled by the scheduler:
+    submitted_at: float = 0.0
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def queue_ms(self):
+        return (self.started_at - self.submitted_at) * 1e3
+
+    @property
+    def total_ms(self):
+        return (self.finished_at - self.submitted_at) * 1e3
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over single-request prefill +
+    batched decode."""
+
+    def __init__(self, model, params, *, n_slots: int, s_max: int,
+                 prompt_len: int):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.prompt_len = prompt_len
+        cfg = model.cfg
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros(n_slots, np.int32)
+        self.done = np.ones(n_slots, bool)
+
+        from repro.models import transformer as tfm
+        self.cache = tfm.make_cache(cfg, n_slots, s_max)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, s_max))
+        self._decode = jax.jit(
+            lambda p, t, c, pos_vec: model.decode_step(p, t, c, pos_vec))
+        # per-slot cache writer: copy a 1-batch cache into slot i
+        def write_slot(cache, one, i):
+            return jax.tree_util.tree_map(
+                lambda c, o: jax.lax.dynamic_update_slice(
+                    c, o.astype(c.dtype),
+                    (0, i) + (0,) * (c.ndim - 2)), cache, one)
+        self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
+
+    # ---------------------------------------------------------------- admit
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.n_slots):
+            if not self.done[i] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            req.started_at = time.time()
+            batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)}
+            logits, one_cache = self._prefill(self.params, batch)
+            self.cache = self._write_slot(self.cache, one_cache, i)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.output.append(tok)
+            self.tokens = self.tokens.at[i, 0].set(tok)
+            self.pos[i] = req.tokens.shape[1]
+            self.done[i] = False
+            self.slots[i] = req
+
+    # ----------------------------------------------------------------- step
+    def step(self):
+        """One decode step for every active slot; returns finished requests."""
+        self._admit()
+        if all(self.done):
+            return []
+        logits, self.cache = self._decode(self.params, self.tokens, self.cache,
+                                          jnp.asarray(self.pos))
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None or self.done[i]:
+                continue
+            tok = int(toks[i])
+            req.output.append(tok)
+            self.pos[i] += 1
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if len(req.output) >= req.max_new or hit_eos \
+                    or self.pos[i] >= self.s_max - 1:
+                req.finished_at = time.time()
+                finished.append(req)
+                self.done[i] = True
+                self.slots[i] = None
+            else:
+                self.tokens = self.tokens.at[i, 0].set(tok)
+        return finished
+
+    def run(self, max_steps: int = 10_000):
+        """Drain the queue; returns all finished requests."""
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and all(self.done):
+                break
+        return out

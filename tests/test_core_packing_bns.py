@@ -1,0 +1,119 @@
+"""Packing round-trips (exact) and BNS fusion (paper eqs. 1/2) equivalence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.bns import (
+    apply_bns,
+    fold_dequant_into_gamma,
+    fuse_act_quant_levels,
+    fuse_bns,
+    reference_bn_scale,
+)
+from repro.core.widening import eq_ops_factor, widen_cnn_channels
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+def test_pack_unpack_roundtrip_unsigned(bits):
+    rng = np.random.default_rng(bits)
+    n = packing.codes_per_word(bits)
+    codes = rng.integers(0, 1 << bits, size=(3, 4 * n)).astype(np.int8)
+    words = packing.pack(jnp.asarray(codes), bits)
+    assert words.shape == (3, 4)
+    back = packing.unpack(words, bits, signed=False)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_pack_unpack_roundtrip_signed(bits):
+    rng = np.random.default_rng(bits + 10)
+    n = packing.codes_per_word(bits)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    codes = rng.integers(lo, hi + 1, size=(2, 8 * n)).astype(np.int8)
+    words = packing.pack(jnp.asarray(codes), bits)
+    back = packing.unpack(words, bits, signed=True)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+def test_binary_pm1_roundtrip():
+    rng = np.random.default_rng(7)
+    codes = rng.choice([-1, 1], size=(5, 64)).astype(np.int8)
+    words = packing.pack_binary_pm1(jnp.asarray(codes))
+    assert words.shape == (5, 2)  # 64 bits -> 2 int32 words
+    back = packing.unpack_binary_pm1(words)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+@given(bits=st.sampled_from([1, 2, 4, 8]), words=st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_pack_density_property(bits, words):
+    """Property: packed representation uses exactly bits/value of storage."""
+    n = packing.codes_per_word(bits)
+    codes = jnp.zeros((words * n,), jnp.int8)
+    packed = packing.pack(codes, bits)
+    assert packed.size * 32 == codes.size * bits
+
+
+def test_pack_rejects_ragged():
+    with pytest.raises(ValueError):
+        packing.pack(jnp.zeros((7,), jnp.int8), 8)  # 7 not multiple of 4
+    with pytest.raises(ValueError):
+        packing.codes_per_word(3)
+
+
+# ---------------------------------------------------------------------------
+# BNS fusion: fused scale-shift == unfused alpha + BN + scale datapath
+# ---------------------------------------------------------------------------
+def test_bns_fusion_matches_reference():
+    rng = np.random.default_rng(0)
+    F = 32
+    acc = jnp.asarray(rng.normal(size=(16, F)).astype(np.float32) * 10)
+    mean = jnp.asarray(rng.normal(size=(F,)).astype(np.float32))
+    var = jnp.asarray(rng.uniform(0.5, 2.0, size=(F,)).astype(np.float32))
+    scale = jnp.asarray(rng.normal(size=(F,)).astype(np.float32))
+    shift = jnp.asarray(rng.normal(size=(F,)).astype(np.float32))
+    alpha = jnp.asarray(rng.uniform(0.1, 1.0, size=(F,)).astype(np.float32))
+    eps = 1e-5
+
+    ref = reference_bn_scale(acc, mean, var, eps, scale, shift, alpha=alpha)
+    fused = fuse_bns(mean, var, eps, scale, shift, alpha=alpha)
+    out = apply_bns(acc, fused)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_bns_fusion_without_alpha():
+    F = 8
+    rng = np.random.default_rng(1)
+    acc = jnp.asarray(rng.normal(size=(4, F)).astype(np.float32))
+    mean = jnp.zeros((F,)); var = jnp.ones((F,))
+    scale = jnp.full((F,), 2.0); shift = jnp.full((F,), -1.0)
+    fused = fuse_bns(mean, var, 0.0, scale, shift)
+    out = apply_bns(acc, fused)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(acc) * 2.0 - 1.0, rtol=1e-6)
+
+
+def test_fold_dequant_and_act_levels():
+    p = fuse_bns(jnp.zeros(4), jnp.ones(4), 0.0, jnp.ones(4), jnp.zeros(4))
+    p2 = fold_dequant_into_gamma(p, act_scale=0.5, w_scale=jnp.full(4, 4.0))
+    np.testing.assert_allclose(np.asarray(p2.gamma), 2.0)
+    p3 = fuse_act_quant_levels(p2, bits=2)  # /3
+    np.testing.assert_allclose(np.asarray(p3.gamma), 2.0 / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Widening
+# ---------------------------------------------------------------------------
+def test_widen_cnn_channels_keeps_ends():
+    ch = [3, 64, 128, 256, 1000]
+    assert widen_cnn_channels(ch, 2.0) == [3, 128, 256, 512, 1000]
+
+
+def test_eq_ops_factor():
+    assert eq_ops_factor(1) == 1
+    assert eq_ops_factor(2) == 4
+    assert eq_ops_factor(3) == 9

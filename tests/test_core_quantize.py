@@ -1,0 +1,145 @@
+"""Unit + property tests for the core quantization library (paper §III.A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PAPER_CONFIGS,
+    PrecisionConfig,
+    act_fake_quant,
+    act_quant_codes_unsigned,
+    act_quant_codes_signed,
+    binary_quant,
+    int_quant,
+    ternary_quant,
+    weight_fake_quant,
+)
+from repro.core.precision import W_TERNARY, W_BINARY, A_UNSIGNED, A_SIGNED, get_precision
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Paper eq. (3) vs eq. (4): the 'optimized' quantizer must equal the original.
+# ---------------------------------------------------------------------------
+def _eq3(x, bits=2):
+    levels = (1 << bits) - 1
+    return np.floor(np.minimum(np.maximum(0.0, x), 1.0) * levels + 0.5) / levels
+
+
+def test_eq4_matches_eq3_on_relu_output():
+    # after ReLU all inputs are >= 0 — eq (4) == eq (3)
+    x = np.linspace(0.0, 2.0, 1001, dtype=np.float32)
+    codes = np.asarray(act_quant_codes_unsigned(jnp.asarray(x), 2))
+    assert codes.min() >= 0 and codes.max() <= 3
+    np.testing.assert_allclose(codes / 3.0, _eq3(x, 2), atol=1e-6)
+
+
+@given(bits=st.integers(1, 8),
+       xs=st.lists(st.floats(-2, 2, allow_nan=False, width=32), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_unsigned_codes_in_range(bits, xs):
+    x = jnp.asarray(np.maximum(0.0, np.asarray(xs, np.float32)))  # post-ReLU
+    codes = np.asarray(act_quant_codes_unsigned(x, bits))
+    assert codes.min() >= 0
+    assert codes.max() <= (1 << bits) - 1
+
+
+@given(bits=st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_signed_codes_roundtrip_error_bound(bits):
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    codes, scale = act_quant_codes_signed(x, bits)
+    deq = np.asarray(codes, np.float32) * float(scale)
+    qmax = (1 << (bits - 1)) - 1
+    # max error is half a step = scale/2 (values inside range)
+    assert np.max(np.abs(deq - np.asarray(x))) <= float(scale) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Weight quantizers
+# ---------------------------------------------------------------------------
+def test_ternary_codes_and_alpha():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    codes, alpha = ternary_quant(w, axis=0)
+    assert set(np.unique(np.asarray(codes))) <= {-1, 0, 1}
+    assert alpha.shape == (1, 32)
+    assert np.all(np.asarray(alpha) > 0)
+    # TWN: alpha = mean |w| over retained entries
+    c = np.asarray(codes); wa = np.abs(np.asarray(w))
+    for j in range(32):
+        m = c[:, j] != 0
+        if m.any():
+            np.testing.assert_allclose(np.asarray(alpha)[0, j], wa[m, j].mean(), rtol=1e-5)
+
+
+def test_binary_codes_and_alpha():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    codes, alpha = binary_quant(w, axis=0)
+    assert set(np.unique(np.asarray(codes))) <= {-1, 1}
+    np.testing.assert_allclose(np.asarray(alpha)[0], np.abs(np.asarray(w)).mean(0), rtol=1e-5)
+
+
+@given(bits=st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_int_quant_bounds(bits):
+    rng = np.random.default_rng(bits)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    codes, scale = int_quant(w, bits, axis=0)
+    qmax = (1 << (bits - 1)) - 1
+    assert np.asarray(codes).max() <= qmax and np.asarray(codes).min() >= -qmax
+    err = np.abs(np.asarray(codes) * np.asarray(scale) - np.asarray(w))
+    assert np.max(err) <= np.asarray(scale).max() * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# STE: gradients flow through fake-quant
+# ---------------------------------------------------------------------------
+def test_weight_fake_quant_ste_gradient():
+    cfg = get_precision("2xT")
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(8, 4)).astype(np.float32))
+    g = jax.grad(lambda w: jnp.sum(weight_fake_quant(w, cfg) ** 2))(w)
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.any(np.asarray(g) != 0)
+
+
+def test_act_fake_quant_ste_gradient():
+    cfg = get_precision("2xT")
+    x = jnp.asarray(np.linspace(0.1, 0.9, 16, dtype=np.float32))
+    g = jax.grad(lambda x: jnp.sum(act_fake_quant(x, cfg)))(x)
+    # inside [0,1] the STE passes gradient 1 (times d/dx of clip = 1)
+    np.testing.assert_allclose(np.asarray(g), np.ones(16), atol=1e-6)
+
+
+def test_fake_quant_idempotent():
+    cfg = get_precision("4x4")
+    x = jnp.asarray(np.random.default_rng(3).uniform(0, 1, 64).astype(np.float32))
+    q1 = act_fake_quant(x, cfg)
+    q2 = act_fake_quant(q1, cfg)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Precision registry sanity (paper Tables II/IV rows)
+# ---------------------------------------------------------------------------
+def test_paper_config_registry():
+    assert get_precision("2xT").w_mode == W_TERNARY
+    assert get_precision("1x1").w_mode == W_BINARY
+    assert get_precision("fp32").is_float
+    for name, cfg in PAPER_CONFIGS.items():
+        assert cfg.name.replace("f", "fp32") or True  # names render
+        assert cfg.weight_storage_bits <= 16
+    with pytest.raises(KeyError):
+        get_precision("9x9")
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError):
+        PrecisionConfig(w_bits=3, w_mode=W_TERNARY)
+    with pytest.raises(ValueError):
+        PrecisionConfig(w_bits=2, w_mode=W_BINARY)

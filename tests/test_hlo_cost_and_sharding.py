@@ -1,0 +1,191 @@
+"""Unit tests for the trip-count-aware HLO cost parser (synthetic HLO text)
+and hypothesis property tests for the sharding rules."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.hlo_cost import analyze_hlo_text, parse_hlo
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as sh
+
+# ---------------------------------------------------------------------------
+# HLO parser on synthetic modules
+# ---------------------------------------------------------------------------
+SIMPLE = """
+HloModule test
+
+ENTRY %main (a: f32[128,256], b: f32[256,64]) -> f32[128,64] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %b = f32[256,64]{1,0} parameter(1)
+  ROOT %dot.1 = f32[128,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_parser_dot_flops_and_bytes():
+    r = analyze_hlo_text(SIMPLE)
+    assert r["flops_corrected"] == 2 * 128 * 64 * 256
+    # traffic: a + b + out
+    assert r["bytes_corrected"] == (128 * 256 + 256 * 64 + 128 * 64) * 4
+
+
+LOOPED = """
+HloModule test
+
+%body (p: (s32[], f32[16,512])) -> (s32[], f32[16,512]) {
+  %p = (s32[], f32[16,512]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[16,512]{1,0} get-tuple-element(%p), index=1
+  %w = f32[512,512]{1,0} constant({...})
+  %dot.2 = f32[16,512]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[16,512]) tuple(%ip, %dot.2)
+}
+
+%cond (p: (s32[], f32[16,512])) -> pred[] {
+  %p = (s32[], f32[16,512]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(30)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[16,512]) -> f32[16,512] {
+  %x = f32[16,512]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16,512]) tuple(%zero, %x)
+  %while.1 = (s32[], f32[16,512]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"30"}}
+  ROOT %out = f32[16,512]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_parser_multiplies_while_body_by_trip_count():
+    r = analyze_hlo_text(LOOPED)
+    assert r["flops_corrected"] == 30 * 2 * 16 * 512 * 512
+
+
+COLLECTIVE = """
+HloModule test
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  ROOT %out = f32[1024]{0} copy(%ar)
+}
+"""
+
+
+def test_parser_collective_bytes():
+    r = analyze_hlo_text(COLLECTIVE)
+    assert r["collectives_by_kind"]["all-reduce"] == 1024 * 4
+    assert r["collective_op_counts"]["all-reduce"] == 1
+
+
+SLICED_FUSION = """
+HloModule test
+
+%fused_slice (param_0: f32[61,4096,448], param_1: s32[]) -> f32[4096,448] {
+  %param_0 = f32[61,4096,448]{2,1,0} parameter(0)
+  %param_1 = s32[] parameter(1)
+  %zero = s32[] constant(0)
+  %ds = f32[1,4096,448]{2,1,0} dynamic-slice(%param_0, %param_1, %zero, %zero), dynamic_slice_sizes={1,4096,448}
+  ROOT %bc = f32[4096,448]{1,0} bitcast(%ds)
+}
+
+ENTRY %main (stack: f32[61,4096,448], i: s32[]) -> f32[4096,448] {
+  %stack = f32[61,4096,448]{2,1,0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %fusion.1 = f32[4096,448]{1,0} fusion(%stack, %i), kind=kLoop, calls=%fused_slice
+}
+"""
+
+
+def test_parser_discounts_fused_slice_reads():
+    """A fusion slicing ONE layer from a 61-layer stack must charge ~one
+    slice, not the whole stack (the kimi-train analyzer fix)."""
+    r = analyze_hlo_text(SLICED_FUSION)
+    stack_bytes = 61 * 4096 * 448 * 4
+    slice_bytes = 4096 * 448 * 4
+    assert r["bytes_corrected"] < 4 * slice_bytes
+    assert r["bytes_corrected"] < stack_bytes / 10
+
+
+# ---------------------------------------------------------------------------
+# sharding rules — property tests
+# ---------------------------------------------------------------------------
+def _mesh(shape=(4, 4)):
+    devs = np.array(jax.devices() * (shape[0] * shape[1]))[: shape[0] * shape[1]]
+    return Mesh(devs.reshape(shape), ("data", "model"))
+
+
+def _cfg(d_model, n_heads, n_kv, d_ff, vocab, experts=0):
+    return ModelConfig(name="t", n_layers=2, d_model=d_model, n_heads=n_heads,
+                       n_kv_heads=n_kv, d_ff=d_ff, vocab=vocab,
+                       n_experts=experts, top_k=2 if experts else 0,
+                       moe_d_ff=64 if experts else 0,
+                       ffn_pattern=("moe",) if experts else ("dense",))
+
+
+class FakeLeaf:
+    def __init__(self, shape):
+        self.shape = tuple(shape)
+
+
+@given(n_heads=st.sampled_from([4, 6, 8, 9, 12, 16]),
+       n_kv=st.sampled_from([1, 2, 3, 4, 8]),
+       d_ff=st.sampled_from([64, 96, 128, 1536]))
+@settings(max_examples=25, deadline=None)
+def test_param_specs_divisibility_invariant(n_heads, n_kv, d_ff):
+    """Property: every sharded axis size divides the mesh axis size."""
+    mesh = _mesh((4, 4))
+    dh = 32
+    cfg = _cfg(2048, n_heads, min(n_kv, n_heads), d_ff, 4096)
+    params = {
+        "embed": {"w": FakeLeaf((cfg.padded_vocab, cfg.d_model))},
+        "blocks": {"layer_0": {
+            "attn": {"wq": {"qw": FakeLeaf((2, cfg.d_model, n_heads * dh))},
+                     "wk": {"qw": FakeLeaf((2, cfg.d_model, cfg.n_kv_heads * dh))},
+                     "wo": {"qw": FakeLeaf((2, n_heads * dh, cfg.d_model))}},
+            "ffn": {"w_up": {"qw": FakeLeaf((2, cfg.d_model, d_ff))},
+                    "w_down": {"qw": FakeLeaf((2, d_ff, cfg.d_model))}},
+        }},
+        "lm_head": {"qw": FakeLeaf((cfg.d_model, cfg.padded_vocab))},
+    }
+    specs = sh.param_specs(params, cfg, mesh)
+
+    def check(spec_leaf, arr_leaf):
+        for dim, ax in zip(arr_leaf.shape, tuple(spec_leaf)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (arr_leaf.shape, tuple(spec_leaf))
+
+    jax.tree_util.tree_map(check, specs, params,
+                           is_leaf=lambda x: isinstance(x, (P, FakeLeaf)))
+
+
+@given(batch=st.sampled_from([1, 2, 4, 8, 16, 32, 128, 256]))
+@settings(max_examples=10, deadline=None)
+def test_batch_axes_always_divide(batch):
+    mesh = _mesh((4, 4))
+    cfg = _cfg(2048, 8, 4, 128, 4096)
+    axes = sh._batch_axes(cfg, mesh, batch)
+    if axes is not None:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        assert batch % n == 0
+
+
+def test_pure_dp_replicates_everything():
+    mesh = _mesh((4, 4))
+    cfg = _cfg(576, 9, 3, 1536, 49152)   # smollm-like
+    params = {"x": {"qw": FakeLeaf((2, 576, 288))}}
+    specs = sh.param_specs(params, cfg, mesh)
+    assert tuple(specs["x"]["qw"]) == (None, None, None)

@@ -1,0 +1,167 @@
+"""Per-arch smoke tests: reduced same-family config, one forward/train step on
+CPU, asserting output shapes + no NaNs; plus decode-vs-forward consistency
+(validates KV caches, SSM states, and the period-scan)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model, make_batch, reduce_for_smoke, to_serving
+from repro.models.config import ShapeConfig
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, mode="train")
+
+
+def _smoke(arch_id, **over):
+    cfg = reduce_for_smoke(get_config(arch_id))
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    return cfg
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_shapes_no_nans(arch_id):
+    cfg = _smoke(arch_id)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_loss_finite_and_grads(arch_id):
+    cfg = _smoke(arch_id)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in leaves)
+    # at least some gradient is nonzero
+    assert any(np.any(np.asarray(g) != 0) for g in leaves)
+
+
+@pytest.mark.parametrize("arch_id", ["glm4-9b", "falcon-mamba-7b", "jamba-v0.1-52b",
+                                     "gemma2-27b", "granite-moe-1b-a400m",
+                                     "whisper-base"])
+def test_decode_matches_forward(arch_id):
+    """prefill(S) + decode_step(S) logits == forward(S+1) last logits."""
+    cfg = _smoke(arch_id, capacity_factor=8.0)   # no MoE drops for the check
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    s, s_max = 12, 16
+    key = jax.random.PRNGKey(2)
+    full = make_batch(cfg, ShapeConfig("c", s + 1, 2, "train"), key=key)
+    if cfg.kind == "encdec":
+        prompt = {"tokens": full["tokens"][:, :s], "frames": full["frames"]}
+        full_in = {"tokens": full["tokens"], "frames": full["frames"]}
+    elif cfg.frontend == "embeds":
+        prompt = {"embeds": full["embeds"][:, :s]}
+        full_in = {"embeds": full["embeds"]}
+    else:
+        prompt = {"tokens": full["tokens"][:, :s]}
+        full_in = {"tokens": full["tokens"]}
+
+    logits_full, _ = model.forward(params, full_in, remat=False)
+    logits_pre, cache = model.prefill(params, prompt, s_max)
+    # prefill last-position logits == forward at position s-1
+    np.testing.assert_allclose(np.asarray(logits_pre[:, 0]),
+                               np.asarray(logits_full[:, s - 1]),
+                               rtol=2e-2, atol=2e-2)
+    # decode the next token
+    if cfg.kind == "encdec" or cfg.frontend != "embeds":
+        tok = full["tokens"][:, s:s + 1]
+    else:
+        tok = full["embeds"][:, s:s + 1]
+    logits_dec, _ = model.decode_step(params, tok, cache, jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(logits_full[:, s]),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch_id", ["glm4-9b", "granite-moe-1b-a400m"])
+def test_quantized_serving_conversion(arch_id):
+    """2xT serving params: packed storage, finite decode outputs, smaller HBM."""
+    from repro.models.convert import serving_param_bytes
+    cfg = _smoke(arch_id, precision="2xT", kv_bits=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sparams = to_serving(params, cfg, tp=1)
+    assert serving_param_bytes(sparams) < serving_param_bytes(params)
+    prompt = make_batch(cfg, ShapeConfig("c", 8, 2, "prefill"))
+    logits, cache = model.prefill(sparams, prompt, 16)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits2, _ = model.decode_step(sparams, tok, cache, jnp.int32(8))
+    assert np.all(np.isfinite(np.asarray(logits2)))
+
+
+@pytest.mark.parametrize("precision", ["fp32", "8x8", "8xT", "4x4", "2xT", "1x1"])
+def test_qat_forward_all_precisions(precision):
+    """The paper's PE menu as a QAT knob on a small LM."""
+    cfg = _smoke("smollm-135m", precision=precision)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    loss = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_widening_increases_params():
+    from repro.core.widening import widen_config
+    cfg = get_config("smollm-135m")
+    wide = widen_config(cfg, 2.0)
+    assert wide.d_ff == 2 * cfg.d_ff
+    assert wide.n_params > cfg.n_params
+
+
+def test_param_counts_sane():
+    """n_params should be in the advertised ballpark for named sizes."""
+    assert 100e6 < get_config("smollm-135m").n_params < 200e6
+    assert 8e9 < get_config("glm4-9b").n_params < 11e9
+    assert 6.5e9 < get_config("falcon-mamba-7b").n_params < 9e9
+    assert 0.9e12 < get_config("kimi-k2-1t-a32b").n_params < 1.3e12
+    assert 25e9 < get_config("kimi-k2-1t-a32b").n_active_params < 40e9
+    assert 12e9 < get_config("starcoder2-15b").n_params < 18e9
+    assert 24e9 < get_config("gemma2-27b").n_params < 30e9
+
+
+def test_int4_kv_cache_decode():
+    """kv_bits=4: nibble-packed cache halves storage; decode stays sane and
+    approximates the fp cache output."""
+    import repro.models.layers as L
+
+    # pack/unpack round trip exact
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-7, 8, size=(2, 3, 2, 8)).astype(np.int8)
+    packed = L._pack_nibbles(jnp.asarray(codes))
+    assert packed.shape == (2, 3, 2, 4)
+    np.testing.assert_array_equal(np.asarray(L._unpack_nibbles(packed)), codes)
+
+    cfg8 = _smoke("glm4-9b", kv_bits=8)
+    cfg4 = _smoke("glm4-9b", kv_bits=4)
+    model8, model4 = build_model(cfg8), build_model(cfg4)
+    params = model8.init(jax.random.PRNGKey(0))
+    prompt = make_batch(cfg8, ShapeConfig("c", 8, 2, "prefill"))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    outs = {}
+    for name, model in (("kv8", model8), ("kv4", model4)):
+        logits, cache = model.prefill(params, prompt, 16)
+        logits, _ = model.decode_step(params, tok, cache, jnp.int32(8))
+        outs[name] = np.asarray(logits)
+    # int4 cache is half the bytes of int8
+    _, c8 = model8.prefill(params, prompt, 16)
+    _, c4 = model4.prefill(params, prompt, 16)
+    k8 = jax.tree_util.tree_leaves(c8)[0]
+    assert all(np.all(np.isfinite(o)) for o in outs.values())
+    # same model, lossier cache: outputs correlate strongly
+    a, b = outs["kv8"].ravel(), outs["kv4"].ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.98, corr

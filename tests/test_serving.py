@@ -1,0 +1,70 @@
+"""Continuous batching: staggered slot admission produces EXACTLY the same
+greedy generations as isolated sequential runs (per-slot positions, slot
+recycling, latency accounting)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model, reduce_for_smoke
+from repro.runtime.serving import ContinuousBatcher, Request
+
+
+def _setup():
+    cfg = reduce_for_smoke(get_config("smollm-135m"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _sequential_generate(model, params, prompt, max_new, s_max):
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+    logits, cache = model.prefill(params, batch, s_max)
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    pos = prompt.shape[1]
+    for _ in range(max_new - 1):
+        logits, cache = model.decode_step(
+            params, jnp.asarray([[tok]], jnp.int32), cache, jnp.int32(pos))
+        tok = int(jnp.argmax(logits[0, 0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def test_continuous_batching_matches_sequential():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (1, 6 + i)).astype(np.int32)
+               for i in range(5)]          # different lengths -> staggered pos
+    want = [_sequential_generate(model, params, p, 6, 24) for p in prompts]
+
+    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=24,
+                                prompt_len=8)
+    for i, p in enumerate(prompts):
+        batcher.submit(Request(rid=i, tokens=p, max_new=6))
+    done = batcher.run()
+    assert len(done) == 5
+    got = {r.rid: r.output for r in done}
+    for i in range(5):
+        assert got[i] == want[i], (i, got[i], want[i])
+    # latency accounting sane
+    for r in done:
+        assert r.total_ms >= 0 and r.queue_ms >= 0
+
+
+def test_slot_recycling_more_requests_than_slots():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(1)
+    n_req = 7
+    batcher = ContinuousBatcher(model, params, n_slots=3, s_max=16,
+                                prompt_len=4)
+    for i in range(n_req):
+        batcher.submit(Request(rid=i, tokens=rng.integers(
+            0, cfg.vocab, (1, 4)).astype(np.int32), max_new=4))
+    done = batcher.run()
+    assert sorted(r.rid for r in done) == list(range(n_req))
+    assert all(len(r.output) == 4 for r in done)
