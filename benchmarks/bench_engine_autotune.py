@@ -1,0 +1,115 @@
+"""Engine autotuner bench: tuned-vs-default Pallas tile throughput per
+precision config, plus proof that a second run is served entirely from the
+tuning cache (zero re-sweeps).
+
+The tuned tile is the argmin over the sweep *that includes the hand-wired
+default*, so tuned throughput >= default throughput by construction — the
+interesting output is by how much, per precision config (the paper's point
+that each bit-width wants its own hardware configuration).
+
+CSV lines:  engine_autotune_<cfg>,<tuned_us>,<speedup>x_vs_default
+JSON:       BENCH_engine_autotune.json next to this file (override --out).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from repro.core.precision import PAPER_CONFIGS
+from repro.kernels import engine, tuning
+
+# Pallas-tunable configs (packed int32 storage): the XNOR PE, the ternary
+# mux PE, and the generic k-bit unpack-to-MXU PE.  8x8 and 3x3 store
+# unpacked int8 codes (no Pallas tiles) so there is nothing to tune.
+TUNABLE = ["8xT", "4x4", "2x2", "2xT", "1x1"]
+
+# Reduced sweep for CI smoke mode: a handful of MXU-aligned tiles (the
+# default is auto-inserted by tuning.autotune).  Full mode sweeps the whole
+# candidate_blocks grid.
+SMOKE_CANDIDATES = [(32, 128, 128), (64, 128, 256), (128, 128, 512),
+                    (128, 256, 256)]
+
+
+def _tunable_cfgs(names):
+    return [(name, PAPER_CONFIGS[name]) for name in names]
+
+
+def run(precisions=None, m=64, n=256, k=512, iters=2, smoke=True,
+        out_path=None, cache_path=None):
+    if cache_path is not None:
+        os.environ["REPRO_TUNING_CACHE"] = cache_path
+        tuning.reset()
+    cfgs = _tunable_cfgs(precisions or TUNABLE)
+    candidates = SMOKE_CANDIDATES if smoke else None
+
+    results = []
+    for name, cfg in cfgs:
+        entry = engine.autotune_matmul(cfg, m, n, k, backend="pallas",
+                                       candidates=candidates, iters=iters)
+        speedup = entry["default_us"] / max(entry["us"], 1e-9)
+        results.append({
+            "config": name, "m": m, "n": n, "k": k,
+            "block": entry["block"], "tuned_us": entry["us"],
+            "default_us": entry["default_us"], "speedup_vs_default": speedup,
+        })
+        print(f"engine_autotune_{name},{entry['us']:.0f},"
+              f"{speedup:.2f}x_vs_default_block{tuple(entry['block'])}")
+        assert speedup >= 1.0 - 1e-9, (name, entry)
+
+    # second run: drop the in-memory cache, reload the JSON, and re-request
+    # every shape — must be all hits, zero sweeps (serving never re-tunes).
+    tuning.reset()
+    before = tuning.stats()
+    for name, cfg in cfgs:
+        engine.autotune_matmul(cfg, m, n, k, backend="pallas",
+                               candidates=candidates, iters=iters)
+    after = tuning.stats()
+    resweeps = after["sweeps"] - before["sweeps"]
+    hits = after["hits"] - before["hits"]
+    print(f"engine_autotune_cache,0,{resweeps}resweeps_{hits}hits_second_run")
+    assert resweeps == 0, f"tuning cache missed: {resweeps} re-sweeps"
+
+    report = {"shape": {"m": m, "n": n, "k": k}, "smoke": smoke,
+              "results": results,
+              "second_run": {"resweeps": resweeps, "hits": hits},
+              "cache_path": tuning.cache_path()}
+    out_path = out_path or os.path.join(os.path.dirname(__file__),
+                                        "BENCH_engine_autotune.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"engine_autotune_report,0,{out_path}")
+    return report
+
+
+def main(smoke: bool = True):
+    """run.py entry — isolated cache so the bench is hermetic/repeatable."""
+    with tempfile.TemporaryDirectory() as td:
+        old = os.environ.get("REPRO_TUNING_CACHE")
+        try:
+            return run(smoke=smoke,
+                       cache_path=os.path.join(td, "tuning.json"))
+        finally:
+            if old is None:
+                os.environ.pop("REPRO_TUNING_CACHE", None)
+            else:
+                os.environ["REPRO_TUNING_CACHE"] = old
+            tuning.reset()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="sweep the full MXU-aligned candidate grid")
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--k", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--cache", default=None,
+                    help="tuning-cache path (default: REPRO_TUNING_CACHE or "
+                         "~/.cache/repro/tuning.json)")
+    a = ap.parse_args()
+    run(m=a.m, n=a.n, k=a.k, iters=a.iters, smoke=not a.full,
+        out_path=a.out, cache_path=a.cache)

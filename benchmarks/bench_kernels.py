@@ -7,36 +7,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import packing
 from repro.core.precision import PAPER_CONFIGS
-from repro.kernels import binary_matmul, pack_weight, quantized_matmul
-from repro.kernels import ref
+from repro.kernels import pack_weight, qmatmul
 
 
 def kernel_vs_oracle():
+    """Engine dispatch (pallas backend, interpret mode) vs the xla/reference
+    backend across the PE menu — one qmatmul call per config."""
     rng = np.random.default_rng(0)
     m, k, n = 128, 512, 256
     x = jnp.asarray(rng.integers(-127, 128, (m, k)).astype(np.int8))
     out = []
-    for name in ["8xT", "4x4", "2xT", "2x2"]:
+    for name in ["8xT", "4x4", "2xT", "2x2", "1x1"]:
         cfg = PAPER_CONFIGS[name]
         pw = pack_weight(jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)), cfg)
-        want = quantized_matmul(x, pw, use_pallas=False)
+        xc = jnp.asarray(rng.choice([-1, 1], (m, k)).astype(np.int8)) \
+            if name == "1x1" else x
+        want = qmatmul(xc, pw, cfg, backend="xla")
         t0 = time.perf_counter()
-        got = quantized_matmul(x, pw, use_pallas=True, interpret=True,
-                               bm=128, bn=128, bk=512)
+        got = qmatmul(xc, pw, cfg, backend="pallas", interpret=True)
         us = (time.perf_counter() - t0) * 1e6
         err = float(jnp.max(jnp.abs(got - want)))
         out.append((name, us, err))
-    # binary XNOR-popcount
-    a = rng.choice([-1, 1], (m, k)).astype(np.int8)
-    w = rng.choice([-1, 1], (n, k)).astype(np.int8)
-    ap, wp = packing.pack_binary_pm1(jnp.asarray(a)), packing.pack_binary_pm1(jnp.asarray(w))
-    t0 = time.perf_counter()
-    got = binary_matmul(ap, wp, k=k, bm=128, bn=128, interpret=True)
-    us = (time.perf_counter() - t0) * 1e6
-    err = float(jnp.max(jnp.abs(np.asarray(got) - a.astype(np.int32) @ w.T)))
-    out.append(("1x1", us, err))
     return out
 
 

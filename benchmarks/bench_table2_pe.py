@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import pe_model as pm
 from repro.core.precision import PAPER_CONFIGS
-from repro.kernels import pack_weight, quantized_matmul
+from repro.kernels import pack_weight, qmatmul
 
 
 def rows():
@@ -35,7 +35,7 @@ def tpu_rows():
         cfg = PAPER_CONFIGS[name]
         pw = pack_weight(wf, cfg)
         x = x_pm1 if name == "1x1" else x_codes
-        f = lambda: quantized_matmul(x, pw, use_pallas=False)
+        f = lambda: qmatmul(x, pw, cfg, backend="xla")  # noqa: E731
         f()  # compile
         t0 = time.perf_counter()
         for _ in range(3):

@@ -1,8 +1,15 @@
 """Pallas TPU kernels for the paper's low-precision processing elements.
 
-packed_matmul    — k-bit packed-weight matmul (unpack-in-VMEM -> int8 MXU)
-ternary_matmul   — 2-bit {-1,0,+1} weights, sign-flip+mux PE analogue
-binary_matmul    — 1x1 XNOR + popcount PE
+The kernel zoo (packed / ternary / binary matmul) sits behind the
+precision-dispatch engine: a registry keyed on
+``(weight_kind, act_bits, weight_bits, backend)`` with a single entry point
+``qmatmul(x, packed_w, cfg)`` and autotuned Pallas tile sizes
+(:mod:`repro.kernels.tuning`).  The per-kernel modules are implementation
+detail — import them only from their own tests; everything else dispatches
+through the engine:
+
+qmatmul          — THE dispatch point: config -> kernel + tuned tiles
+pack_weight      — float (K, N) weight -> quantized+packed PackedWeight
 act_quant        — fused eq.(4) clip-round quantizer
 decode_attention — flash-decode over an int8-quantized KV cache
 
@@ -10,15 +17,19 @@ Each kernel has a pure-jnp oracle (ref.py / module-level *_ref); tests sweep
 shapes/dtypes in interpret mode and assert_allclose (integer paths match
 exactly).
 """
-from .ops import (  # noqa: F401
+from . import tuning  # noqa: F401
+from .act_quant import act_quant, act_quant_signed  # noqa: F401
+from .decode_attention import decode_attention  # noqa: F401
+from .engine import (  # noqa: F401
     PackedWeight,
-    act_quant,
-    act_quant_signed,
+    as_packed_weight,
+    available_kernels,
+    default_backend,
+    fake_quant_dot,
     hbm_bytes,
     pack_weight,
+    qmatmul,
     quantized_matmul,
+    register_kernel,
+    resolve,
 )
-from .packed_matmul import packed_matmul  # noqa: F401
-from .ternary_matmul import ternary_matmul  # noqa: F401
-from .binary_matmul import binary_matmul  # noqa: F401
-from .decode_attention import decode_attention  # noqa: F401

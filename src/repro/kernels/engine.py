@@ -1,0 +1,484 @@
+"""Unified precision-dispatch kernel engine.
+
+The paper's framework instantiates a *unique logic configuration* per
+(activation x weight) bit-width (§II, Table II); FINN-R argues the framework
+must search that configuration space per workload.  This module is the TPU
+analogue: a kernel **registry** keyed on
+
+    (weight_kind, act_bits, weight_bits, backend)
+
+with one public entry point, :func:`qmatmul`, that
+
+  1. prepares activations for the config (dynamic symmetric quantization,
+     sign-binarization + bit-packing for the 1x1 XNOR path, or float
+     passthrough),
+  2. resolves the kernel implementation from the registry (Pallas kernels on
+     TPU / interpret-mode, pure-jnp reference semantics as the ``xla``
+     backend that XLA fuses well on CPU),
+  3. resolves Pallas block sizes through the autotuner cache
+     (:mod:`repro.kernels.tuning`) — serving never re-tunes, it looks up.
+
+``weight_kind`` is the *storage* kind: "int" / "ternary" / "binary" for
+bit-packed int32 words, "codes" for the unpacked int8 fallback (3-bit,
+TP-misaligned K).  ``act_bits == 0`` means float activations.
+
+Callers (models/layers, models/cnn, runtime, benchmarks) go through
+``qmatmul`` / ``fake_quant_dot`` only; the per-kernel modules are private to
+this engine and their own tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.precision import (
+    A_FLOAT,
+    PrecisionConfig,
+    W_BINARY,
+    W_FLOAT,
+    W_INT,
+    W_TERNARY,
+)
+from repro.core.quantize import weight_fake_quant, weight_quant
+
+from . import ref, tuning
+from .binary_matmul import binary_matmul
+from .packed_matmul import packed_matmul
+from .ternary_matmul import ternary_matmul
+
+BACKEND_PALLAS = "pallas"
+BACKEND_XLA = "xla"
+
+# storage kind for the unpacked int8-codes fallback (3-bit, misaligned K)
+K_CODES = "codes"
+
+
+# ---------------------------------------------------------------------------
+# packed-weight container + packers
+# ---------------------------------------------------------------------------
+class PackedWeight(NamedTuple):
+    """A quantized+packed weight ready for the kernels.
+
+    wt_packed: (N, K*bits/32) int32 (W^T packed along K) — or (N, K) int8 when
+               the config doesn't pack (e.g. 3-bit).
+    scale:     (N,) float32 per-output-channel alpha/dequant scale.
+    bits:      field width (2 for ternary, 1 for binary).
+    mode:      W_INT | W_TERNARY | W_BINARY.
+    k:         unpacked reduction length.
+    """
+    wt_packed: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int
+    mode: str
+    k: int
+
+
+def weight_bits(cfg: PrecisionConfig) -> int:
+    if cfg.w_mode == W_BINARY:
+        return 1
+    if cfg.w_mode == W_TERNARY:
+        return 2
+    return cfg.w_bits
+
+
+def pack_weight(w, cfg: PrecisionConfig) -> PackedWeight:
+    """Quantize a float weight (K, N) per ``cfg`` and pack W^T along K."""
+    k, n = w.shape
+    codes, scale = weight_quant(w, cfg, axis=0)        # codes (K, N), scale (1, N)
+    scale = scale.reshape(n)
+    ct = codes.T                                       # (N, K)
+    if cfg.w_mode == W_BINARY:
+        if k % 32 == 0:
+            return PackedWeight(packing.pack_binary_pm1(ct), scale, 1, W_BINARY, k)
+        return PackedWeight(ct.astype(jnp.int8), scale, 1, W_BINARY, k)
+    bits = weight_bits(cfg)
+    if cfg.pack_weights and 32 % bits == 0 and k % (32 // bits) == 0:
+        return PackedWeight(packing.pack(ct, bits), scale, bits, cfg.w_mode, k)
+    return PackedWeight(ct, scale, bits, cfg.w_mode, k)   # unpacked int8 fallback
+
+
+def as_packed_weight(p: dict, cfg: PrecisionConfig) -> PackedWeight:
+    """View a serving param dict ``{"wt_packed", "scale"}`` (models/convert
+    output) as a :class:`PackedWeight`."""
+    wt = p["wt_packed"]
+    bits = weight_bits(cfg)
+    if wt.dtype == jnp.int32:
+        k = wt.shape[-1] * (32 // bits)
+    else:
+        k = wt.shape[-1]
+    return PackedWeight(wt, p["scale"], bits, cfg.w_mode, k)
+
+
+def storage_kind(pw: PackedWeight) -> str:
+    if pw.wt_packed.dtype != jnp.int32:
+        return K_CODES
+    return pw.mode
+
+
+def hbm_bytes(pw: PackedWeight) -> int:
+    """Weight bytes as resident in HBM — the paper's storage saving, measurable."""
+    return int(np.prod(pw.wt_packed.shape)) * pw.wt_packed.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+KernelKey = Tuple[str, int, int, str]        # (weight_kind, act_bits, weight_bits, backend)
+_REGISTRY: Dict[KernelKey, Callable] = {}
+
+ACT_BITS_RANGE = range(0, 9)                 # 0 == float activations
+
+
+def register_kernel(weight_kind: str, act_bits, w_bits, backend: str):
+    """Decorator registering an implementation for one or more keys.
+
+    ``act_bits`` / ``w_bits`` may be ints or iterables of ints."""
+    a_list = (act_bits,) if isinstance(act_bits, int) else tuple(act_bits)
+    w_list = (w_bits,) if isinstance(w_bits, int) else tuple(w_bits)
+
+    def deco(fn):
+        for a in a_list:
+            for w in w_list:
+                _REGISTRY[(weight_kind, a, w, backend)] = fn
+        return fn
+    return deco
+
+
+def resolve(weight_kind: str, act_bits: int, w_bits: int, backend: str) -> Callable:
+    """Exact key first, then the ``xla`` backend as the universal fallback
+    (e.g. binary weights with multi-bit activations have no Pallas PE)."""
+    for key in ((weight_kind, act_bits, w_bits, backend),
+                (weight_kind, act_bits, w_bits, BACKEND_XLA)):
+        fn = _REGISTRY.get(key)
+        if fn is not None:
+            return fn
+    raise KeyError(
+        f"no kernel for (weight_kind={weight_kind!r}, act_bits={act_bits}, "
+        f"weight_bits={w_bits}, backend={backend!r}); registered: "
+        f"{sorted(set((k[0], k[3]) for k in _REGISTRY))}")
+
+
+def available_kernels() -> Dict[KernelKey, str]:
+    return {k: fn.__name__ for k, fn in sorted(_REGISTRY.items())}
+
+
+def default_backend() -> str:
+    return BACKEND_PALLAS if jax.default_backend() == "tpu" else BACKEND_XLA
+
+
+# ---------------------------------------------------------------------------
+# implementations.  Signature:
+#     fn(x, pw, scale, bias, *, block, out_dtype, interpret) -> (M, N)
+# ``x`` is pre-prepared by qmatmul (codes / float / packed pm1 bits);
+# ``scale`` already folds the dynamic activation scale.
+# ---------------------------------------------------------------------------
+def _pad_rows(x, multiple):
+    m = x.shape[0]
+    pad = (-m) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, m
+
+
+@register_kernel(W_INT, ACT_BITS_RANGE, (2, 4, 8), BACKEND_PALLAS)
+def _int_packed_pallas(x, pw, scale, bias, *, block, out_dtype, interpret):
+    bm, bn, bk = block
+    x_p, m0 = _pad_rows(x, bm)
+    out = packed_matmul(x_p, pw.wt_packed, scale, bias, bits=pw.bits,
+                        bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                        interpret=interpret)
+    return out[:m0]
+
+
+@register_kernel(W_INT, ACT_BITS_RANGE, tuple(range(1, 9)), BACKEND_XLA)
+def _int_packed_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+    return ref.packed_matmul_ref(x, pw.wt_packed, scale, pw.bits,
+                                 bias=bias, out_dtype=out_dtype)
+
+
+@register_kernel(W_TERNARY, ACT_BITS_RANGE, 2, BACKEND_PALLAS)
+def _ternary_pallas(x, pw, scale, bias, *, block, out_dtype, interpret):
+    bm, bn, bk = block
+    x_p, m0 = _pad_rows(x, bm)
+    out = ternary_matmul(x_p, pw.wt_packed, scale, bias=bias,
+                         bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                         interpret=interpret)
+    return out[:m0]
+
+
+@register_kernel(W_TERNARY, ACT_BITS_RANGE, 2, BACKEND_XLA)
+def _ternary_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+    return ref.ternary_matmul_ref(x, pw.wt_packed, scale,
+                                  bias=bias, out_dtype=out_dtype)
+
+
+@register_kernel(W_BINARY, 1, 1, BACKEND_PALLAS)
+def _binary_xnor_pallas(x, pw, scale, bias, *, block, out_dtype, interpret):
+    """x: (M, K/32) int32 pm1 bits.  XNOR + popcount PE."""
+    bm, bn, bk = block
+    bkw = max(bk // 32, 1)
+    x_p, m0 = _pad_rows(x, bm)
+    out = binary_matmul(x_p, pw.wt_packed, alpha=scale, k=pw.k,
+                        bm=bm, bn=bn, bkw=bkw, out_dtype=out_dtype,
+                        interpret=interpret)
+    out = out[:m0]
+    if bias is not None:
+        out = (out + bias[None, :]).astype(out_dtype)
+    return out
+
+
+@register_kernel(W_BINARY, 1, 1, BACKEND_XLA)
+def _binary_xnor_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+    out = ref.binary_matmul_ref(x, pw.wt_packed, pw.k, alpha=scale,
+                                out_dtype=out_dtype)
+    if bias is not None:
+        out = (out + bias[None, :]).astype(out_dtype)
+    return out
+
+
+@register_kernel(W_BINARY, tuple(a for a in range(0, 9) if a != 1), 1, BACKEND_XLA)
+def _binary_dequant_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+    """Binary weights with multi-bit/float activations (8xB): decode pm1
+    codes and run the int/float dot — no XNOR trick applies."""
+    if x.dtype == jnp.int32:                       # pre-packed pm1 activations
+        return _binary_xnor_xla(x, pw, scale, bias, block=block,
+                                out_dtype=out_dtype, interpret=interpret)
+    codes = packing.unpack_binary_pm1(pw.wt_packed)             # (N, K) int8
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc = jax.lax.dot_general(x.astype(jnp.int8), codes,
+                                  dimension_numbers=(((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        out = acc.astype(jnp.float32) * scale[None, :]
+    else:
+        out = jnp.dot(x.astype(jnp.float32),
+                      codes.T.astype(jnp.float32)) * scale[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out.astype(out_dtype)
+
+
+@register_kernel(K_CODES, ACT_BITS_RANGE, tuple(range(1, 9)), BACKEND_XLA)
+def _codes_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+    """Unpacked int8 codes storage (3-bit / TP-misaligned K)."""
+    wt = pw.wt_packed                                           # (N, K) int8
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc = jnp.dot(x.astype(jnp.int32), wt.T.astype(jnp.int32),
+                      preferred_element_type=jnp.int32).astype(jnp.float32)
+    else:
+        acc = jnp.dot(x.astype(jnp.float32), wt.T.astype(jnp.float32))
+    out = acc * scale[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# activation preparation
+# ---------------------------------------------------------------------------
+def _prep_activations(x2, pw: PackedWeight, a_bits: int):
+    """Returns (x_prepped, a_scale or None).  Integer inputs are taken as
+    ready-made codes (the caller owns their scale); float inputs are
+    dynamically quantized per the config (symmetric per-tensor — the decode
+    hot path can't afford a calibration pass).
+
+    Activations are bit-packed for the XNOR kernel only when the weights are
+    packed too (int32 storage): the unaligned-K binary fallback stores int8
+    +/-1 codes, whose sign codes feed the plain integer dot directly."""
+    xnor = pw.mode == W_BINARY and pw.wt_packed.dtype == jnp.int32
+    if jnp.issubdtype(x2.dtype, jnp.integer):
+        if xnor and a_bits == 1 and x2.dtype != jnp.int32:
+            return packing.pack_binary_pm1(x2), None
+        return x2, None
+    if a_bits == 0:
+        return x2, None
+    if a_bits == 1:
+        a_scale = jnp.maximum(jnp.mean(jnp.abs(x2)), 1e-8)
+        xq = jnp.where(x2 >= 0, 1, -1).astype(jnp.int8)
+        if xnor:
+            return packing.pack_binary_pm1(xq), a_scale
+        return xq, a_scale
+    qmax = (1 << (min(a_bits, 8) - 1)) - 1
+    a_scale = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-8) / qmax
+    xq = jnp.clip(jnp.round(x2 / a_scale), -qmax, qmax).astype(jnp.int8)
+    return xq, a_scale
+
+
+# ---------------------------------------------------------------------------
+# the single public dispatch point
+# ---------------------------------------------------------------------------
+def qmatmul(x, pw: PackedWeight, cfg: PrecisionConfig, *, bias=None,
+            out_dtype=jnp.float32, backend: Optional[str] = None,
+            block: Optional[Tuple[int, int, int]] = None,
+            interpret: Optional[bool] = None):
+    """``x @ W`` with quantized/packed ``W`` under ``cfg``.
+
+    x        : (..., K) float activations, int8 codes, or (binary) int32
+               pm1-packed bits.  Leading dims are flattened and restored.
+    pw       : :func:`pack_weight` / :func:`as_packed_weight` output.
+    backend  : "pallas" | "xla"; default picks Pallas on TPU, the jnp
+               reference semantics elsewhere.
+    block    : explicit (bm, bn, bk) override; default consults the tuning
+               cache (cache miss -> clipped default, never a sweep).
+    """
+    if cfg.w_mode == W_FLOAT:
+        raise ValueError("qmatmul needs a quantized-weight config; "
+                         "float weights are a plain jnp.dot")
+    backend = backend or default_backend()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    a_bits = 0 if (cfg.a_mode == A_FLOAT or cfg.a_bits > 8) else cfg.a_bits
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, a_scale = _prep_activations(x2, pw, a_bits)
+
+    scale = pw.scale.reshape(-1).astype(jnp.float32)
+    if a_scale is not None:
+        scale = scale * a_scale
+
+    kind = storage_kind(pw)
+    fn = resolve(kind, a_bits, pw.bits, backend)
+    if block is None and backend == BACKEND_PALLAS and kind != K_CODES:
+        block = tuning.get_block_sizes(
+            x2.shape[0], int(scale.shape[0]), pw.k,
+            kind=kind, a_bits=a_bits, w_bits=pw.bits, backend=backend)
+    elif block is None:
+        block = tuning.DEFAULT_BLOCK       # xla impls ignore tile sizes
+    out = fn(xq, pw, scale, bias, block=tuple(block), out_dtype=out_dtype,
+             interpret=interpret)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def qmatmul_experts(x, p: dict, cfg: PrecisionConfig):
+    """Per-expert serving matmul: x (E, C, K) @ W_e (K, N) with the experts'
+    packed storage ``{"wt_packed": (E, N, KW), "scale": (E, N)}``.
+
+    Experts share one decode+einsum (float path: expert buffers are gathered
+    activations, per-expert dynamic scales would change routing semantics) —
+    kept in the engine so the storage decode lives in exactly one place."""
+    wt = p["wt_packed"]
+    if wt.dtype == jnp.int32:
+        bits = weight_bits(cfg)
+        codes = (packing.unpack_binary_pm1(wt) if cfg.w_mode == W_BINARY
+                 else packing.unpack(wt, bits, signed=True))       # (E, N, K)
+    else:
+        codes = wt                                                 # int8 codes
+    acc = jnp.einsum("eck,enk->ecn", x.astype(jnp.float32),
+                     codes.astype(jnp.float32))
+    return (acc * p["scale"][:, None, :]).astype(x.dtype)
+
+
+def fake_quant_dot(x, w, cfg: PrecisionConfig, *, axis=0):
+    """QAT-form ``x @ fake_quant(w)`` — the train-time counterpart of
+    :func:`qmatmul` (float dot, STE-quantized weights)."""
+    if cfg.w_mode == W_FLOAT:
+        return jnp.dot(x, w.astype(x.dtype))
+    wq = weight_fake_quant(w.astype(jnp.float32), cfg, axis=axis).astype(x.dtype)
+    return jnp.dot(x, wq)
+
+
+# ---------------------------------------------------------------------------
+# legacy entry point (pre-engine signature; tests/benches of the raw kernels)
+# ---------------------------------------------------------------------------
+def quantized_matmul(x, pw: PackedWeight, bias=None, *,
+                     out_dtype=jnp.float32, use_pallas: bool = False,
+                     interpret: bool = True,
+                     bm: int = 128, bn: int = 128, bk: int = 512):
+    """Pre-engine dispatch (kept for compatibility): binary weights always
+    binarize the activations; explicit tile sizes.  New code should call
+    :func:`qmatmul` with a :class:`PrecisionConfig`."""
+    backend = BACKEND_PALLAS if use_pallas else BACKEND_XLA
+    scale = pw.scale.reshape(-1).astype(jnp.float32)
+    if storage_kind(pw) == K_CODES:
+        return _codes_xla(x, pw, scale, bias, block=None,
+                          out_dtype=out_dtype, interpret=interpret)
+    if pw.mode == W_BINARY:
+        a_packed = packing.pack_binary_pm1(x) if x.dtype != jnp.int32 else x
+        fn = resolve(W_BINARY, 1, 1, backend)
+        return fn(a_packed, pw, scale, bias, block=(bm, bn, bk),
+                  out_dtype=out_dtype, interpret=interpret)
+    fn = resolve(pw.mode, 8, pw.bits, backend)
+    return fn(x, pw, scale, bias, block=(bm, bn, bk),
+              out_dtype=out_dtype, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# autotuning entry points
+# ---------------------------------------------------------------------------
+def autotune_matmul(cfg: PrecisionConfig, m: int, n: int, k: int, *,
+                    backend: Optional[str] = None, interpret: Optional[bool] = None,
+                    candidates=None, iters: int = 2, force: bool = False,
+                    seed: int = 0) -> dict:
+    """Sweep Pallas tiles for one (M, N, K, precision) shape class, timing
+    on-device (interpret-mode on CPU), and persist the winner to the tuning
+    cache.  Returns the cache entry (block, us, default_us, swept)."""
+    backend = backend or BACKEND_PALLAS
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    pw = pack_weight(w, cfg)
+    a_bits = 0 if (cfg.a_mode == A_FLOAT or cfg.a_bits > 8) else cfg.a_bits
+    if a_bits == 1 or (cfg.w_mode == W_BINARY and a_bits == 1):
+        x = jnp.asarray(rng.choice([-1, 1], (m, k)).astype(np.int8))
+    elif a_bits == 0:
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    else:
+        qmax = (1 << (a_bits - 1)) - 1
+        x = jnp.asarray(rng.integers(-qmax, qmax + 1, (m, k)).astype(np.int8))
+
+    def measure(block):
+        return tuning.time_fn(
+            lambda: qmatmul(x, pw, cfg, backend=backend, block=block,
+                            interpret=interpret),
+            iters=iters)
+
+    kind = storage_kind(pw)
+    if kind == K_CODES:
+        raise ValueError(f"{cfg.name}: unpacked int8 storage has no Pallas "
+                         "tiles to tune")
+    return tuning.autotune(m, n, k, kind=kind, a_bits=a_bits, w_bits=pw.bits,
+                           backend=backend, measure=measure,
+                           candidates=candidates, force=force)
+
+
+def model_matmul_shapes(model_cfg) -> set:
+    """(N, K) pairs of every qlinear in a transformer-family ModelConfig —
+    the shapes serving will hit (attention projections + FFN)."""
+    shapes = set()
+    d = getattr(model_cfg, "d_model", None)
+    if not d:
+        return shapes
+    h = getattr(model_cfg, "n_heads", 0)
+    kv = getattr(model_cfg, "n_kv_heads", h)
+    dh = getattr(model_cfg, "dh", 0)
+    f = getattr(model_cfg, "d_ff", 0)
+    if h and dh:
+        shapes |= {(h * dh, d), (kv * dh, d), (d, h * dh)}
+    if f:
+        shapes |= {(f, d), (d, f)}
+    return shapes
+
+
+def tune_model_shapes(model_cfg, pcfg: PrecisionConfig, *, m_rows=(8, 128),
+                      backend: Optional[str] = None, candidates=None,
+                      iters: int = 2) -> list:
+    """Pre-tune every (M, N, K) a model's serving path will dispatch, so the
+    serving process itself only ever hits the cache.  Returns the entries."""
+    if pcfg.w_mode == W_FLOAT:
+        return []
+    bits = weight_bits(pcfg)
+    packable = ((pcfg.pack_weights or pcfg.w_mode == W_BINARY)
+                and 32 % bits == 0)
+    out = []
+    for (n, k) in sorted(model_matmul_shapes(model_cfg)):
+        if not packable or k % (32 // bits):
+            continue                       # unpacked storage: nothing to tune
+        for m in m_rows:
+            out.append(autotune_matmul(pcfg, m, n, k, backend=backend,
+                                       candidates=candidates, iters=iters))
+    return out

@@ -1,120 +1,18 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Legacy entry points — thin re-exports of the precision-dispatch engine.
 
-These handle padding to tile multiples, weight pre-packing, and config
-dispatch; ``use_pallas=False`` (or non-TPU backends at runtime) falls back to
-the pure-jnp reference semantics in ref.py, which XLA fuses well on CPU —
-kernels are validated in interpret mode by the test suite.
+Everything that used to live here (config dispatch, padding, weight packing)
+moved to :mod:`repro.kernels.engine`, which adds the kernel registry and the
+autotuned Pallas tile resolution.  This module stays only so old imports
+(``from repro.kernels.ops import quantized_matmul``) keep working; new code
+should use ``engine.qmatmul``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import packing
-from repro.core.precision import PrecisionConfig, W_BINARY, W_INT, W_TERNARY
-from repro.core.quantize import weight_quant
-
-from . import ref
 from .act_quant import act_quant, act_quant_signed  # noqa: F401 (re-export)
-from .binary_matmul import binary_matmul
-from .packed_matmul import packed_matmul
-from .ternary_matmul import ternary_matmul
-
-
-class PackedWeight(NamedTuple):
-    """A quantized+packed weight ready for the kernels.
-
-    wt_packed: (N, K*bits/32) int32 (W^T packed along K) — or (N, K) int8 when
-               the config doesn't pack (e.g. 3-bit).
-    scale:     (N,) float32 per-output-channel alpha/dequant scale.
-    bits:      field width (2 for ternary, 1 for binary).
-    mode:      W_INT | W_TERNARY | W_BINARY.
-    k:         unpacked reduction length.
-    """
-    wt_packed: jnp.ndarray
-    scale: jnp.ndarray
-    bits: int
-    mode: str
-    k: int
-
-
-def pack_weight(w, cfg: PrecisionConfig) -> PackedWeight:
-    """Quantize a float weight (K, N) per ``cfg`` and pack W^T along K."""
-    k, n = w.shape
-    codes, scale = weight_quant(w, cfg, axis=0)        # codes (K, N), scale (1, N)
-    scale = scale.reshape(n)
-    ct = codes.T                                       # (N, K)
-    if cfg.w_mode == W_BINARY:
-        return PackedWeight(packing.pack_binary_pm1(ct), scale, 1, W_BINARY, k)
-    bits = 2 if cfg.w_mode == W_TERNARY else cfg.w_bits
-    if cfg.pack_weights and 32 % bits == 0 and k % (32 // bits) == 0:
-        return PackedWeight(packing.pack(ct, bits), scale, bits, cfg.w_mode, k)
-    return PackedWeight(ct, scale, bits, cfg.w_mode, k)   # unpacked int8 fallback
-
-
-def _pad_rows(x, multiple):
-    m = x.shape[0]
-    pad = (-m) % multiple
-    if pad:
-        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
-    return x, m
-
-
-def quantized_matmul(x, pw: PackedWeight, bias=None, *,
-                     out_dtype=jnp.float32, use_pallas: bool = False,
-                     interpret: bool = True,
-                     bm: int = 128, bn: int = 128, bk: int = 512):
-    """x @ W with quantized/packed W.  x: (M, K) int8 codes or float.
-
-    ``use_pallas`` selects the Pallas kernels (interpret=True on CPU); the
-    default path is the jnp oracle (same math, XLA-fused) used for training
-    and for the dry-run lowering.
-    """
-    if pw.wt_packed.dtype == jnp.int8:                 # unpacked fallback (e.g. 3-bit)
-        wt = pw.wt_packed
-        if jnp.issubdtype(x.dtype, jnp.integer):
-            acc = jnp.dot(x.astype(jnp.int32), wt.T.astype(jnp.int32),
-                          preferred_element_type=jnp.int32).astype(jnp.float32)
-        else:
-            acc = jnp.dot(x.astype(jnp.float32), wt.T.astype(jnp.float32))
-        out = acc * pw.scale[None, :]
-        if bias is not None:
-            out = out + bias[None, :]
-        return out.astype(out_dtype)
-
-    if not use_pallas:
-        if pw.mode == W_BINARY:
-            # oracle needs packed activations
-            a_packed = packing.pack_binary_pm1(x) if x.dtype != jnp.int32 else x
-            return ref.binary_matmul_ref(a_packed, pw.wt_packed, pw.k,
-                                         alpha=pw.scale, out_dtype=out_dtype)
-        if pw.mode == W_TERNARY:
-            return ref.ternary_matmul_ref(x, pw.wt_packed, pw.scale,
-                                          bias=bias, out_dtype=out_dtype)
-        return ref.packed_matmul_ref(x, pw.wt_packed, pw.scale, pw.bits,
-                                     bias=bias, out_dtype=out_dtype)
-
-    # ---- Pallas paths --------------------------------------------------------
-    if pw.mode == W_BINARY:
-        a_packed = packing.pack_binary_pm1(x) if x.dtype != jnp.int32 else x
-        a_packed, m0 = _pad_rows(a_packed, bm)
-        out = binary_matmul(a_packed, pw.wt_packed, alpha=pw.scale, k=pw.k,
-                            bm=bm, bn=bn, out_dtype=out_dtype, interpret=interpret)
-        return out[:m0]
-    x_p, m0 = _pad_rows(x, bm)
-    if pw.mode == W_TERNARY:
-        out = ternary_matmul(x_p, pw.wt_packed, pw.scale, bias=bias,
-                             bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
-                             interpret=interpret)
-    else:
-        out = packed_matmul(x_p, pw.wt_packed, pw.scale, bias=bias, bits=pw.bits,
-                            bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
-                            interpret=interpret)
-    return out[:m0]
-
-
-def hbm_bytes(pw: PackedWeight) -> int:
-    """Weight bytes as resident in HBM — the paper's storage saving, measurable."""
-    return int(np.prod(pw.wt_packed.shape)) * pw.wt_packed.dtype.itemsize
+from .engine import (  # noqa: F401
+    PackedWeight,
+    hbm_bytes,
+    pack_weight,
+    qmatmul,
+    quantized_matmul,
+)

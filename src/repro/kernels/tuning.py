@@ -1,0 +1,248 @@
+"""Pallas block-size autotuner with a persistent JSON cache.
+
+The paper's point (§II, Tables IV/V) is that each (activation x weight)
+bit-width deserves its *own* hardware configuration — FINN-R generalizes this
+to "search the configuration space per workload".  On TPU the per-width
+configuration knob is the Pallas tile: (bm, bn, bk) block sizes trade VMEM
+residency against grid overhead differently for a 1-bit XNOR kernel than for
+an 8-bit unpack-to-MXU kernel.  This module owns that search:
+
+  * ``candidate_blocks`` enumerates MXU-aligned tiles valid for a given
+    (M, N, K, weight_kind, w_bits) — the pack word imposes ``bk % (32/bits)``
+    and the XNOR kernel counts K in 32-bit words;
+  * ``autotune`` times a caller-supplied ``measure(block)`` over the
+    candidates (interpret-mode on CPU, compiled on TPU) and records the
+    winner;
+  * winners persist to a JSON cache (``~/.cache/repro/tuning.json``,
+    override with ``REPRO_TUNING_CACHE``) keyed by shape class, so serving
+    processes only ever *look up* — they never re-sweep.
+
+``get_block_sizes`` is the hot-path entry: cache hit returns the tuned tile,
+miss returns a safe clipped default (and counts a miss — it does NOT sweep;
+sweeping is an explicit, offline act).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+Block = Tuple[int, int, int]
+
+DEFAULT_BLOCK: Block = (128, 128, 512)
+
+# In-memory cache state.  ``_cache is None`` means "not loaded yet"; loading
+# is lazy so importing the engine never touches the filesystem.
+_cache: Optional[Dict[str, dict]] = None
+_cache_src: Optional[str] = None
+
+_STATS = {"hits": 0, "misses": 0, "sweeps": 0}
+
+
+# ---------------------------------------------------------------------------
+# cache file handling
+# ---------------------------------------------------------------------------
+def cache_path() -> str:
+    """Tuning-cache location; override with ``REPRO_TUNING_CACHE``."""
+    env = os.environ.get("REPRO_TUNING_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "tuning.json")
+
+
+def _load() -> Dict[str, dict]:
+    global _cache, _cache_src
+    path = cache_path()
+    if _cache is not None and _cache_src == path:
+        return _cache
+    entries: Dict[str, dict] = {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if isinstance(data, dict):
+            entries = data.get("entries", {})
+    except (OSError, ValueError):
+        entries = {}
+    _cache, _cache_src = entries, path
+    return _cache
+
+
+def _save() -> None:
+    path = cache_path()
+    try:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": _load()}, f, indent=1,
+                      sort_keys=True)
+        os.replace(tmp, path)
+    except OSError as e:
+        # unwritable cache: tuned tiles still serve from memory this process;
+        # they just won't persist for the next one
+        warnings.warn(f"tuning cache not persisted to {path}: {e}",
+                      RuntimeWarning, stacklevel=2)
+
+
+def reset(clear_stats: bool = True) -> None:
+    """Drop the in-memory cache (tests; forces re-read of the JSON file)."""
+    global _cache, _cache_src
+    _cache, _cache_src = None, None
+    if clear_stats:
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+def stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+# ---------------------------------------------------------------------------
+# shape classes and candidate tiles
+# ---------------------------------------------------------------------------
+def _pow2_bucket(m: int, cap: int = 1024) -> int:
+    b = 8
+    while b < m and b < cap:
+        b *= 2
+    return b
+
+
+def shape_class(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """(N, K) are structural (layer dims); M varies per batch — bucket it to
+    the next power of two so prefill/decode of nearby batch sizes share a
+    tuning entry."""
+    return (_pow2_bucket(m), n, k)
+
+
+def cache_key(kind: str, a_bits: int, w_bits: int, backend: str,
+              m: int, n: int, k: int) -> str:
+    mb, nn, kk = shape_class(m, n, k)
+    return f"{backend}|{kind}|a{a_bits}w{w_bits}|m{mb}n{nn}k{kk}"
+
+
+def _bk_align(kind: str, w_bits: int) -> int:
+    """bk must cover whole pack words: 32/bits codes per int32 word."""
+    if kind == "binary":
+        return 32
+    if kind == "ternary":
+        return 16
+    if 32 % max(w_bits, 1) == 0:
+        return 32 // w_bits
+    return 1
+
+
+def _valid_block(m: int, n: int, k: int, kind: str, w_bits: int,
+                 block: Block) -> bool:
+    bm, bn, bk = block
+    align = _bk_align(kind, w_bits)
+    return (bn <= n and n % bn == 0
+            and bk <= k and k % bk == 0 and bk % align == 0
+            and bm <= max(256, _pow2_bucket(m)))
+
+
+def fallback_block(m: int, n: int, k: int, kind: str, w_bits: int) -> Block:
+    """The hand-wired default (what ops.py used to hard-code), clipped so it
+    is valid for this shape."""
+    bm, bn, bk = DEFAULT_BLOCK
+    bm = min(bm, _pow2_bucket(m))
+    if n % bn or bn > n:
+        bn = n
+    align = _bk_align(kind, w_bits)
+    bk = min(bk, k)
+    while bk > align and (k % bk or bk % align):
+        bk //= 2
+    if k % bk or bk % align:
+        bk = k
+    return (bm, bn, bk)
+
+
+def candidate_blocks(m: int, n: int, k: int, kind: str, w_bits: int,
+                     ) -> List[Block]:
+    """MXU-aligned sweep grid; always contains the clipped default."""
+    cands = []
+    for bm in (8, 16, 32, 64, 128, 256):
+        for bn in (128, 256, 512):
+            for bk in (128, 256, 512, 1024):
+                b = (bm, bn, bk)
+                if _valid_block(m, n, k, kind, w_bits, b):
+                    cands.append(b)
+    fb = fallback_block(m, n, k, kind, w_bits)
+    if fb not in cands:
+        cands.insert(0, fb)
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# lookup (hot path) and sweep (explicit/offline)
+# ---------------------------------------------------------------------------
+def get_block_sizes(m: int, n: int, k: int, *, kind: str, a_bits: int,
+                    w_bits: int, backend: str = "pallas") -> Block:
+    """Cache lookup only — never sweeps.  Miss returns the clipped default
+    so serving latency is deterministic even with a cold cache."""
+    cache = _load()
+    key = cache_key(kind, a_bits, w_bits, backend, m, n, k)
+    entry = cache.get(key)
+    if entry is not None:
+        b = tuple(entry["block"])
+        if _valid_block(m, n, k, kind, w_bits, b):
+            _STATS["hits"] += 1
+            return b  # type: ignore[return-value]
+        # stale/foreign entry (e.g. hand-edited cache): evict so an explicit
+        # autotune can re-sweep instead of being shadowed forever
+        cache.pop(key, None)
+    _STATS["misses"] += 1
+    return fallback_block(m, n, k, kind, w_bits)
+
+
+def autotune(m: int, n: int, k: int, *, kind: str, a_bits: int, w_bits: int,
+             backend: str, measure: Callable[[Block], float],
+             candidates: Optional[Sequence[Block]] = None,
+             force: bool = False, persist: bool = True) -> dict:
+    """Sweep ``candidates`` (default: :func:`candidate_blocks`) with the
+    caller's ``measure(block) -> seconds`` and persist the winner.
+
+    Returns the cache entry ``{"block", "us", "default_us", "swept"}``.
+    A pre-existing entry short-circuits (zero re-sweeps) unless ``force``.
+    """
+    key = cache_key(kind, a_bits, w_bits, backend, m, n, k)
+    cache = _load()
+    if key in cache and not force:
+        _STATS["hits"] += 1
+        return cache[key]
+
+    cands = list(candidates) if candidates is not None else \
+        candidate_blocks(m, n, k, kind, w_bits)
+    default = fallback_block(m, n, k, kind, w_bits)
+    if default not in cands:
+        cands.insert(0, default)
+
+    swept = []
+    for block in cands:
+        secs = measure(block)
+        swept.append({"block": list(block), "us": secs * 1e6})
+    _STATS["sweeps"] += 1
+    best = min(swept, key=lambda e: e["us"])
+    default_us = next(e["us"] for e in swept
+                      if tuple(e["block"]) == default)
+    entry = {"block": best["block"], "us": best["us"],
+             "default_us": default_us, "swept": swept}
+    cache[key] = entry
+    if persist:
+        _save()
+    return entry
+
+
+def time_fn(fn: Callable[[], object], iters: int = 3) -> float:
+    """Median wall-clock seconds of ``fn`` after one warmup (compile) call."""
+    import jax
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

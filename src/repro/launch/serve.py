@@ -36,11 +36,24 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pre-tune Pallas tiles for this model's matmul "
+                         "shapes (persists to the tuning cache; serving "
+                         "then never re-tunes)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, precision=args.precision, kv_bits=args.kv_bits)
     if args.reduced:
         cfg = reduce_for_smoke(cfg)
+    if args.autotune:
+        from repro.core.precision import get_precision, signed
+        from repro.kernels import engine, tuning
+        entries = engine.tune_model_shapes(
+            cfg, signed(get_precision(args.precision)),
+            m_rows=(args.requests, args.requests * args.prompt_len))
+        print(f"autotune: {len(entries)} shape classes -> "
+              f"{tuning.cache_path()} (sweeps this run: "
+              f"{tuning.stats()['sweeps']})")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     base_bytes = serving_param_bytes(params)

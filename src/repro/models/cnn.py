@@ -18,8 +18,9 @@ import numpy as np
 
 from repro.core.bns import BNSParams, apply_bns
 from repro.core.precision import PrecisionConfig, W_FLOAT, get_precision
-from repro.core.quantize import act_fake_quant, weight_fake_quant
+from repro.core.quantize import act_fake_quant
 from repro.core.widening import widen_cnn_channels
+from repro.kernels import engine
 
 
 def _im2col(x, r, s, stride, pad):
@@ -48,12 +49,20 @@ def qconv_init(key, c_in, c_out, r, cfg_dtype=jnp.float32):
 
 def qconv_apply(p, x, r, stride, pad, pcfg: PrecisionConfig,
                 quantize_out: bool = True):
-    """Quantized conv + fused BNS + ReLU + eq.(4) requant."""
+    """Quantized conv + fused BNS + ReLU + eq.(4) requant.
+
+    Both param forms dispatch through the precision engine: QAT ``{"qw"}``
+    runs the fake-quant float dot, packed serving ``{"wt_packed","scale"}``
+    runs the registry kernel for the config (int MXU / XNOR paths)."""
     patches = _im2col(x, r, r, stride, pad)
-    w = p["qw"]
-    if pcfg.w_mode != W_FLOAT:
-        w = weight_fake_quant(w, pcfg, axis=0)
-    acc = jnp.einsum("bpqk,kn->bpqn", patches, w)
+    b, pp, qq, kdim = patches.shape
+    p2 = patches.reshape(-1, kdim)
+    if "wt_packed" in p:
+        pw = engine.as_packed_weight(p, pcfg)
+        acc = engine.qmatmul(p2, pw, pcfg)
+    else:
+        acc = engine.fake_quant_dot(p2, p["qw"], pcfg, axis=0)
+    acc = acc.reshape(b, pp, qq, -1)
     out = apply_bns(acc, BNSParams(p["bns_gamma"], p["bns_beta"]))
     out = jax.nn.relu(out)
     if quantize_out:
@@ -129,6 +138,32 @@ def tinynet_apply(params, x, precision: str = "fp32"):
     x = qconv_apply(params["conv"][1], x, 3, 1, 1, pcfg)
     x = _maxpool(x, 2, 2)
     return jnp.dot(x.reshape(x.shape[0], -1), params["head"]["qw"])
+
+
+# ---------------------------------------------------------------------------
+# train-form -> packed serving form (engine PackedWeight per conv)
+# ---------------------------------------------------------------------------
+def cnn_to_serving(params, precision: str):
+    """Replace every conv/fc ``{"qw"}`` (BNS layers only — the classifier
+    head stays full precision, WRPN convention) with the engine's packed
+    serving form; ``qconv_apply`` then dispatches the integer kernels."""
+    pcfg = get_precision(precision)
+    if pcfg.w_mode == W_FLOAT:
+        return params
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "qw" in node and "bns_gamma" in node:
+                pw = engine.pack_weight(node["qw"].astype(jnp.float32), pcfg)
+                out = {"wt_packed": pw.wt_packed, "scale": pw.scale}
+                out.update({k: v for k, v in node.items() if k != "qw"})
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return node
+
+    return walk(params)
 
 
 # ---------------------------------------------------------------------------

@@ -20,17 +20,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
 from repro.core.precision import (
     A_FLOAT,
     PrecisionConfig,
-    W_BINARY,
     W_FLOAT,
-    W_TERNARY,
     get_precision,
     signed,
 )
 from repro.core.quantize import act_fake_quant, weight_fake_quant
+from repro.kernels import engine
 
 from .config import ModelConfig
 
@@ -49,36 +47,12 @@ def qlinear_init(key, k: int, n: int, cfg: ModelConfig, scale: float = None):
 
 
 def _serve_matmul(p, x, pcfg: PrecisionConfig):
-    """Quantized-serving matmul, oracle semantics (jnp; XLA lowers the unpack
-    + int dot; on real TPU the Pallas kernels take this role)."""
-    wt = p["wt_packed"]
-    kdim = x.shape[-1]
-    x2 = x.reshape(-1, kdim)
-    if wt.dtype == jnp.int32:
-        bits = 1 if pcfg.w_mode == W_BINARY else (2 if pcfg.w_mode == W_TERNARY
-                                                  else pcfg.w_bits)
-        codes = (packing.unpack_binary_pm1(wt) if pcfg.w_mode == W_BINARY
-                 else packing.unpack(wt, bits, signed=True))       # (N, K)
-    else:
-        codes = wt                                                  # int8 codes
-    scale = p["scale"]
-    if pcfg.a_mode == A_FLOAT or pcfg.a_bits > 8:
-        acc = jnp.dot(x2.astype(jnp.float32), codes.T.astype(jnp.float32))
-        out = acc * scale[None, :]
-    else:
-        # dynamic symmetric per-tensor activation quant -> int8 MXU dot
-        qmax = (1 << (min(pcfg.a_bits, 8) - 1)) - 1
-        if pcfg.a_bits == 1:
-            a_scale = jnp.maximum(jnp.mean(jnp.abs(x2)), 1e-8)
-            xq = jnp.where(x2 >= 0, 1, -1).astype(jnp.int8)
-        else:
-            a_scale = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-8) / qmax
-            xq = jnp.clip(jnp.round(x2 / a_scale), -qmax, qmax).astype(jnp.int8)
-        acc = jax.lax.dot_general(xq, codes,
-                                  dimension_numbers=(((1,), (1,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
-        out = acc.astype(jnp.float32) * (scale[None, :] * a_scale)
-    return out.reshape(*x.shape[:-1], codes.shape[0])
+    """Quantized-serving matmul via the precision-dispatch engine: the
+    registry picks the kernel (jnp reference semantics on CPU, Pallas with
+    autotuned tiles on TPU) and handles the dynamic symmetric per-tensor
+    activation quantization for the integer MXU path."""
+    pw = engine.as_packed_weight(p, pcfg)
+    return engine.qmatmul(x, pw, pcfg)
 
 
 def qlinear_apply(p, x, cfg: ModelConfig, quantize_acts: bool = True):
@@ -89,10 +63,9 @@ def qlinear_apply(p, x, cfg: ModelConfig, quantize_acts: bool = True):
     w = p["qw"]
     if pcfg.w_mode == W_FLOAT:
         return jnp.dot(x, w.astype(x.dtype))
-    wq = weight_fake_quant(w.astype(jnp.float32), pcfg, axis=0).astype(x.dtype)
     if quantize_acts and pcfg.a_mode != A_FLOAT:
         x = act_fake_quant(x.astype(jnp.float32), pcfg).astype(x.dtype)
-    return jnp.dot(x, wq)
+    return engine.fake_quant_dot(x, w, pcfg, axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -405,17 +378,7 @@ def _expert_matmul(w, x, cfg: ModelConfig):
     (expert weights are the paper's biggest storage win — see DESIGN §4)."""
     pcfg = signed(get_precision(cfg.precision))
     if isinstance(w, dict):                            # serving: packed per expert
-        wt = w["wt_packed"]                            # (E, N, KW)
-        if wt.dtype == jnp.int32:
-            bits = 1 if pcfg.w_mode == W_BINARY else (2 if pcfg.w_mode == W_TERNARY
-                                                      else pcfg.w_bits)
-            codes = (packing.unpack_binary_pm1(wt) if pcfg.w_mode == W_BINARY
-                     else packing.unpack(wt, bits, signed=True))
-        else:
-            codes = wt
-        acc = jnp.einsum("eck,enk->ecn", x.astype(jnp.float32),
-                         codes.astype(jnp.float32))
-        return (acc * w["scale"][:, None, :]).astype(x.dtype)
+        return engine.qmatmul_experts(x, w, pcfg)
     if pcfg.w_mode != W_FLOAT:
         w = weight_fake_quant(w.astype(jnp.float32), pcfg, axis=1).astype(x.dtype)
     return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))

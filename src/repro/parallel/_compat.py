@@ -1,0 +1,26 @@
+"""Version compatibility for shard_map.
+
+Newer jax exposes ``jax.shard_map`` (replication check kwarg ``check_vma``);
+the pinned toolchain has ``jax.experimental.shard_map.shard_map`` with the
+older ``check_rep`` spelling.  Present one signature to the codebase.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` is newer than the pinned jax; ``psum(1, axis)``
+    constant-folds to the same static size on the old API."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

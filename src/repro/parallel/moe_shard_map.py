@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel._compat import axis_size, shard_map
+
 from repro.models.config import ModelConfig
 from repro.models.layers import _act, _expert_matmul, rmsnorm
 
@@ -38,7 +40,7 @@ def _local_moe(p, x, cfg: ModelConfig, *, data_axis: str, model_axis: str):
     t = b * s
     e = cfg.n_experts
     k = cfg.top_k
-    n_model = jax.lax.axis_size(model_axis)
+    n_model = axis_size(model_axis)
     e_loc = e // n_model
     j = jax.lax.axis_index(model_axis)
     cap = int(t * k / e * cfg.capacity_factor) or 1     # per-group capacity
@@ -101,7 +103,7 @@ def moe_apply_shard_map(p, x, cfg: ModelConfig, mesh, *,
     }
     fn = functools.partial(_local_moe, cfg=cfg, data_axis=data_axis,
                            model_axis=model_axis)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(pspecs, P(data_axis, None, None)),
         out_specs=(P(data_axis, None, None), P()),

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel._compat import shard_map
+
 from repro.models.config import ModelConfig
 from repro.models.transformer import _apply_period
 
@@ -90,7 +92,7 @@ def pipeline_blocks(blocks, x, cfg: ModelConfig, mesh, *, axis: str = "pod",
     spec_blocks = jax.tree_util.tree_map(
         lambda _: P(axis), staged,
         is_leaf=lambda v: hasattr(v, "shape"))
-    out = jax.shard_map(
+    out = shard_map(
         stage_fn, mesh=mesh,
         in_specs=(spec_blocks, P()),
         out_specs=P(axis),                        # each stage returns a copy;

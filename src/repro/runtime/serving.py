@@ -51,13 +51,22 @@ class ContinuousBatcher:
     batched decode."""
 
     def __init__(self, model, params, *, n_slots: int, s_max: int,
-                 prompt_len: int):
+                 prompt_len: int, autotune: bool = False):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.s_max = s_max
         self.prompt_len = prompt_len
         cfg = model.cfg
+        if autotune:
+            # Pre-tune the Pallas tiles for every matmul shape this model's
+            # prefill/decode will dispatch, so the serving loop itself only
+            # ever *hits* the tuning cache (never sweeps mid-request).
+            from repro.core.precision import get_precision, signed
+            from repro.kernels import engine
+            engine.tune_model_shapes(
+                cfg, signed(get_precision(cfg.precision)),
+                m_rows=(n_slots, n_slots * prompt_len))
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)

@@ -13,13 +13,15 @@ from repro.core.precision import get_precision, PrecisionConfig, W_INT, W_TERNAR
 from repro.kernels import (
     act_quant,
     act_quant_signed,
-    binary_matmul,
     pack_weight,
-    packed_matmul,
     quantized_matmul,
-    ternary_matmul,
 )
 from repro.kernels import ref
+# the raw kernels are private to the engine; only their own tests (here) and
+# the oracles may import them directly
+from repro.kernels.binary_matmul import binary_matmul
+from repro.kernels.packed_matmul import packed_matmul
+from repro.kernels.ternary_matmul import ternary_matmul
 
 RNG = np.random.default_rng(42)
 
