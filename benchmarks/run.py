@@ -15,9 +15,9 @@ import json
 import traceback
 
 from benchmarks import (bench_engine_autotune, bench_fig6_widening,
-                        bench_kernels, bench_table2_pe, bench_table3_alexnet,
-                        bench_table4_resnet, bench_table5_device_compare,
-                        roofline)
+                        bench_kernels, bench_serving, bench_table2_pe,
+                        bench_table3_alexnet, bench_table4_resnet,
+                        bench_table5_device_compare, roofline)
 
 BENCHES = [
     ("table2", bench_table2_pe.main),
@@ -27,6 +27,7 @@ BENCHES = [
     ("fig6", bench_fig6_widening.main),
     ("kernels", bench_kernels.main),
     ("engine_autotune", bench_engine_autotune.main),
+    ("serving", bench_serving.main),
     ("roofline", roofline.main),
 ]
 

@@ -21,6 +21,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -124,6 +125,23 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def restore_latest(self, like: Any, shardings=None):
+        """Restore the newest restorable checkpoint, walking back past any
+        that fail to load (crash-during-save safety: a partial ``step_N``
+        without the COMPLETE sentinel is already invisible to
+        :meth:`all_steps`; a sentineled-but-corrupt one — e.g. torn shard
+        file — is skipped with a warning).  Returns ``(step, state)``, or
+        ``(None, like)`` when no checkpoint is restorable."""
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, like, shardings)
+            except Exception as e:  # noqa: BLE001 — any torn artifact
+                warnings.warn(
+                    f"checkpoint step_{step} unrestorable ({type(e).__name__}:"
+                    f" {e}); falling back to the previous complete one",
+                    RuntimeWarning, stacklevel=2)
+        return None, like
 
     def restore(self, step: int, like: Any, shardings=None) -> Any:
         """Restore into the structure of ``like`` (shapes/dtypes validated).

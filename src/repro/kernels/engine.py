@@ -464,6 +464,19 @@ def model_matmul_shapes(model_cfg) -> set:
     return shapes
 
 
+def tune_serving_shapes(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
+                        chunk_size: int, backend: Optional[str] = None,
+                        candidates=None, iters: int = 2) -> list:
+    """Pre-tune the exact M-row buckets the continuous batcher dispatches:
+    ``chunk_size`` rows per prefill chunk (prompts pad to chunk multiples, so
+    every chunk call is full-size) and ``n_slots`` rows per decode step.
+    With these entries warm, the serving loop never sees a tuning-cache miss
+    — the scheduler's shape bucketing and this sweep share the same grid."""
+    m_rows = tuple(sorted({int(n_slots), int(chunk_size)}))
+    return tune_model_shapes(model_cfg, pcfg, m_rows=m_rows, backend=backend,
+                             candidates=candidates, iters=iters)
+
+
 def tune_model_shapes(model_cfg, pcfg: PrecisionConfig, *, m_rows=(8, 128),
                       backend: Optional[str] = None, candidates=None,
                       iters: int = 2) -> list:

@@ -52,6 +52,16 @@ def cache_path() -> str:
     return os.path.join(os.path.expanduser("~"), ".cache", "repro", "tuning.json")
 
 
+def _sane_entry(entry) -> bool:
+    """Structural validity of one cache entry (a corrupt/hand-edited file
+    must degrade to a miss, never an exception on the serving hot path)."""
+    if not isinstance(entry, dict):
+        return False
+    block = entry.get("block")
+    return (isinstance(block, (list, tuple)) and len(block) == 3
+            and all(isinstance(v, int) and v > 0 for v in block))
+
+
 def _load() -> Dict[str, dict]:
     global _cache, _cache_src
     path = cache_path()
@@ -62,8 +72,14 @@ def _load() -> Dict[str, dict]:
         with open(path) as f:
             data = json.load(f)
         if isinstance(data, dict):
-            entries = data.get("entries", {})
+            raw = data.get("entries", {})
+            if isinstance(raw, dict):
+                # drop structurally-invalid entries (truncated / corrupted /
+                # hand-edited cache) so every consumer sees sane dicts only
+                entries = {k: v for k, v in raw.items() if _sane_entry(v)}
     except (OSError, ValueError):
+        # unreadable or torn JSON (e.g. a writer killed mid-write on a
+        # filesystem without atomic rename): serve from defaults
         entries = {}
     _cache, _cache_src = entries, path
     return _cache

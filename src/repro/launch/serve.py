@@ -1,4 +1,4 @@
-"""Serving launcher — quantized-weights batched prefill + decode loop.
+"""Serving launcher — quantized weights + chunked-prefill continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --precision 2xT --kv-bits 8 --reduced --requests 4 --gen 16
@@ -7,14 +7,22 @@ Deployment flow (the paper's §III framework, LM-shaped):
   1. init/load params -> ``to_serving`` packs weights to k-bit HBM form
      (Table II config via --precision), folding alpha/dequant scales
      (BNS, eqs. 1/2);
-  2. batched prefill builds the (optionally int8) KV cache;
-  3. greedy decode steps run the integer dot-product path.
-Continuous batching: requests join at prefill granularity; the decode loop
-serves the whole active batch every step.
+  2. the continuous batcher admits prompts in fixed-size prefill chunks
+     (bucketed shapes -> bounded jit compiles, warm tuning cache) while the
+     integer-dot decode loop keeps serving every active slot;
+  3. per-slot sampling (greedy, or --temperature/--top-k with a per-slot
+     PRNG key) with optional per-token streaming (--stream);
+  4. TTFT / ITL / queue-time percentiles and tok/s printed at the end
+     (and dumped with --metrics-json).
+
+Token LMs route through :class:`repro.runtime.serving.ContinuousBatcher`;
+stub-frontend (embeds) and enc-dec archs keep a plain batched prefill+decode
+loop (their inputs are not token streams the scheduler can chunk).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -25,26 +33,11 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import build_model, make_batch, reduce_for_smoke, to_serving
 from repro.models.config import ShapeConfig
 from repro.models.convert import serving_param_bytes
+from repro.runtime.serving import ContinuousBatcher, Request
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
-    ap.add_argument("--precision", default="2xT")
-    ap.add_argument("--kv-bits", type=int, default=8)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--autotune", action="store_true",
-                    help="pre-tune Pallas tiles for this model's matmul "
-                         "shapes (persists to the tuning cache; serving "
-                         "then never re-tunes)")
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch, precision=args.precision, kv_bits=args.kv_bits)
-    if args.reduced:
-        cfg = reduce_for_smoke(cfg)
+def _legacy_loop(model, params, cfg, args):
+    """Batched prefill + greedy decode for embeds/enc-dec archs."""
     if args.autotune:
         from repro.core.precision import get_precision, signed
         from repro.kernels import engine, tuning
@@ -54,15 +47,6 @@ def main(argv=None):
         print(f"autotune: {len(entries)} shape classes -> "
               f"{tuning.cache_path()} (sweeps this run: "
               f"{tuning.stats()['sweeps']})")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    base_bytes = serving_param_bytes(params)
-    params = to_serving(params, cfg, tp=1)
-    packed_bytes = serving_param_bytes(params)
-    print(f"weights: {base_bytes/1e6:.1f} MB bf16-form -> "
-          f"{packed_bytes/1e6:.1f} MB {args.precision} serving form "
-          f"({base_bytes/packed_bytes:.2f}x smaller)")
-
     s_max = args.prompt_len + args.gen
     shape = ShapeConfig("serve", args.prompt_len, args.requests, "prefill")
     batch = make_batch(cfg, shape, key=jax.random.PRNGKey(1))
@@ -97,6 +81,93 @@ def main(argv=None):
     print(f"sample generations (first 8 tokens/request):\n{toks[:, :8]}")
     assert np.all(np.isfinite(np.asarray(logits)))
     return toks
+
+
+def _batcher_loop(model, params, cfg, args):
+    """Continuous batching through the scheduler v2."""
+    s_max = args.prompt_len + args.gen
+    batcher = ContinuousBatcher(
+        model, params, n_slots=args.slots or args.requests, s_max=s_max,
+        prompt_len=args.prompt_len, chunk_size=args.chunk_size,
+        autotune=args.autotune)
+    if batcher.chunk_size:
+        print(f"chunked prefill: chunk={batcher.chunk_size}, prompt buckets "
+              f"= multiples of {batcher.chunk_size} (1 compiled chunk shape)")
+    else:
+        print("whole-prompt admission (chunked prefill disabled/unsupported)")
+
+    rng = np.random.default_rng(1)
+
+    def stream_cb(req, tok, finished):
+        mark = "<eos>" if finished else ""
+        print(f"  [rid {req.rid}] tok {tok}{mark}", flush=True)
+
+    for rid in range(args.requests):
+        # ragged prompts exercise the shape buckets
+        plen = max(1, args.prompt_len - (rid % 3))
+        batcher.submit(Request(
+            rid=rid,
+            tokens=rng.integers(0, cfg.vocab, (1, plen)).astype(np.int32),
+            max_new=args.gen,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            seed=args.seed,
+            on_token=stream_cb if args.stream else None))
+    done = batcher.run()
+    assert len(done) == args.requests, (len(done), args.requests)
+
+    print(batcher.metrics.format())
+    toks = np.array([r.output[:8] for r in sorted(done, key=lambda r: r.rid)])
+    print(f"sample generations (first 8 tokens/request):\n{toks}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(batcher.metrics.summary(), f, indent=1)
+        print(f"metrics -> {args.metrics_json}")
+    return toks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--precision", default="2xT")
+    ap.add_argument("--kv-bits", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (0 -> one per request)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="prefill chunk (None -> auto; 0 -> whole-prompt)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with a per-slot PRNG key")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated")
+    ap.add_argument("--metrics-json", default=None,
+                    help="dump the serving metrics summary to this file")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="pre-tune Pallas tiles for the scheduler's shape "
+                         "buckets (persists to the tuning cache; serving "
+                         "then never re-tunes)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, precision=args.precision, kv_bits=args.kv_bits)
+    if args.reduced:
+        cfg = reduce_for_smoke(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base_bytes = serving_param_bytes(params)
+    params = to_serving(params, cfg, tp=1)
+    packed_bytes = serving_param_bytes(params)
+    print(f"weights: {base_bytes/1e6:.1f} MB bf16-form -> "
+          f"{packed_bytes/1e6:.1f} MB {args.precision} serving form "
+          f"({base_bytes/packed_bytes:.2f}x smaller)")
+
+    if cfg.kind != "lm" or cfg.frontend == "embeds":
+        return _legacy_loop(model, params, cfg, args)
+    return _batcher_loop(model, params, cfg, args)
 
 
 if __name__ == "__main__":

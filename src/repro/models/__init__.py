@@ -33,6 +33,9 @@ class Model:
     forward: Callable
     prefill: Callable
     decode_step: Callable
+    # chunked prefill (serving): (params, tokens, cache, pos) -> (logits, cache);
+    # None for model families without a cache-append path (enc-dec)
+    prefill_chunk: Callable = None
 
     def loss(self, params, batch):
         logits, aux = self.forward(params, batch)
@@ -58,6 +61,8 @@ def build_model(cfg: ModelConfig) -> Model:
             prefill=lambda p, b, s_max: transformer.prefill(
                 p, _lm_inputs(b, cfg), cfg, s_max),
             decode_step=lambda p, tok, cache, pos: transformer.decode_step(
+                p, tok, cache, pos, cfg),
+            prefill_chunk=lambda p, tok, cache, pos: transformer.prefill_chunk(
                 p, tok, cache, pos, cfg),
         )
     if cfg.kind == "encdec":

@@ -248,10 +248,13 @@ def _attend_flash(q, k, v, pos_q, pos_k, cfg: ModelConfig, *, causal: bool,
 
 def attn_apply(p, x, cfg: ModelConfig, positions, *, local: bool,
                cache=None, cache_pos=None, return_kv: bool = False):
-    """Full-sequence (train/prefill) when cache is None, else one-step decode.
+    """Full-sequence (train/prefill) when cache is None, else cached decode.
 
     cache: dict {"k","v"[, "ks","vs"]} with k/v (B, S_max, KV, Dh) (int8 codes
-    + scales when cfg.kv_bits) ; cache_pos: scalar current position.
+    + scales when cfg.kv_bits); cache_pos: scalar current position (or (B,)
+    per-slot positions for one-step decode).  With a cache and Sq > 1 this is
+    the chunked-prefill append path: the whole chunk's KV is written at
+    [cache_pos, cache_pos + Sq) and queries attend causally over the cache.
     Returns (out, new_cache_or_kv).
     """
     b = x.shape[0]
@@ -276,6 +279,35 @@ def attn_apply(p, x, cfg: ModelConfig, positions, *, local: bool,
                 mask &= j > i - cfg.window
             out = _attend(q, k, v, mask[:, None], cfg)
         new = (k, v) if return_kv else None
+    elif x.shape[1] > 1:
+        # chunk append (chunked prefill): scalar start position, all batch
+        # rows advance together.  KV for the whole chunk lands in the cache
+        # and queries attend over the cache with a causal position mask, so
+        # interleaved decode steps never wait for a full-prompt prefill.
+        s_max = cache["k"].shape[1]
+        start = jnp.asarray(cache_pos, jnp.int32).reshape(())
+
+        def write(buf, upd):
+            return jax.lax.dynamic_update_slice(
+                buf, upd.astype(buf.dtype), (0, start, 0, 0))
+
+        if cfg.kv_bits:
+            kq, ks, vq, vs = _kv_quantize(k, v, cfg.kv_bits)
+            ck, cv = write(cache["k"], kq), write(cache["v"], vq)
+            nks, nvs = write(cache["ks"], ks), write(cache["vs"], vs)
+            new = {"k": ck, "v": cv, "ks": nks, "vs": nvs}
+            kk = _kv_dequant(ck, nks, x.dtype, cfg.kv_bits)
+            vv = _kv_dequant(cv, nvs, x.dtype, cfg.kv_bits)
+        else:
+            ck, cv = write(cache["k"], k), write(cache["v"], v)
+            new = {"k": ck, "v": cv}
+            kk, vv = ck, cv
+        j = jnp.arange(s_max)[None, None, :]            # (1,1,S)
+        qpos = positions[:, :, None]                    # (B,Sq,1)
+        mask = (j <= qpos)[:, None]                     # (B,1,Sq,S)
+        if local:
+            mask &= (j > qpos - cfg.window)[:, None]
+        out = _attend(q, kk, vv, mask, cfg)
     else:
         s_max = cache["k"].shape[1]
         # cache_pos: scalar OR per-batch (B,) vector (continuous batching —
@@ -489,12 +521,17 @@ def mamba_init(key, cfg: ModelConfig):
 
 def _causal_conv(x, w, b, state=None):
     """Depthwise causal conv over seq.  x: (B,S,Di), w: (K,Di).  If ``state``
-    ((B, K-1, Di)) is given, performs one-step decode and returns new state."""
+    ((B, K-1, Di)) is given, continues from it: one-step decode for S == 1,
+    chunk continuation (chunked prefill) for S > 1; returns the new state."""
     kk = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (kk - 1, 0), (0, 0)))
         out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(kk))
         return out + b, xp[:, -(kk - 1):, :] if kk > 1 else None
+    if x.shape[1] > 1:                                        # chunk append
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(kk))
+        return out + b, xp[:, -(kk - 1):, :] if kk > 1 else state
     xs = jnp.concatenate([state, x], axis=1)                  # (B, K, Di)
     out = jnp.einsum("bkd,kd->bd", xs.astype(jnp.float32),
                      w.astype(jnp.float32))[:, None, :].astype(x.dtype)

@@ -214,6 +214,40 @@ def _prefill_scan(params, x, cfg, positions, cache, s_max):
     return x, new_cache
 
 
+def prefill_chunk(params, tokens, cache, pos, cfg: ModelConfig):
+    """Process one prompt chunk against an existing cache (chunked prefill).
+
+    tokens: (B, C) int32 (or (B, C, D) embeds); cache: a ``make_cache``
+    pytree; pos: SCALAR int32 start position — the chunk's KV is appended at
+    cache positions [pos, pos + C) and its queries attend causally over the
+    cache, so long prompts can be admitted C tokens at a time, interleaved
+    with decode steps for already-running requests (bounded TTFT impact).
+
+    For attention-only stacks a prompt processed in aligned chunks produces
+    logits bit-identical to :func:`prefill` of the whole prompt (same fp32
+    softmax; appended cache rows beyond the mask contribute exact zeros).
+    SSM layers thread their conv/ssm state through chunks exactly as long as
+    no padding tokens are interleaved (the serving scheduler therefore only
+    chunk-admits attention-only models).
+
+    Returns (logits (B, C, V), new cache).
+    """
+    b, c = tokens.shape[0], tokens.shape[1]
+    x = _embed(params, tokens, cfg)
+    pos = jnp.asarray(pos, jnp.int32).reshape(())
+    positions = jnp.broadcast_to(pos + jnp.arange(c, dtype=jnp.int32)[None],
+                                 (b, c))
+
+    def body(x, scanned):
+        pp, cache_p = scanned
+        x, new_cache_p, _ = _apply_period(pp, x, cfg, positions,
+                                          caches=cache_p, cache_pos=pos)
+        return x, new_cache_p
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    return _logits(params, x, cfg), new_cache
+
+
 def decode_step(params, token, cache, pos, cfg: ModelConfig):
     """One decoding step.  token: (B, 1) int32 (or (B,1,D) embeds);
     pos: scalar int32 OR (B,) per-slot positions (continuous batching).

@@ -1,0 +1,138 @@
+"""Serving metrics — TTFT / ITL / queue-time percentiles and throughput.
+
+The paper's headline number (3,700 img/s on Arria 10) is a *serving* number:
+it only holds while the scheduler keeps the PEs saturated.  This module is
+the accounting side of that claim for the LM scheduler: every request's
+queue wait, time-to-first-token and inter-token latencies are sampled, and
+``summary()`` folds them into the percentiles a load test cares about.
+
+Host-side and allocation-light: one float append per token, percentile math
+only on demand.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+PERCENTILES = (50, 90, 99)
+
+
+def _pcts(samples: List[float]) -> Dict[str, float]:
+    if not samples:
+        return {f"p{p}": 0.0 for p in PERCENTILES} | {"mean": 0.0, "n": 0}
+    xs = sorted(samples)
+    out = {}
+    for p in PERCENTILES:
+        # nearest-rank on the sorted sample (no numpy needed on the hot path)
+        idx = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
+        out[f"p{p}"] = xs[idx]
+    out["mean"] = sum(xs) / len(xs)
+    out["n"] = len(xs)
+    return out
+
+
+class Metrics:
+    """Aggregates per-request serving latencies and scheduler counters.
+
+    Samples (all milliseconds):
+      queue_ms : submit -> admission start (prefill begins)
+      ttft_ms  : submit -> first generated token
+      itl_ms   : gap between consecutive generated tokens of one request
+
+    Counters:
+      decode_steps / prefill_chunks / prefill_full : batched decode
+      iterations, chunk-admission calls, and whole-prompt prefill calls;
+      decode_slot_tokens: tokens produced by batched decode (occupancy
+      numerator — decode_steps * n_slots is the denominator).
+    """
+
+    def __init__(self, n_slots: int = 0):
+        self.n_slots = n_slots
+        self.queue_ms: List[float] = []
+        self.ttft_ms: List[float] = []
+        self.itl_ms: List[float] = []
+        self.requests_submitted = 0
+        self.requests_finished = 0
+        self.tokens_out = 0
+        self.prompt_tokens = 0
+        self.decode_steps = 0
+        self.decode_slot_tokens = 0
+        self.prefill_chunks = 0
+        self.prefill_full = 0
+        self._t0: Optional[float] = None
+        self._t1: Optional[float] = None
+
+    # ------------------------------------------------------------- recording
+    def _touch(self):
+        now = time.time()
+        if self._t0 is None:
+            self._t0 = now
+        self._t1 = now
+
+    def on_submit(self, req) -> None:
+        self.requests_submitted += 1
+        self._touch()
+
+    def on_admit(self, req) -> None:
+        self.queue_ms.append((req.started_at - req.submitted_at) * 1e3)
+        self.prompt_tokens += int(req.tokens.shape[-1])
+        self._touch()
+
+    def on_token(self, req, first: bool) -> None:
+        self.tokens_out += 1
+        now = time.time()
+        if first:
+            self.ttft_ms.append((now - req.submitted_at) * 1e3)
+        elif req.last_token_at:
+            self.itl_ms.append((now - req.last_token_at) * 1e3)
+        self._touch()
+
+    def on_finish(self, req) -> None:
+        self.requests_finished += 1
+        self._touch()
+
+    # --------------------------------------------------------------- summary
+    @property
+    def wall_s(self) -> float:
+        if self._t0 is None or self._t1 is None:
+            return 0.0
+        return self._t1 - self._t0
+
+    def summary(self) -> dict:
+        wall = max(self.wall_s, 1e-9)
+        decode_cap = max(self.decode_steps * max(self.n_slots, 1), 1)
+        return {
+            "requests": {"submitted": self.requests_submitted,
+                         "finished": self.requests_finished},
+            "tokens": {"prompt": self.prompt_tokens, "generated": self.tokens_out},
+            "queue_ms": _pcts(self.queue_ms),
+            "ttft_ms": _pcts(self.ttft_ms),
+            "itl_ms": _pcts(self.itl_ms),
+            "throughput": {
+                "wall_s": self.wall_s,
+                "tok_per_s": self.tokens_out / wall,
+                "req_per_s": self.requests_finished / wall,
+            },
+            "scheduler": {
+                "decode_steps": self.decode_steps,
+                "prefill_chunks": self.prefill_chunks,
+                "prefill_full": self.prefill_full,
+                # fraction of decode-slot capacity that produced a token
+                "slot_occupancy": self.decode_slot_tokens / decode_cap,
+            },
+        }
+
+    def format(self) -> str:
+        s = self.summary()
+        t, q, i = s["ttft_ms"], s["queue_ms"], s["itl_ms"]
+        th, sc = s["throughput"], s["scheduler"]
+        return (
+            f"served {s['requests']['finished']}/{s['requests']['submitted']} reqs, "
+            f"{s['tokens']['generated']} tok in {th['wall_s']:.2f} s "
+            f"({th['tok_per_s']:.1f} tok/s)\n"
+            f"  ttft ms  p50 {t['p50']:.1f}  p90 {t['p90']:.1f}  p99 {t['p99']:.1f}\n"
+            f"  itl  ms  p50 {i['p50']:.1f}  p90 {i['p90']:.1f}  p99 {i['p99']:.1f}\n"
+            f"  queue ms p50 {q['p50']:.1f}  p90 {q['p90']:.1f}  p99 {q['p99']:.1f}\n"
+            f"  decode steps {sc['decode_steps']} (occupancy "
+            f"{sc['slot_occupancy']:.2f}), prefill chunks {sc['prefill_chunks']}, "
+            f"full prefills {sc['prefill_full']}")

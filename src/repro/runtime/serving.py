@@ -1,28 +1,46 @@
-"""Continuous-batching serving scheduler.
+"""Continuous-batching serving scheduler (v2: chunked prefill).
 
 Production serving loop around the model's prefill/decode step functions:
-  * a bounded request queue; admission at prefill granularity;
+  * a bounded request queue; admission at prefill-*chunk* granularity — long
+    prompts are split into fixed-size chunks interleaved with decode steps,
+    so already-running requests keep producing tokens while a new prompt is
+    being admitted (bounded ITL impact, no full-prefill stall);
+  * bucketed shapes: prompts pad up to a multiple of the chunk size, so the
+    compiled shape set is {one chunk, one decode step} and the Pallas tuning
+    cache (pre-populated via ``autotune=True``) is always hit;
   * fixed-capacity decode slots (the compiled decode step has a static batch
     shape — slots are recycled, finished slots admit new requests);
-  * per-slot state: position, remaining budget, EOS detection;
-  * latency accounting per request (queue / prefill / per-token decode).
+  * per-slot sampling: greedy by default, temperature/top-k with a per-slot
+    PRNG key (deterministic per (seed, rid, token index));
+  * per-token streaming callbacks and EOS/budget handling;
+  * latency accounting per request (queue / TTFT / inter-token) aggregated
+    by :class:`repro.runtime.metrics.Metrics`.
 
 The scheduler is host-side and model-agnostic: it owns a padded
-(slots, s_max) cache built once and re-used; joins happen by writing a new
-request's prefilled KV into its slot (jax dynamic_update_slice on the batch
+(slots, s_max) cache built once and re-used; joins happen by writing a newly
+prefilled request's KV into its slot (jax dynamic_update_slice on the batch
 axis).  On a pod the same loop runs with the sharded step functions — the
 cache lives sharded on device (DESIGN.md §5).
+
+Exactness contract: with greedy sampling, generations are bit-identical to
+isolated sequential runs for attention-only stacks (the property suite in
+tests/test_serving.py enforces this).  SSM/hybrid stacks fall back to
+whole-prompt admission (padding tokens would pollute the recurrent state),
+and per-tensor dynamic activation quantization is inherently batch-shaped —
+quantized-act configs are reproducible, not bit-identical across batsizes.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .metrics import Metrics
 
 
 @dataclasses.dataclass
@@ -31,9 +49,17 @@ class Request:
     tokens: np.ndarray                 # prompt (1, S_prompt)
     max_new: int = 16
     eos_id: Optional[int] = None
+    # sampling: temperature <= 0 -> greedy; top_k 0 -> full distribution
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    # per-token streaming: called as on_token(req, token, finished)
+    on_token: Optional[Callable[["Request", int, bool], None]] = None
     # filled by the scheduler:
     submitted_at: float = 0.0
     started_at: float = 0.0
+    first_token_at: float = 0.0
+    last_token_at: float = 0.0
     finished_at: float = 0.0
     output: List[int] = dataclasses.field(default_factory=list)
 
@@ -42,105 +68,268 @@ class Request:
         return (self.started_at - self.submitted_at) * 1e3
 
     @property
+    def ttft_ms(self):
+        return (self.first_token_at - self.submitted_at) * 1e3
+
+    @property
     def total_ms(self):
         return (self.finished_at - self.submitted_at) * 1e3
 
 
+@dataclasses.dataclass
+class _Admission:
+    """One request mid-chunked-prefill (its cache is not yet slot-resident)."""
+    req: Request
+    slot: int
+    tokens: np.ndarray                 # (1, L_pad) bucket-padded prompt
+    length: int                        # true prompt length L
+    next_pos: int = 0                  # next chunk start
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunk admission preserves exactness only when no recurrent state
+    crosses padded positions: attention-only layer stacks over token ids."""
+    return (getattr(cfg, "kind", "") == "lm"
+            and getattr(cfg, "frontend", "none") == "none"
+            and all(m.startswith("attn") for m in cfg.layer_pattern))
+
+
+def bucket_length(length: int, chunk: int) -> int:
+    """Pad a prompt length up to the next chunk multiple (its shape bucket)."""
+    return -(-length // chunk) * chunk
+
+
 class ContinuousBatcher:
-    """Slot-based continuous batching over single-request prefill +
-    batched decode."""
+    """Slot-based continuous batching: chunked (or whole-prompt) prefill
+    interleaved with batched decode."""
 
     def __init__(self, model, params, *, n_slots: int, s_max: int,
-                 prompt_len: int, autotune: bool = False):
+                 prompt_len: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 autotune: bool = False, metrics: Optional[Metrics] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.s_max = s_max
-        self.prompt_len = prompt_len
+        self.prompt_len = prompt_len or s_max
         cfg = model.cfg
+
+        # ---- chunked-prefill configuration -------------------------------
+        chunkable = (supports_chunked_prefill(cfg)
+                     and model.prefill_chunk is not None)
+        if chunk_size is None:
+            chunk_size = min(32, s_max) if chunkable else 0
+        if chunk_size and not chunkable:
+            raise ValueError(
+                f"{cfg.name}: chunked prefill needs an attention-only token "
+                "LM (recurrent state cannot cross padded chunk positions); "
+                "pass chunk_size=0 for whole-prompt admission")
+        self.chunk_size = int(chunk_size)
+        # admission cache is rounded up so every chunk call is full-size
+        self.s_adm = (bucket_length(s_max, self.chunk_size)
+                      if self.chunk_size else s_max)
+
         if autotune:
             # Pre-tune the Pallas tiles for every matmul shape this model's
-            # prefill/decode will dispatch, so the serving loop itself only
-            # ever *hits* the tuning cache (never sweeps mid-request).
+            # chunk-prefill/decode will dispatch, so the serving loop itself
+            # only ever *hits* the tuning cache (never sweeps mid-request).
             from repro.core.precision import get_precision, signed
             from repro.kernels import engine
-            engine.tune_model_shapes(
+            engine.tune_serving_shapes(
                 cfg, signed(get_precision(cfg.precision)),
-                m_rows=(n_slots, n_slots * prompt_len))
+                n_slots=n_slots,
+                chunk_size=self.chunk_size or self.prompt_len)
+
+        self.metrics = metrics if metrics is not None else Metrics(n_slots)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)
         self.done = np.ones(n_slots, bool)
+        self._adm: Optional[_Admission] = None
+        self._adm_cache = None             # reused (1, s_adm) admission cache
+        self._just_finished: List[Request] = []
 
         from repro.models import transformer as tfm
-        self.cache = tfm.make_cache(cfg, n_slots, s_max)
+        self._make_cache = lambda b, s: tfm.make_cache(cfg, b, s)
+        self.cache = self._make_cache(n_slots, s_max)
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
 
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, s_max))
+            lambda p, b: model.prefill(p, b, self.s_adm))
         self._decode = jax.jit(
             lambda p, t, c, pos_vec: model.decode_step(p, t, c, pos_vec))
-        # per-slot cache writer: copy a 1-batch cache into slot i
+        if self.chunk_size:
+            # the admission cache is dead after each chunk (reassigned from
+            # the output) — donate it so chunk appends update in place
+            self._prefill_chunk = jax.jit(
+                lambda p, t, c, pos: model.prefill_chunk(p, t, c, pos),
+                donate_argnums=(2,))
+
+        # per-slot cache writer: copy a 1-batch cache into slot i (the
+        # admission cache may be longer than the slot cache — slice first)
         def write_slot(cache, one, i):
-            return jax.tree_util.tree_map(
-                lambda c, o: jax.lax.dynamic_update_slice(
-                    c, o.astype(c.dtype),
-                    (0, i) + (0,) * (c.ndim - 2)), cache, one)
+            def upd(c, o):
+                o = o[tuple(slice(0, min(cs, os))
+                            for cs, os in zip(c.shape, o.shape))]
+                return jax.lax.dynamic_update_slice(
+                    c, o.astype(c.dtype), (0, i) + (0,) * (c.ndim - 2))
+            return jax.tree_util.tree_map(upd, cache, one)
         self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
 
-    # ---------------------------------------------------------------- admit
+    # ---------------------------------------------------------------- submit
     def submit(self, req: Request):
+        if req.tokens.shape[-1] >= self.s_max:
+            raise ValueError(
+                f"request {req.rid}: prompt length {req.tokens.shape[-1]} "
+                f"needs s_max > {req.tokens.shape[-1]} (got {self.s_max})")
         req.submitted_at = time.time()
+        self.metrics.on_submit(req)
         self.queue.append(req)
 
-    def _admit(self):
+    # ---------------------------------------------------------- token stream
+    def _emit(self, req: Request, tok: int, finished: bool):
+        req.output.append(tok)
+        first = req.first_token_at == 0.0
+        now = time.time()
+        if first:
+            req.first_token_at = now
+        self.metrics.on_token(req, first)
+        req.last_token_at = now
+        if req.on_token is not None:
+            req.on_token(req, tok, finished)
+
+    def _sample(self, req: Request, logits_row) -> int:
+        """Next token from one slot's (V,) logits row under the request's
+        sampling params.  Greedy is the exactness-preserving default."""
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits_row))
+        lg = logits_row.astype(jnp.float32) / req.temperature
+        if req.top_k > 0:
+            kth = jax.lax.top_k(lg, min(req.top_k, lg.shape[-1]))[0][-1]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(req.seed), req.rid),
+            len(req.output))
+        return int(jax.random.categorical(key, lg))
+
+    def _finish(self, req: Request, slot: int):
+        req.finished_at = time.time()
+        self.metrics.on_finish(req)
+        self.done[slot] = True
+        self.slots[slot] = None
+        self._just_finished.append(req)
+
+    # ----------------------------------------------------------------- admit
+    def _free_slot(self) -> Optional[int]:
         for i in range(self.n_slots):
-            if not self.done[i] or not self.queue:
-                continue
+            if self.done[i] and self.slots[i] is None:
+                return i
+        return None
+
+    def _activate(self, req: Request, slot: int, one_cache, first_logits_row):
+        """First token sampled, admission cache copied into the slot."""
+        tok = self._sample(req, first_logits_row)
+        length = req.tokens.shape[1]
+        finished = (req.max_new <= 1
+                    or (req.eos_id is not None and tok == req.eos_id))
+        self._emit(req, tok, finished)
+        if finished:
+            self._finish(req, slot)
+            return
+        self.cache = self._write_slot(self.cache, one_cache, slot)
+        self.tokens = self.tokens.at[slot, 0].set(tok)
+        self.pos[slot] = length
+        self.done[slot] = False
+
+    def _advance_admission(self):
+        """Chunked path: at most ONE prefill chunk per scheduler step, so
+        active slots never wait longer than a chunk for their next decode."""
+        if self._adm is None:
+            slot = self._free_slot()
+            if not self.queue or slot is None:
+                return
             req = self.queue.popleft()
             req.started_at = time.time()
+            self.metrics.on_admit(req)
+            length = req.tokens.shape[1]
+            l_pad = bucket_length(length, self.chunk_size)
+            padded = np.zeros((1, l_pad), np.int32)
+            padded[:, :length] = req.tokens
+            if self._adm_cache is None:
+                self._adm_cache = self._make_cache(1, self.s_adm)
+            self._adm = _Admission(req, slot, padded, length)
+            self.slots[slot] = req         # reserve (done stays True)
+
+        adm = self._adm
+        c = self.chunk_size
+        chunk = jnp.asarray(adm.tokens[:, adm.next_pos:adm.next_pos + c])
+        self.metrics.prefill_chunks += 1
+        logits, self._adm_cache = self._prefill_chunk(
+            self.params, chunk, self._adm_cache, jnp.int32(adm.next_pos))
+        adm.next_pos += c
+        if adm.next_pos >= adm.tokens.shape[1]:
+            # final chunk always contains the last real position L-1
+            row = logits[0, (adm.length - 1) % c]
+            self._adm = None
+            self._activate(adm.req, adm.slot, self._adm_cache, row)
+
+    def _admit_full(self):
+        """Whole-prompt admission (SSM/hybrid stacks, or chunk_size=0):
+        exact-length prefill per request — stalls decode for its duration."""
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            req.started_at = time.time()
+            self.metrics.on_admit(req)
+            self.metrics.prefill_full += 1
+            self.slots[slot] = req
             batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)}
             logits, one_cache = self._prefill(self.params, batch)
-            self.cache = self._write_slot(self.cache, one_cache, i)
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.output.append(tok)
-            self.tokens = self.tokens.at[i, 0].set(tok)
-            self.pos[i] = req.tokens.shape[1]
-            self.done[i] = False
-            self.slots[i] = req
+            self._activate(req, slot, one_cache, logits[0, -1])
 
     # ----------------------------------------------------------------- step
     def step(self):
-        """One decode step for every active slot; returns finished requests."""
-        self._admit()
-        if all(self.done):
-            return []
-        logits, self.cache = self._decode(self.params, self.tokens, self.cache,
-                                          jnp.asarray(self.pos))
-        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        finished = []
-        for i, req in enumerate(self.slots):
-            if req is None or self.done[i]:
-                continue
-            tok = int(toks[i])
-            req.output.append(tok)
-            self.pos[i] += 1
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if len(req.output) >= req.max_new or hit_eos \
-                    or self.pos[i] >= self.s_max - 1:
-                req.finished_at = time.time()
-                finished.append(req)
-                self.done[i] = True
-                self.slots[i] = None
-            else:
-                self.tokens = self.tokens.at[i, 0].set(tok)
+        """One scheduler iteration: a prefill chunk (if a request is being
+        admitted) plus one decode step for every active slot.  Returns the
+        requests finished this step."""
+        if self.chunk_size:
+            self._advance_admission()
+        else:
+            self._admit_full()
+        if not all(self.done):
+            logits, self.cache = self._decode(
+                self.params, self.tokens, self.cache, jnp.asarray(self.pos))
+            self.metrics.decode_steps += 1
+            greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            for i, req in enumerate(self.slots):
+                if req is None or self.done[i]:
+                    continue
+                tok = int(greedy[i]) if req.temperature <= 0.0 \
+                    else self._sample(req, logits[i, 0])
+                self.metrics.decode_slot_tokens += 1
+                self.pos[i] += 1
+                hit_eos = req.eos_id is not None and tok == req.eos_id
+                full = (len(req.output) + 1 >= req.max_new or hit_eos
+                        or self.pos[i] >= self.s_max - 1)
+                self._emit(req, tok, full)
+                if full:
+                    self._finish(req, i)
+                else:
+                    self.tokens = self.tokens.at[i, 0].set(tok)
+        finished, self._just_finished = self._just_finished, []
         return finished
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self._adm is None and bool(all(self.done))
 
     def run(self, max_steps: int = 10_000):
         """Drain the queue; returns all finished requests."""
         out = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if not self.queue and all(self.done):
+            if self.idle:
                 break
         return out

@@ -53,11 +53,14 @@ def _install_hypothesis_fallback():
 
     def given(*_args, **strategies):
         def deco(fn):
-            n = getattr(fn, "_fallback_max_examples", 20)
             # deterministic per-test seed so failures reproduce
             seed = abs(hash(fn.__name__)) % (2 ** 32)
 
             def runner():
+                # read at call time: @settings above @given sets the attr on
+                # ``runner`` AFTER given() has wrapped fn
+                n = getattr(runner, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples", 20))
                 rng = np.random.default_rng(seed)
                 for _ in range(n):
                     fn(**{k: s.sample(rng) for k, s in strategies.items()})

@@ -249,6 +249,75 @@ def test_cache_miss_returns_valid_default(tmp_cache):
     assert tuning.stats()["misses"] == 1 and tuning.stats()["sweeps"] == 0
 
 
+@pytest.mark.parametrize("payload", [
+    b"",                                            # empty file
+    b'{"version": 1, "entries": {',                 # truncated mid-write
+    b"\x00\xffgarbage",                             # binary garbage
+    b'[1, 2, 3]',                                   # valid JSON, wrong shape
+    b'{"version": 1, "entries": [1, 2]}',           # entries not a dict
+    b'{"version": 1, "entries": {"k": "nope"}}',    # entry not a dict
+    b'{"version": 1, "entries": {"k": {"block": "x"}}}',   # malformed block
+    b'{"version": 1, "entries": {"k": {"block": [8]}}}',   # wrong arity
+])
+def test_corrupt_cache_falls_back_to_defaults(tmp_cache, payload):
+    """A corrupt/truncated tuning.json (e.g. a writer killed mid-write) must
+    degrade to cache misses + safe defaults — never raise on the hot path."""
+    tmp_cache.write_bytes(payload)
+    tuning.reset()
+    blk = tuning.get_block_sizes(8, 128, 256, kind=W_TERNARY, a_bits=2,
+                                 w_bits=2, backend="pallas")
+    assert blk == tuning.fallback_block(8, 128, 256, W_TERNARY, 2)
+    assert tuning.stats()["misses"] == 1 and tuning.stats()["hits"] == 0
+    # ... and a subsequent autotune repairs the file in place
+    entry = tuning.autotune(8, 128, 256, kind=W_TERNARY, a_bits=2, w_bits=2,
+                            backend="pallas", measure=lambda b: 1.0,
+                            candidates=[(8, 128, 128)])
+    assert tuning._sane_entry(entry)
+    tuning.reset()
+    assert tuning.get_block_sizes(8, 128, 256, kind=W_TERNARY, a_bits=2,
+                                  w_bits=2, backend="pallas") in \
+        {(8, 128, 128), tuning.fallback_block(8, 128, 256, W_TERNARY, 2)}
+
+
+def test_corrupt_entry_does_not_break_good_entries(tmp_cache):
+    """One malformed entry is dropped; valid siblings keep serving hits."""
+    good_key = tuning.cache_key(W_TERNARY, 2, 2, "pallas", 8, 128, 256)
+    tmp_cache.write_text(json.dumps({
+        "version": 1,
+        "entries": {good_key: {"block": [8, 128, 128], "us": 1.0},
+                    "broken": {"block": None}},
+    }))
+    tuning.reset()
+    blk = tuning.get_block_sizes(8, 128, 256, kind=W_TERNARY, a_bits=2,
+                                 w_bits=2, backend="pallas")
+    assert blk == (8, 128, 128)
+    assert tuning.stats()["hits"] == 1
+
+
+def test_cache_save_is_atomic(tmp_cache, monkeypatch):
+    """The cache is written tmp-then-rename: an interrupted save must leave
+    the previous file byte-identical (no torn JSON for the next reader)."""
+    tuning.autotune(8, 128, 256, kind=W_TERNARY, a_bits=2, w_bits=2,
+                    backend="pallas", measure=lambda b: 1.0,
+                    candidates=[(8, 128, 128)])
+    before = tmp_cache.read_bytes()
+
+    def boom(src, dst):
+        raise OSError("simulated crash during rename")
+    with monkeypatch.context() as m:
+        m.setattr(tuning.os, "replace", boom)
+        with pytest.warns(RuntimeWarning):
+            tuning.autotune(8, 256, 256, kind=W_TERNARY, a_bits=2, w_bits=2,
+                            backend="pallas",
+                            measure=lambda b: 0.5 if b == (8, 256, 128)
+                            else 1.0,
+                            candidates=[(8, 256, 128)])
+    assert tmp_cache.read_bytes() == before     # old cache intact
+    # in-memory state still serves the new entry this process
+    assert tuning.get_block_sizes(8, 256, 256, kind=W_TERNARY, a_bits=2,
+                                  w_bits=2, backend="pallas") == (8, 256, 128)
+
+
 def test_autotune_matmul_end_to_end(tmp_cache):
     """Real sweep (tiny candidates) -> tuned dispatch stays bit-exact."""
     cfg = get_precision("2xT")

@@ -1,0 +1,111 @@
+"""Engine golden suite: every registered quantized precision config, on
+non-square / ragged (M, N, K) shapes, checked against the pure-jnp oracles in
+kernels/ref.py on BOTH backends.
+
+This is the guard under the serving scheduler's shape bucketing: a new
+M-bucket (chunk size, slot count) must route to a kernel whose integer
+accumulation is bit-exact vs the oracle, including the row-padding path
+(ragged M) and every storage-kind fallback (packed int / ternary / binary
+XNOR / binary dequant / unpacked codes).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.precision import (PAPER_CONFIGS, W_BINARY, W_FLOAT,
+                                  get_precision, signed)
+from repro.kernels import engine, ref
+
+RNG = np.random.default_rng(11)
+
+# every registered (weight_kind, act_bits, weight_bits) point of the menu
+CONFIGS = sorted(n for n, pc in PAPER_CONFIGS.items() if pc.w_mode != W_FLOAT)
+
+# ragged M (exercises pallas row padding), non-square N/K, mixed alignments;
+# K chosen so every pack width (32/1, 32/2, 32/4, 32/8 codes per word) packs
+SHAPES = [(5, 128, 96), (13, 160, 256), (3, 384, 64), (31, 256, 224)]
+
+
+def _acts(name, pcfg, m, k):
+    """Integer activation codes valid for the config (integer inputs skip the
+    dynamic quantizer, so oracle and kernel see identical codes)."""
+    if pcfg.a_bits == 1:
+        return jnp.asarray(RNG.choice([-1, 1], (m, k)).astype(np.int8))
+    qmax = (1 << (min(pcfg.a_bits, 8) - 1)) - 1
+    return jnp.asarray(RNG.integers(-qmax, qmax + 1, (m, k)).astype(np.int8))
+
+
+def _oracle(x, pw):
+    """Independent expectation per storage kind, built on ref.py."""
+    kind = engine.storage_kind(pw)
+    scale = pw.scale.reshape(-1).astype(jnp.float32)
+    if kind == engine.K_CODES:
+        wt = pw.wt_packed                                   # (N, K) int8
+        acc = jnp.dot(x.astype(jnp.int32), wt.T.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * scale[None, :]
+    if pw.mode == W_BINARY:
+        if x.dtype == jnp.int32:                            # pm1-packed bits
+            return ref.binary_matmul_ref(x, pw.wt_packed, pw.k, alpha=scale)
+        codes = packing.unpack_binary_pm1(pw.wt_packed)     # (N, K) int8
+        acc = jnp.dot(x.astype(jnp.int32), codes.T.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * scale[None, :]
+    if kind == "ternary":
+        return ref.ternary_matmul_ref(x, pw.wt_packed, scale)
+    return ref.packed_matmul_ref(x, pw.wt_packed, scale, pw.bits)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "m%dn%dk%d" % s)
+@pytest.mark.parametrize("name", CONFIGS)
+@pytest.mark.parametrize("backend", [engine.BACKEND_PALLAS,
+                                     engine.BACKEND_XLA])
+def test_qmatmul_golden_vs_oracle(name, shape, backend):
+    m, n, k = shape
+    pcfg = signed(get_precision(name))
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    pw = engine.pack_weight(w, pcfg)
+    x = _acts(name, pcfg, m, k)
+    want = np.asarray(_oracle(x, pw))
+    got = np.asarray(engine.qmatmul(x, pw, pcfg, backend=backend,
+                                    interpret=True))
+    assert got.shape == (m, n)
+    # integer accumulation paths are exact; the float alpha epilogue and the
+    # XNOR K-2*popcount reformulation agree to fp32 rounding
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_float_activations_golden(name):
+    """Float inputs route through the dynamic per-tensor quantizer; the
+    oracle replicates it, so the backends must agree with it exactly."""
+    m, n, k = 9, 128, 96
+    pcfg = signed(get_precision(name))
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    pw = engine.pack_weight(w, pcfg)
+    x = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32))
+    a_bits = 0 if pcfg.a_bits > 8 else pcfg.a_bits
+    xq, a_scale = engine._prep_activations(x, pw, a_bits)
+    scale = 1.0 if a_scale is None else a_scale
+    want = np.asarray(_oracle(xq, pw)) * np.float32(scale)
+    got = np.asarray(engine.qmatmul(x, pw, pcfg, backend="xla"))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_serving_bucket_rows_dispatch_consistently(name):
+    """The scheduler's M buckets (decode n_slots rows, prefill chunk rows)
+    must produce identical per-row results — dispatch is row-independent for
+    integer codes, so bucketing can never change a generation."""
+    n, k = 128, 96
+    pcfg = signed(get_precision(name))
+    pw = engine.pack_weight(
+        jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32)), pcfg)
+    x = _acts(name, pcfg, 32, k)            # a full chunk of rows
+    full = np.asarray(engine.qmatmul(x, pw, pcfg, backend="pallas",
+                                     interpret=True))
+    for rows in (1, 3, 4):                  # decode-sized buckets
+        part = np.asarray(engine.qmatmul(x[:rows], pw, pcfg,
+                                         backend="pallas", interpret=True))
+        np.testing.assert_array_equal(part, full[:rows])

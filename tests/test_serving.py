@@ -1,23 +1,46 @@
-"""Continuous batching: staggered slot admission produces EXACTLY the same
-greedy generations as isolated sequential runs (per-slot positions, slot
-recycling, latency accounting)."""
+"""Scheduler v2 property suite: chunked-prefill continuous batching must be
+indistinguishable (bit-identical, greedy) from isolated sequential runs under
+random arrival orders, prompt lengths, generation budgets and chunk sizes —
+with slot recycling, EOS/budget handling, per-slot sampling determinism,
+streaming callbacks and metrics accounting all exercised.
+
+Runs with real ``hypothesis`` when installed (CI) and with the deterministic
+fallback in conftest.py otherwise.  ``REPRO_SERVING_EXAMPLES`` scales the
+example count (CI's serving-stress step raises it).
+"""
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke
-from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.serving import (ContinuousBatcher, Request, bucket_length,
+                                   supports_chunked_prefill)
+
+EXAMPLES = int(os.environ.get("REPRO_SERVING_EXAMPLES", "4"))
+S_MAX = 24
+
+_STATE = {}
 
 
 def _setup():
-    cfg = reduce_for_smoke(get_config("smollm-135m"))
-    cfg = dataclasses.replace(cfg, dtype="float32")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
+    if not _STATE:
+        cfg = reduce_for_smoke(get_config("smollm-135m"))
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        model = build_model(cfg)
+        _STATE.update(cfg=cfg, model=model,
+                      params=model.init(jax.random.PRNGKey(0)), memo={})
+    return _STATE["cfg"], _STATE["model"], _STATE["params"]
+
+
+def _prompt(length: int, salt: int, vocab: int) -> np.ndarray:
+    rng = np.random.default_rng(1009 * length + salt)
+    return rng.integers(0, vocab, (1, length)).astype(np.int32)
 
 
 def _sequential_generate(model, params, prompt, max_new, s_max):
@@ -35,14 +58,36 @@ def _sequential_generate(model, params, prompt, max_new, s_max):
     return out
 
 
+def _sequential_memo(model, params, prompt, max_new, s_max=S_MAX):
+    memo = _STATE["memo"]
+    key = (prompt.tobytes(), prompt.shape[1], max_new, s_max)
+    if key not in memo:
+        memo[key] = _sequential_generate(model, params, prompt, max_new, s_max)
+    return memo[key]
+
+
+def _truncate_at_eos(seq, eos):
+    if eos is None:
+        return list(seq)
+    out = []
+    for t in seq:
+        out.append(t)
+        if t == eos:
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# legacy regression tests (v1 behavior preserved by v2)
+# ---------------------------------------------------------------------------
 def test_continuous_batching_matches_sequential():
     cfg, model, params = _setup()
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, (1, 6 + i)).astype(np.int32)
                for i in range(5)]          # different lengths -> staggered pos
-    want = [_sequential_generate(model, params, p, 6, 24) for p in prompts]
+    want = [_sequential_generate(model, params, p, 6, S_MAX) for p in prompts]
 
-    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=24,
+    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
                                 prompt_len=8)
     for i, p in enumerate(prompts):
         batcher.submit(Request(rid=i, tokens=p, max_new=6))
@@ -53,7 +98,7 @@ def test_continuous_batching_matches_sequential():
         assert got[i] == want[i], (i, got[i], want[i])
     # latency accounting sane
     for r in done:
-        assert r.total_ms >= 0 and r.queue_ms >= 0
+        assert r.total_ms >= 0 and r.queue_ms >= 0 and r.ttft_ms >= 0
 
 
 def test_slot_recycling_more_requests_than_slots():
@@ -68,3 +113,170 @@ def test_slot_recycling_more_requests_than_slots():
     done = batcher.run()
     assert sorted(r.rid for r in done) == list(range(n_req))
     assert all(len(r.output) == 4 for r in done)
+
+
+# ---------------------------------------------------------------------------
+# property: chunked batching == isolated sequential runs (the tentpole claim)
+# ---------------------------------------------------------------------------
+@settings(max_examples=EXAMPLES, deadline=None, derandomize=True)
+@given(lengths=st.lists(st.integers(2, 10), min_size=1, max_size=4),
+       max_new=st.integers(1, 6),
+       chunk=st.sampled_from([4, 8]),
+       n_slots=st.integers(1, 3),
+       eos_pick=st.integers(-1, 4))
+def test_property_chunked_matches_sequential(lengths, max_new, chunk,
+                                             n_slots, eos_pick):
+    """Random arrival orders x prompt lengths x budgets x chunk sizes: every
+    request's greedy generation is bit-identical to its isolated sequential
+    run, EOS truncates exactly, slots recycle, nothing leaks across slots."""
+    cfg, model, params = _setup()
+    prompts = [_prompt(L, i, cfg.vocab) for i, L in enumerate(lengths)]
+    want = [_sequential_memo(model, params, p, max_new) for p in prompts]
+
+    batcher = ContinuousBatcher(model, params, n_slots=n_slots, s_max=S_MAX,
+                                chunk_size=chunk)
+    expected = {}
+    for i, p in enumerate(prompts):
+        eos = want[i][eos_pick] if 0 <= eos_pick < len(want[i]) else None
+        expected[i] = _truncate_at_eos(want[i], eos)
+        batcher.submit(Request(rid=i, tokens=p, max_new=max_new, eos_id=eos))
+    done = batcher.run()
+
+    assert sorted(r.rid for r in done) == list(range(len(prompts)))
+    for r in done:
+        assert r.output == expected[r.rid], \
+            (r.rid, lengths, chunk, n_slots, r.output, expected[r.rid])
+    # slots fully recycled, no request left resident
+    assert all(batcher.done) and all(s is None for s in batcher.slots)
+    assert batcher.idle
+    # bucketed admission: every chunk call was full-size
+    assert batcher.metrics.prefill_chunks == sum(
+        bucket_length(L, chunk) // chunk for L in lengths)
+
+
+@settings(max_examples=EXAMPLES, deadline=None, derandomize=True)
+@given(temp=st.floats(0.2, 2.0), top_k=st.integers(0, 16),
+       seed=st.integers(0, 3), chunk=st.sampled_from([0, 4]))
+def test_property_sampling_deterministic(temp, top_k, seed, chunk):
+    """temperature/top-k sampling is deterministic per (seed, rid, position)
+    — two identical schedulers produce identical streams — and every sampled
+    token is a valid vocab id."""
+    cfg, model, params = _setup()
+
+    def run_once():
+        batcher = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
+                                    chunk_size=chunk)
+        for i in range(3):
+            batcher.submit(Request(rid=i, tokens=_prompt(5 + i, i, cfg.vocab),
+                                   max_new=4, temperature=temp, top_k=top_k,
+                                   seed=seed))
+        return {r.rid: r.output for r in batcher.run()}
+
+    a, b = run_once(), run_once()
+    assert a == b
+    for out in a.values():
+        assert len(out) == 4
+        assert all(0 <= t < cfg.padded_vocab for t in out)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill API exactness (model level)
+# ---------------------------------------------------------------------------
+def test_prefill_chunk_bit_identical_to_prefill():
+    """Chunk-by-chunk admission reproduces whole-prompt prefill logits
+    bit-exactly at the last real position, incl. a bucket-padded tail."""
+    from repro.models import transformer as tfm
+    cfg, model, params = _setup()
+    L, C = 11, 4
+    prompt = _prompt(L, 99, cfg.vocab)
+    logits_full, _ = model.prefill(
+        params, {"tokens": jnp.asarray(prompt)}, S_MAX)
+    l_pad = bucket_length(L, C)
+    padded = np.zeros((1, l_pad), np.int32)
+    padded[:, :L] = prompt
+    cache = tfm.make_cache(cfg, 1, S_MAX)
+    for s in range(0, l_pad, C):
+        lg, cache = model.prefill_chunk(
+            params, jnp.asarray(padded[:, s:s + C]), cache, jnp.int32(s))
+    row = lg[0, (L - 1) % C]
+    np.testing.assert_array_equal(np.asarray(logits_full[0, -1]),
+                                  np.asarray(row))
+
+
+def test_decode_continues_during_chunked_admission():
+    """The acceptance criterion: while a long prompt is admitted chunk by
+    chunk, already-running slots keep producing decode tokens every step."""
+    cfg, model, params = _setup()
+    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=48,
+                                chunk_size=4)
+    short = Request(rid=0, tokens=_prompt(4, 0, cfg.vocab), max_new=40)
+    batcher.submit(short)
+    while len(short.output) < 2:
+        batcher.step()
+
+    long_req = Request(rid=1, tokens=_prompt(20, 1, cfg.vocab), max_new=2)
+    before = len(short.output)
+    batcher.submit(long_req)
+    steps = 0
+    while not long_req.output:
+        batcher.step()
+        steps += 1
+    produced = len(short.output) - before
+    n_chunks = bucket_length(20, 4) // 4
+    assert steps == n_chunks, (steps, n_chunks)
+    assert produced >= n_chunks - 1, (produced, n_chunks)
+
+
+def test_chunked_prefill_rejected_for_recurrent_stacks():
+    """SSM state cannot cross padded chunk positions: mamba configs must
+    refuse an explicit chunk size and auto-select whole-prompt admission."""
+    cfg = reduce_for_smoke(get_config("falcon-mamba-7b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    assert not supports_chunked_prefill(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ContinuousBatcher(model, params, n_slots=1, s_max=16, chunk_size=4)
+    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=16)
+    assert batcher.chunk_size == 0
+    batcher.submit(Request(rid=0, tokens=_prompt(5, 0, cfg.vocab), max_new=3))
+    done = batcher.run()
+    assert len(done) == 1 and len(done[0].output) == 3
+    assert batcher.metrics.prefill_full == 1
+
+
+def test_submit_rejects_overlong_prompt():
+    cfg, model, params = _setup()
+    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=8)
+    with pytest.raises(ValueError):
+        batcher.submit(Request(rid=0, tokens=_prompt(8, 0, cfg.vocab)))
+
+
+# ---------------------------------------------------------------------------
+# streaming + metrics
+# ---------------------------------------------------------------------------
+def test_streaming_callbacks_and_metrics():
+    cfg, model, params = _setup()
+    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
+                                chunk_size=4)
+    streamed = {i: [] for i in range(3)}
+    for i in range(3):
+        batcher.submit(Request(
+            rid=i, tokens=_prompt(6 + i, i, cfg.vocab), max_new=4,
+            on_token=lambda r, t, fin: streamed[r.rid].append((t, bool(fin)))))
+    done = batcher.run()
+    for r in done:
+        toks = [t for t, _ in streamed[r.rid]]
+        fins = [f for _, f in streamed[r.rid]]
+        assert toks == r.output                 # streamed == final output
+        assert fins[-1] and not any(fins[:-1])  # finished flag only at end
+
+    m = batcher.metrics.summary()
+    assert m["requests"] == {"submitted": 3, "finished": 3}
+    assert m["tokens"]["generated"] == sum(len(r.output) for r in done) == 12
+    assert m["tokens"]["prompt"] == 6 + 7 + 8
+    assert m["ttft_ms"]["n"] == 3 and m["queue_ms"]["n"] == 3
+    assert m["scheduler"]["decode_steps"] > 0
+    assert 0 < m["scheduler"]["slot_occupancy"] <= 1
+    assert m["throughput"]["tok_per_s"] > 0
+    assert batcher.metrics.format()             # renders without error

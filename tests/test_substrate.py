@@ -87,6 +87,48 @@ def test_checkpoint_ignores_incomplete(tmp_path):
     assert ckpt.latest_step() == 5
 
 
+def test_checkpoint_partial_save_falls_back(tmp_path):
+    """Crash-during-save safety: a partial newest ``step_N`` (fully written
+    host dir, but the process died before the COMPLETE sentinel landed) must
+    be invisible — latest_step/restore serve the previous complete one."""
+    ckpt = Checkpointer(str(tmp_path))
+    state5 = {"w": jnp.arange(6.0).reshape(2, 3), "step": jnp.int32(5)}
+    ckpt.save(5, state5)
+    # a realistic partial step_9: same payload, sentinel deleted (the crash
+    # window is between the tmp->final rename and the sentinel write)
+    ckpt.save(9, {"w": jnp.zeros((2, 3)), "step": jnp.int32(9)})
+    os.remove(tmp_path / "step_9" / "COMPLETE")
+
+    assert ckpt.all_steps() == [5]
+    assert ckpt.latest_step() == 5
+    like = {"w": jnp.zeros((2, 3)), "step": jnp.int32(0)}
+    out = ckpt.restore(ckpt.latest_step(), like)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+    assert int(out["step"]) == 5
+    step, out = ckpt.restore_latest(like)
+    assert step == 5 and int(out["step"]) == 5
+
+
+def test_checkpoint_restore_latest_skips_corrupt(tmp_path):
+    """A sentineled-but-torn checkpoint (corrupt shard file) is skipped with
+    a warning; restore_latest walks back to the previous complete step."""
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, {"w": jnp.full((4,), 1.0)})
+    ckpt.save(2, {"w": jnp.full((4,), 2.0)})
+    (tmp_path / "step_2" / "host_0" / "shards.npz").write_bytes(b"torn")
+    like = {"w": jnp.zeros((4,))}
+    with pytest.warns(RuntimeWarning):
+        step, out = ckpt.restore_latest(like)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.full((4,), 1.0))
+
+    # nothing restorable at all -> (None, like) untouched
+    empty = Checkpointer(str(tmp_path / "empty"))
+    step, out = empty.restore_latest(like)
+    assert step is None and out is like
+
+
 def test_checkpoint_elastic_reshard(tmp_path):
     """Save unsharded, restore with explicit shardings (1-device 'mesh')."""
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
