@@ -1,6 +1,7 @@
-"""Serving bench — scheduler saturation vs offered load + no-stall proof.
+"""Serving bench — scheduler saturation vs offered load + no-stall proof,
+plus the SPMD mesh-scaling sweep.
 
-Two measurements on the reduced smollm config (CPU-sized, CI-friendly):
+Measurements on the reduced smollm config (CPU-sized, CI-friendly):
 
   1. **Load sweep**: submit increasing request counts against a fixed slot
      pool and record tok/s, TTFT/ITL percentiles and slot occupancy per
@@ -12,6 +13,13 @@ Two measurements on the reduced smollm config (CPU-sized, CI-friendly):
      the long prompt's admission start and its first token, for chunked
      vs whole-prompt admission.  Chunked must be > 0 (the acceptance
      criterion); whole-prompt admission is the stalling baseline.
+  3. **Mesh sweep** (``--mesh dp,mp ...``): the paper scales throughput by
+     replicating precision-specific PEs onto a bigger device (§V, Arria 10
+     -> Stratix 10); our analogue is weak-scaling the continuous batcher
+     over the device mesh — per-device decode slots held constant, tok/s of
+     the batched-decode phase recorded per mesh shape.  Needs dp*mp visible
+     devices (CI: XLA_FLAGS=--xla_force_host_platform_device_count=8).
+     Results go to ``--out`` (CI uploads ``BENCH_serving_spmd.json``).
 
 Results print as ``name,value,derived`` CSV lines and are recorded to
 ``--out`` (CI uploads ``BENCH_serving.json`` with the other artifacts).
@@ -34,6 +42,21 @@ from repro.runtime.serving import ContinuousBatcher, Request
 def _setup():
     cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
                               dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _setup_spmd():
+    """Mesh-sweep model: big enough that a decode step is weight-streaming
+    bound (the regime where sharding the batch pays), small enough for CI.
+    The smoke config is dispatch-overhead bound — sharding overhead would
+    swamp the signal."""
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="spmd-bench", n_layers=4, d_model=512, n_heads=8,
+                      n_kv_heads=8, head_dim=64, d_ff=2048, vocab=2048,
+                      dtype="float32", layer_pattern=("attn",),
+                      ffn_pattern=("dense",))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
@@ -101,6 +124,76 @@ def stall_check(cfg, model, params, chunk_size):
     return len(short.output) - before, steps
 
 
+def _run_one_mesh(cfg, model, params, mesh, *, n_slots, decode_iters=16,
+                  chunk=8):
+    """Fill every slot, then time ``decode_iters`` fully-occupied batched
+    decode steps (the phase the dp speedup claim is about).  Admission —
+    which includes the per-slot compiles — happens before the window."""
+    max_new = n_slots + decode_iters + 8   # nobody finishes mid-window
+    batcher = ContinuousBatcher(model, params, n_slots=n_slots,
+                                s_max=chunk + max_new + 1, chunk_size=chunk,
+                                mesh=mesh)
+    rng = np.random.default_rng(7)
+    t_start = time.perf_counter()
+    for r in _mk_requests(cfg, n_slots, rng, lo=4, hi=chunk, max_new=max_new):
+        batcher.submit(r)
+    steps = 0
+    while (batcher.queue or batcher._adm is not None) and steps < 10_000:
+        batcher.step()                     # admission phase (+ compiles)
+        steps += 1
+    batcher.step()                         # one warm full-batch decode step
+
+    before = batcher.metrics.decode_slot_tokens
+    t0 = time.perf_counter()
+    for _ in range(decode_iters):
+        batcher.step()
+    decode_s = time.perf_counter() - t0
+    decode_toks = batcher.metrics.decode_slot_tokens - before
+
+    done = batcher.run()                   # drain
+    wall = time.perf_counter() - t_start
+    assert len(done) == n_slots, (len(done), n_slots)
+    s = batcher.metrics.summary()
+    return {
+        "n_slots": n_slots,
+        "requests": n_slots,
+        "wall_s": wall,
+        "tok_per_s": s["throughput"]["tok_per_s"],
+        "decode_tok_per_s": decode_toks / max(decode_s, 1e-9),
+        "decode_tokens": decode_toks,
+        "decode_phase_s": decode_s,
+        "slot_occupancy": s["scheduler"]["slot_occupancy"],
+    }
+
+
+def mesh_sweep(cfg, model, params, mesh_specs, *, slots_per_dev=4):
+    """Weak-scaling sweep: per-device slots constant, mesh shapes vary."""
+    from repro.launch.mesh import parse_mesh
+    rows = []
+    for spec in mesh_specs:
+        mesh = parse_mesh(spec)
+        dp, mp = mesh.shape["data"], mesh.shape["model"]
+        n_slots = slots_per_dev * dp * mp
+        row = {"mesh": spec, "dp": dp, "mp": mp, "devices": dp * mp}
+        row.update(_run_one_mesh(cfg, model, params, mesh, n_slots=n_slots))
+        rows.append(row)
+        print(f"serving_spmd_{spec.replace(',', 'x')},"
+              f"{row['decode_tok_per_s']:.1f},"
+              f"total={row['tok_per_s']:.1f}tok/s slots={n_slots}")
+    by_mesh = {r["mesh"]: r for r in rows}
+    speedups = {}
+    if "1,1" in by_mesh:
+        base = by_mesh["1,1"]["decode_tok_per_s"]
+        for spec, r in by_mesh.items():
+            if spec != "1,1":
+                speedups[f"decode_x_{spec.replace(',', 'x')}_vs_1x1"] = \
+                    r["decode_tok_per_s"] / max(base, 1e-9)
+    for name, v in speedups.items():
+        print(f"serving_spmd_speedup_{name},{v:.2f},weak_scaling")
+    return {"slots_per_device": slots_per_dev, "rows": rows,
+            "speedups": speedups}
+
+
 def main(out=None, loads=(2, 4, 8)):
     cfg, model, params = _setup()
     rows = load_sweep(cfg, model, params, loads=tuple(loads))
@@ -131,9 +224,33 @@ def main(out=None, loads=(2, 4, 8)):
     return result
 
 
+def main_spmd(mesh_specs, out=None, slots_per_dev=4):
+    cfg, model, params = _setup_spmd()
+    if "1,1" not in mesh_specs:
+        mesh_specs = ["1,1"] + list(mesh_specs)    # scaling baseline
+    result = {"mesh_sweep": mesh_sweep(cfg, model, params, mesh_specs,
+                                       slots_per_dev=slots_per_dev)}
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    return result
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=None, help="write BENCH_serving.json here")
+    ap.add_argument("--out", default=None, help="write BENCH_serving.json "
+                    "(or BENCH_serving_spmd.json with --mesh) here")
     ap.add_argument("--loads", type=int, nargs="*", default=[2, 4, 8])
+    ap.add_argument("--mesh", nargs="*", default=None, metavar="DP,MP",
+                    help="run the SPMD mesh-scaling sweep instead of the "
+                         "load sweep; '--mesh' alone sweeps 1,1 2,1 8,1 "
+                         "(needs XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 on CPU)")
+    ap.add_argument("--slots-per-dev", type=int, default=4)
     a = ap.parse_args()
-    main(out=a.out, loads=a.loads)
+    if a.mesh is not None:
+        specs = a.mesh or ["1,1", "2,1", "8,1"]
+        main_spmd(specs, out=a.out, slots_per_dev=a.slots_per_dev)
+    else:
+        main(out=a.out, loads=a.loads)

@@ -446,9 +446,16 @@ def autotune_matmul(cfg: PrecisionConfig, m: int, n: int, k: int, *,
                            candidates=candidates, force=force)
 
 
-def model_matmul_shapes(model_cfg) -> set:
+def model_matmul_shapes(model_cfg, tp: int = 1) -> set:
     """(N, K) pairs of every qlinear in a transformer-family ModelConfig —
-    the shapes serving will hit (attention projections + FFN)."""
+    the shapes serving will hit (attention projections + FFN).
+
+    ``tp`` > 1 yields the PER-DEVICE shard shapes under the model-axis
+    sharding policy of parallel/sharding.py: output-sharded projections
+    (wq/wk/wv, w_up/w_gate) shrink N -> N/tp, contraction-sharded ones
+    (wo, w_down) shrink K -> K/tp — each ONLY when the relevant head count /
+    hidden dim divides tp (otherwise that matrix replicates and keeps its
+    global shape)."""
     shapes = set()
     d = getattr(model_cfg, "d_model", None)
     if not d:
@@ -457,24 +464,78 @@ def model_matmul_shapes(model_cfg) -> set:
     kv = getattr(model_cfg, "n_kv_heads", h)
     dh = getattr(model_cfg, "dh", 0)
     f = getattr(model_cfg, "d_ff", 0)
+
+    def div(n):
+        return tp > 1 and n > 0 and n % tp == 0
+
     if h and dh:
-        shapes |= {(h * dh, d), (kv * dh, d), (d, h * dh)}
+        q_n = h * dh // tp if div(h) else h * dh          # wq: N-sharded
+        kv_n = kv * dh // tp if div(kv) else kv * dh      # wk/wv: N-sharded
+        o_k = h * dh // tp if div(h) else h * dh          # wo: K-sharded
+        shapes |= {(q_n, d), (kv_n, d), (d, o_k)}
     if f:
-        shapes |= {(f, d), (d, f)}
+        f_loc = f // tp if div(f) else f
+        shapes |= {(f_loc, d), (d, f_loc)}                # w_up/gate | w_down
     return shapes
 
 
+def _tunable_k(pcfg: PrecisionConfig, k: int) -> bool:
+    """Whether a matmul with contraction length ``k`` has Pallas tiles to
+    tune under ``pcfg`` (packed int32 storage; unpacked int8-codes fallback
+    and float weights dispatch to jnp and ignore tiles)."""
+    if pcfg.w_mode == W_FLOAT:
+        return False
+    bits = weight_bits(pcfg)
+    packable = ((pcfg.pack_weights or pcfg.w_mode == W_BINARY)
+                and 32 % bits == 0)
+    return packable and k % (32 // bits) == 0
+
+
+def serving_tune_plan(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
+                      chunk_size: int, mesh=None) -> list:
+    """The (M, N, K) shape classes the continuous batcher will dispatch —
+    what :func:`tune_serving_shapes` sweeps.
+
+    Without a mesh: ``chunk_size`` rows per prefill chunk and ``n_slots``
+    rows per decode step, against the model's global (N, K) grid.  With a
+    mesh the plan ADDS the per-device shard shapes: the decode batch shards
+    over the data axes (local M = n_slots / dp; the batch-1 admission chunk
+    stays M = chunk_size), and tensor-parallel layers hold local N or K
+    divided by the model-axis size (pure-DP models keep tp = 1).  The
+    global-shape keys stay in the plan — today's pjit step functions trace
+    qmatmul with global shapes (the partitioner splits the XLA-backend ops);
+    the local keys are what a shard_map'd Pallas dispatch looks up
+    (ROADMAP open item)."""
+    plan = set()
+    for (n, k) in model_matmul_shapes(model_cfg):
+        for m in (int(chunk_size), int(n_slots)):
+            plan.add((m, n, k))            # global: today's pjit dispatch
+    if mesh is not None:
+        from repro.parallel.sharding import serving_shard_factors
+        dp, tp = serving_shard_factors(model_cfg, mesh, n_slots)
+        for (n, k) in model_matmul_shapes(model_cfg, tp=tp):
+            for m in (int(chunk_size), max(1, int(n_slots) // dp)):
+                plan.add((m, n, k))        # per-device: shard_map dispatch
+    return sorted(plan)
+
+
 def tune_serving_shapes(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
-                        chunk_size: int, backend: Optional[str] = None,
+                        chunk_size: int, mesh=None,
+                        backend: Optional[str] = None,
                         candidates=None, iters: int = 2) -> list:
-    """Pre-tune the exact M-row buckets the continuous batcher dispatches:
-    ``chunk_size`` rows per prefill chunk (prompts pad to chunk multiples, so
-    every chunk call is full-size) and ``n_slots`` rows per decode step.
-    With these entries warm, the serving loop never sees a tuning-cache miss
-    — the scheduler's shape bucketing and this sweep share the same grid."""
-    m_rows = tuple(sorted({int(n_slots), int(chunk_size)}))
-    return tune_model_shapes(model_cfg, pcfg, m_rows=m_rows, backend=backend,
-                             candidates=candidates, iters=iters)
+    """Pre-tune the exact M-row buckets the continuous batcher dispatches
+    (see :func:`serving_tune_plan` — with ``mesh``, per-device shard shapes
+    alongside the global ones).  With these entries warm, the serving loop
+    never sees a tuning-cache miss — the scheduler's shape bucketing and
+    this sweep share the same grid."""
+    out = []
+    for (m, n, k) in serving_tune_plan(model_cfg, pcfg, n_slots=n_slots,
+                                       chunk_size=chunk_size, mesh=mesh):
+        if not _tunable_k(pcfg, k):
+            continue                       # unpacked storage: nothing to tune
+        out.append(autotune_matmul(pcfg, m, n, k, backend=backend,
+                                   candidates=candidates, iters=iters))
+    return out
 
 
 def tune_model_shapes(model_cfg, pcfg: PrecisionConfig, *, m_rows=(8, 128),
@@ -482,14 +543,9 @@ def tune_model_shapes(model_cfg, pcfg: PrecisionConfig, *, m_rows=(8, 128),
                       iters: int = 2) -> list:
     """Pre-tune every (M, N, K) a model's serving path will dispatch, so the
     serving process itself only ever hits the cache.  Returns the entries."""
-    if pcfg.w_mode == W_FLOAT:
-        return []
-    bits = weight_bits(pcfg)
-    packable = ((pcfg.pack_weights or pcfg.w_mode == W_BINARY)
-                and 32 % bits == 0)
     out = []
     for (n, k) in sorted(model_matmul_shapes(model_cfg)):
-        if not packable or k % (32 // bits):
+        if not _tunable_k(pcfg, k):
             continue                       # unpacked storage: nothing to tune
         for m in m_rows:
             out.append(autotune_matmul(pcfg, m, n, k, backend=backend,

@@ -37,6 +37,9 @@ DEFAULT_BLOCK: Block = (128, 128, 512)
 # is lazy so importing the engine never touches the filesystem.
 _cache: Optional[Dict[str, dict]] = None
 _cache_src: Optional[str] = None
+# keys this process actually MEASURED (vs merely loaded from disk): only
+# these may overwrite a concurrent writer's fresher on-disk entry in _save
+_dirty: set = set()
 
 _STATS = {"hits": 0, "misses": 0, "sweeps": 0}
 
@@ -62,11 +65,8 @@ def _sane_entry(entry) -> bool:
             and all(isinstance(v, int) and v > 0 for v in block))
 
 
-def _load() -> Dict[str, dict]:
-    global _cache, _cache_src
-    path = cache_path()
-    if _cache is not None and _cache_src == path:
-        return _cache
+def _read_entries(path: str) -> Dict[str, dict]:
+    """Sane entries currently on disk (no in-memory cache involvement)."""
     entries: Dict[str, dict] = {}
     try:
         with open(path) as f:
@@ -81,21 +81,42 @@ def _load() -> Dict[str, dict]:
         # unreadable or torn JSON (e.g. a writer killed mid-write on a
         # filesystem without atomic rename): serve from defaults
         entries = {}
-    _cache, _cache_src = entries, path
+    return entries
+
+
+def _load() -> Dict[str, dict]:
+    global _cache, _cache_src
+    path = cache_path()
+    if _cache is not None and _cache_src == path:
+        return _cache
+    _cache, _cache_src = _read_entries(path), path
     return _cache
 
 
 def _save() -> None:
+    global _cache
     path = cache_path()
     try:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
+        # Merge-on-write: another process may have tuned (and persisted)
+        # different shape classes since we loaded — a blind read-modify-write
+        # would drop its entries (last writer wins).  Re-read the file under
+        # the atomic replace and union it with our in-memory entries.  On a
+        # key conflict, our entry wins only if we MEASURED it this session
+        # (``_dirty``) — entries we merely loaded at startup must not
+        # resurrect over a concurrent re-tune's fresher measurement.
+        merged = _read_entries(path)
+        for key, entry in _load().items():
+            if key in _dirty or key not in merged:
+                merged[key] = entry
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"version": 1, "entries": _load()}, f, indent=1,
+            json.dump({"version": 1, "entries": merged}, f, indent=1,
                       sort_keys=True)
         os.replace(tmp, path)
+        _cache = merged
     except OSError as e:
         # unwritable cache: tuned tiles still serve from memory this process;
         # they just won't persist for the next one
@@ -107,6 +128,7 @@ def reset(clear_stats: bool = True) -> None:
     """Drop the in-memory cache (tests; forces re-read of the JSON file)."""
     global _cache, _cache_src
     _cache, _cache_src = None, None
+    _dirty.clear()
     if clear_stats:
         for k in _STATS:
             _STATS[k] = 0
@@ -246,6 +268,7 @@ def autotune(m: int, n: int, k: int, *, kind: str, a_bits: int, w_bits: int,
     entry = {"block": best["block"], "us": best["us"],
              "default_us": default_us, "swept": swept}
     cache[key] = entry
+    _dirty.add(key)
     if persist:
         _save()
     return entry

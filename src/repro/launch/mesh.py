@@ -32,3 +32,25 @@ def make_mesh(n_data: int, n_model: int, n_pod: int = 1):
 def data_axes(mesh) -> tuple:
     """Axes that shard the batch (pod joins data when present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def parse_mesh(spec):
+    """``--mesh dp,mp`` -> a ('data', 'model') Mesh (e.g. "2,4"; "1,1" is a
+    single-device mesh, the sharded batcher's exactness baseline).  ``None``
+    or empty returns None (single-device, unsharded serving path)."""
+    if spec in (None, "", "none"):
+        return None
+    try:
+        dp, mp = (int(v) for v in str(spec).split(","))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects 'dp,mp' (e.g. '2,4'), got {spec!r}") from None
+    if dp < 1 or mp < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got {spec!r}")
+    have = len(jax.devices())
+    if dp * mp > have:
+        raise ValueError(
+            f"--mesh {spec} needs {dp * mp} devices but only {have} are "
+            "visible (set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "for a virtual CPU mesh)")
+    return make_mesh(dp, mp)

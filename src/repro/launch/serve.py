@@ -83,13 +83,20 @@ def _legacy_loop(model, params, cfg, args):
     return toks
 
 
-def _batcher_loop(model, params, cfg, args):
-    """Continuous batching through the scheduler v2."""
+def _batcher_loop(model, params, cfg, args, mesh=None):
+    """Continuous batching through the scheduler v2 (SPMD when --mesh)."""
     s_max = args.prompt_len + args.gen
     batcher = ContinuousBatcher(
         model, params, n_slots=args.slots or args.requests, s_max=s_max,
         prompt_len=args.prompt_len, chunk_size=args.chunk_size,
-        autotune=args.autotune)
+        autotune=args.autotune, mesh=mesh)
+    if mesh is not None:
+        from repro.parallel.sharding import serving_shard_factors
+        dp, tp = serving_shard_factors(cfg, mesh, batcher.n_slots)
+        print(f"SPMD serving on mesh data={mesh.shape['data']} "
+              f"model={mesh.shape['model']}: decode batch sharded {dp}-way, "
+              f"tensor-parallel {tp}-way "
+              f"({'pure-DP (params replicated)' if tp == 1 else 'TP'})")
     if batcher.chunk_size:
         print(f"chunked prefill: chunk={batcher.chunk_size}, prompt buckets "
               f"= multiples of {batcher.chunk_size} (1 compiled chunk shape)")
@@ -151,7 +158,14 @@ def main(argv=None):
                     help="pre-tune Pallas tiles for the scheduler's shape "
                          "buckets (persists to the tuning cache; serving "
                          "then never re-tunes)")
+    ap.add_argument("--mesh", default=None, metavar="DP,MP",
+                    help="serve SPMD over a (data, model) device mesh, e.g. "
+                         "'2,4' (token-LM batcher path only; needs dp*mp "
+                         "visible devices)")
     args = ap.parse_args(argv)
+
+    from repro.launch.mesh import parse_mesh
+    mesh = parse_mesh(args.mesh)
 
     cfg = get_config(args.arch, precision=args.precision, kv_bits=args.kv_bits)
     if args.reduced:
@@ -159,15 +173,26 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     base_bytes = serving_param_bytes(params)
-    params = to_serving(params, cfg, tp=1)
+    # pack under per-shard K alignment only when TP will actually shard the
+    # params: pure-DP models replicate (tp=1 keeps the laxer global
+    # alignment -> packed words, not the int8-codes fallback), and the
+    # legacy embeds/enc-dec loop serves single-device regardless of --mesh
+    pack_tp = 1
+    if mesh is not None and cfg.kind == "lm" and cfg.frontend != "embeds":
+        from repro.parallel.sharding import pure_dp
+        pack_tp = 1 if pure_dp(cfg, mesh) else mesh.shape["model"]
+    params = to_serving(params, cfg, tp=pack_tp)
     packed_bytes = serving_param_bytes(params)
     print(f"weights: {base_bytes/1e6:.1f} MB bf16-form -> "
           f"{packed_bytes/1e6:.1f} MB {args.precision} serving form "
           f"({base_bytes/packed_bytes:.2f}x smaller)")
 
     if cfg.kind != "lm" or cfg.frontend == "embeds":
+        if mesh is not None:
+            print("--mesh: legacy (embeds/enc-dec) loop is single-device; "
+                  "ignoring the mesh")
         return _legacy_loop(model, params, cfg, args)
-    return _batcher_loop(model, params, cfg, args)
+    return _batcher_loop(model, params, cfg, args, mesh=mesh)
 
 
 if __name__ == "__main__":

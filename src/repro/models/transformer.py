@@ -149,14 +149,24 @@ def forward(params, inputs, cfg: ModelConfig, remat: bool = True):
     return _logits(params, x, cfg), jnp.sum(auxes)
 
 
-def make_cache(cfg: ModelConfig, b: int, s_max: int):
-    """Stacked per-period cache pytree (periods as leading axis)."""
+def make_cache(cfg: ModelConfig, b: int, s_max: int, mesh=None):
+    """Stacked per-period cache pytree (periods as leading axis).
+
+    With ``mesh``, leaves are created directly under the serving cache
+    shardings (batch over the data axes, KV heads over 'model' when they
+    divide) — no replicated host allocation followed by a reshard.  The
+    sequence-parallel fallback is disabled: serving appends KV at dynamic
+    positions, so the sequence dim must stay local to one shard."""
     per = {}
     for i, mixer in enumerate(cfg.layer_pattern):
         if mixer.startswith("attn"):
             per[f"layer_{i}"] = L.make_kv_cache(cfg, b, s_max, stacked=cfg.n_periods)
         elif mixer == "mamba":
             per[f"layer_{i}"] = L.make_ssm_state(cfg, b, stacked=cfg.n_periods)
+    if mesh is not None:
+        from repro.parallel.sharding import cache_specs, named_shardings
+        per = jax.device_put(per, named_shardings(
+            mesh, cache_specs(per, cfg, mesh, b, allow_sp=False)))
     return per
 
 

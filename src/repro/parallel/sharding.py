@@ -158,7 +158,7 @@ def batch_specs(batch, cfg: ModelConfig, mesh: Mesh):
 
 
 def cache_specs(cache, cfg: ModelConfig, mesh: Mesh, batch: int,
-                kv_seq_shard: bool = False):
+                kv_seq_shard: bool = False, allow_sp: bool = True):
     """KV/SSM cache specs.  Batch over data axes when divisible; otherwise
     sequence-parallel: shard the cache length (long_500k, B=1).
 
@@ -166,12 +166,17 @@ def cache_specs(cache, cfg: ModelConfig, mesh: Mesh, batch: int,
     kv=2, starcoder2 kv=4, ... vs tp=16) the baseline replicates the cache
     16x.  This option shards the cache SEQUENCE over the otherwise-idle
     'model' axis instead — attention over a sharded KV length lowers to
-    partial-softmax reductions (EXPERIMENTS.md §Perf glm4 iteration)."""
+    partial-softmax reductions (EXPERIMENTS.md §Perf glm4 iteration).
+
+    ``allow_sp=False`` disables the sequence-parallel fallback entirely: the
+    continuous batcher appends KV rows at dynamic positions
+    (dynamic_update_slice over the sequence dim), which must stay local to
+    one shard — its admission cache (batch=1) replicates instead."""
     tp = _axis(mesh, "model")
     baxes = _batch_axes(cfg, mesh, batch)
     # SP fallback axes for the sequence dim (never includes 'model' when the
     # model axis carries TP)
-    sp_axes = _dx(cfg, mesh)
+    sp_axes = _dx(cfg, mesh) if allow_sp else ()
     kv_ok = (not pure_dp(cfg, mesh)) and \
         (_div(cfg.n_kv_heads, tp) if cfg.n_kv_heads else False)
 
@@ -212,3 +217,28 @@ def cache_specs(cache, cfg: ModelConfig, mesh: Mesh, batch: int,
 def logits_spec(cfg: ModelConfig, mesh: Mesh, batch: int):
     vspec = None if pure_dp(cfg, mesh) else _model_if(cfg.padded_vocab, mesh)
     return P(_batch_axes(cfg, mesh, batch), None, vspec)
+
+
+def named_shardings(mesh: Mesh, specs):
+    """PartitionSpec pytree -> NamedSharding pytree (jit in/out_shardings,
+    device_put targets)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def serving_shard_factors(cfg: ModelConfig, mesh: Mesh, n_slots: int):
+    """(dp, tp) the continuous batcher actually achieves on ``mesh``:
+
+    ``dp`` — how many ways the ``n_slots`` decode batch is sharded (product
+    of the dividing batch axes; for pure-DP models that includes the 'model'
+    axis).  ``tp`` — the model-axis size when TP applies (1 for pure-DP
+    models, whose params replicate).  The engine's serving pre-tune uses
+    these to key the tuning cache on PER-DEVICE shapes: local decode rows
+    M = n_slots/dp and local layer dims N or K divided by tp."""
+    baxes = _batch_axes(cfg, mesh, n_slots)
+    dp = 1
+    for a in (baxes or ()):
+        dp *= _axis(mesh, a)
+    tp = 1 if pure_dp(cfg, mesh) else _axis(mesh, "model")
+    return dp, tp

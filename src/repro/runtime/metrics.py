@@ -21,13 +21,17 @@ def _pcts(samples: List[float]) -> Dict[str, float]:
     if not samples:
         return {f"p{p}": 0.0 for p in PERCENTILES} | {"mean": 0.0, "n": 0}
     xs = sorted(samples)
+    n = len(xs)
     out = {}
     for p in PERCENTILES:
-        # nearest-rank on the sorted sample (no numpy needed on the hot path)
-        idx = min(len(xs) - 1, max(0, int(round(p / 100 * (len(xs) - 1)))))
-        out[f"p{p}"] = xs[idx]
-    out["mean"] = sum(xs) / len(xs)
-    out["n"] = len(xs)
+        # canonical nearest-rank (inverted CDF): 1-indexed rank ceil(p/100*n)
+        # — matches numpy.percentile(..., method="inverted_cdf").  (The old
+        # round(p/100*(n-1)) drifted a rank high whenever the fraction hit
+        # .5: p50 of 4 samples gave the 3rd-smallest, not the 2nd.)
+        rank = -(-p * n // 100)               # ceil(p*n/100) in ints
+        out[f"p{p}"] = xs[min(n - 1, max(0, int(rank) - 1))]
+    out["mean"] = sum(xs) / n
+    out["n"] = n
     return out
 
 
@@ -59,7 +63,8 @@ class Metrics:
         self.decode_slot_tokens = 0
         self.prefill_chunks = 0
         self.prefill_full = 0
-        self._t0: Optional[float] = None
+        self._t0: Optional[float] = None           # first ADMISSION (compute)
+        self._t0_submit: Optional[float] = None    # first submit (queue open)
         self._t1: Optional[float] = None
 
     # ------------------------------------------------------------- recording
@@ -71,7 +76,14 @@ class Metrics:
 
     def on_submit(self, req) -> None:
         self.requests_submitted += 1
-        self._touch()
+        # submits open the SUBMIT window only: the throughput wall-clock
+        # (_t0) starts at the first admission, and a submit never advances
+        # the window END either — tok/s must not amortize queue-idle time,
+        # neither before any compute ran nor after the last token (both
+        # windows are reported by summary() so bench history stays
+        # comparable)
+        if self._t0_submit is None:
+            self._t0_submit = time.time()
 
     def on_admit(self, req) -> None:
         self.queue_ms.append((req.started_at - req.submitted_at) * 1e3)
@@ -94,12 +106,24 @@ class Metrics:
     # --------------------------------------------------------------- summary
     @property
     def wall_s(self) -> float:
+        """Serving window: first ADMISSION -> last event.  Excludes pure
+        queue-idle time before any compute ran (requests submitted into an
+        idle scheduler no longer deflate tok/s)."""
         if self._t0 is None or self._t1 is None:
             return 0.0
         return self._t1 - self._t0
 
+    @property
+    def wall_since_submit_s(self) -> float:
+        """Legacy window: first SUBMIT -> last event (what summary() reported
+        before the admission-window fix; kept for bench comparability)."""
+        if self._t0_submit is None or self._t1 is None:
+            return 0.0
+        return self._t1 - self._t0_submit
+
     def summary(self) -> dict:
         wall = max(self.wall_s, 1e-9)
+        wall_sub = max(self.wall_since_submit_s, 1e-9)
         decode_cap = max(self.decode_steps * max(self.n_slots, 1), 1)
         return {
             "requests": {"submitted": self.requests_submitted,
@@ -109,9 +133,17 @@ class Metrics:
             "ttft_ms": _pcts(self.ttft_ms),
             "itl_ms": _pcts(self.itl_ms),
             "throughput": {
+                # primary window starts at the first admission (compute)
+                "window": "admission",
                 "wall_s": self.wall_s,
                 "tok_per_s": self.tokens_out / wall,
                 "req_per_s": self.requests_finished / wall,
+                # legacy submit-anchored window, for bench-history continuity
+                "since_submit": {
+                    "wall_s": self.wall_since_submit_s,
+                    "tok_per_s": self.tokens_out / wall_sub,
+                    "req_per_s": self.requests_finished / wall_sub,
+                },
             },
             "scheduler": {
                 "decode_steps": self.decode_steps,

@@ -19,8 +19,15 @@ Production serving loop around the model's prefill/decode step functions:
 The scheduler is host-side and model-agnostic: it owns a padded
 (slots, s_max) cache built once and re-used; joins happen by writing a newly
 prefilled request's KV into its slot (jax dynamic_update_slice on the batch
-axis).  On a pod the same loop runs with the sharded step functions — the
-cache lives sharded on device (DESIGN.md §5).
+axis).  With ``mesh`` the same loop runs SPMD (DESIGN.md §5): params are
+sharded with ``param_specs``, the slot cache with ``cache_specs`` (batch
+over the data axes, KV heads over 'model' when they divide), logits with
+``logits_spec``, and the three step functions are jit-compiled with explicit
+``in_shardings``/``out_shardings`` so the cache never leaves the device mesh
+between steps.  The admission (batch=1) cache replicates — chunk appends are
+dynamic_update_slice over the sequence dim and must stay shard-local —
+while the slot join is a per-slot compiled write (static slot index, so the
+partitioner lowers it without gathering the sharded batch dim).
 
 Exactness contract: with greedy sampling, generations are bit-identical to
 isolated sequential runs for attention-only stacks (the property suite in
@@ -106,13 +113,21 @@ class ContinuousBatcher:
     def __init__(self, model, params, *, n_slots: int, s_max: int,
                  prompt_len: Optional[int] = None,
                  chunk_size: Optional[int] = None,
-                 autotune: bool = False, metrics: Optional[Metrics] = None):
+                 autotune: bool = False, metrics: Optional[Metrics] = None,
+                 mesh=None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.s_max = s_max
         self.prompt_len = prompt_len or s_max
+        self.mesh = mesh
         cfg = model.cfg
+        if mesh is not None:
+            from repro.parallel import sharding as shd
+            self._shd = shd
+            self._psh = shd.named_shardings(
+                mesh, shd.param_specs(params, cfg, mesh))
+            self.params = jax.device_put(params, self._psh)
 
         # ---- chunked-prefill configuration -------------------------------
         chunkable = (supports_chunked_prefill(cfg)
@@ -133,12 +148,15 @@ class ContinuousBatcher:
             # Pre-tune the Pallas tiles for every matmul shape this model's
             # chunk-prefill/decode will dispatch, so the serving loop itself
             # only ever *hits* the tuning cache (never sweeps mid-request).
+            # The mesh shrinks the tuned shapes to per-device shards: local
+            # decode rows M = n_slots/dp and TP-local layer dims N, K / tp.
             from repro.core.precision import get_precision, signed
             from repro.kernels import engine
             engine.tune_serving_shapes(
                 cfg, signed(get_precision(cfg.precision)),
                 n_slots=n_slots,
-                chunk_size=self.chunk_size or self.prompt_len)
+                chunk_size=self.chunk_size or self.prompt_len,
+                mesh=mesh)
 
         self.metrics = metrics if metrics is not None else Metrics(n_slots)
         self.queue: Deque[Request] = deque()
@@ -150,20 +168,33 @@ class ContinuousBatcher:
         self._just_finished: List[Request] = []
 
         from repro.models import transformer as tfm
-        self._make_cache = lambda b, s: tfm.make_cache(cfg, b, s)
+        self._make_cache = lambda b, s: tfm.make_cache(cfg, b, s, mesh=mesh)
         self.cache = self._make_cache(n_slots, s_max)
-        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        # host-side next-token buffer; placed (sharded) at each decode call
+        self.tokens = np.zeros((n_slots, 1), np.int32)
 
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, self.s_adm))
-        self._decode = jax.jit(
-            lambda p, t, c, pos_vec: model.decode_step(p, t, c, pos_vec))
-        if self.chunk_size:
-            # the admission cache is dead after each chunk (reassigned from
-            # the output) — donate it so chunk appends update in place
-            self._prefill_chunk = jax.jit(
-                lambda p, t, c, pos: model.prefill_chunk(p, t, c, pos),
-                donate_argnums=(2,))
+        # decode fuses the greedy argmax into the step program: one dispatch
+        # per step and only a (B,) token vector crosses back to the host
+        # (sampling slots still read their logits row on demand); the slot
+        # cache is donated — the step updates it in place instead of
+        # memcpy-ing the whole cache every token
+        def _decode_fn(p, t, c, pos_vec):
+            logits, new_cache = model.decode_step(p, t, c, pos_vec)
+            return logits, jnp.argmax(logits[:, 0], axis=-1), new_cache
+
+        self._decode_fn = _decode_fn
+        if mesh is None:
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, self.s_adm))
+            self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+            if self.chunk_size:
+                # the admission cache is dead after each chunk (reassigned
+                # from the output) — donate it so appends update in place
+                self._prefill_chunk = jax.jit(
+                    lambda p, t, c, pos: model.prefill_chunk(p, t, c, pos),
+                    donate_argnums=(2,))
+        else:
+            self._jit_sharded(model, cfg, mesh)
 
         # per-slot cache writer: copy a 1-batch cache into slot i (the
         # admission cache may be longer than the slot cache — slice first)
@@ -174,10 +205,62 @@ class ContinuousBatcher:
                 return jax.lax.dynamic_update_slice(
                     c, o.astype(c.dtype), (0, i) + (0,) * (c.ndim - 2))
             return jax.tree_util.tree_map(upd, cache, one)
-        self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
+        if mesh is None:
+            self._write_slot = jax.jit(write_slot, donate_argnums=(0,))
+        else:
+            # static slot index: the update start on the sharded batch dim is
+            # compile-time known, so the partitioner keeps the write local to
+            # the owning shard (no gather of the slot cache)
+            self._write_slot = jax.jit(
+                write_slot, donate_argnums=(0,), static_argnums=(2,),
+                in_shardings=(self._slot_cache_sh, self._adm_cache_sh),
+                out_shardings=self._slot_cache_sh)
+
+    def _jit_sharded(self, model, cfg, mesh):
+        """SPMD jit wiring: explicit in/out shardings for the three compiled
+        step functions, derived from parallel/sharding.py's serving specs."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models import transformer as tfm
+        shd = self._shd
+        rep = NamedSharding(mesh, P())
+
+        # slot cache: batch over data axes; admission cache (B=1) replicated
+        self._slot_cache_sh = shd.named_shardings(mesh, shd.cache_specs(
+            jax.eval_shape(lambda: tfm.make_cache(cfg, self.n_slots, self.s_max)),
+            cfg, mesh, self.n_slots, allow_sp=False))
+        adm_tmpl = jax.eval_shape(lambda: tfm.make_cache(cfg, 1, self.s_adm))
+        self._adm_cache_sh = shd.named_shardings(mesh, shd.cache_specs(
+            adm_tmpl, cfg, mesh, 1, allow_sp=False))
+
+        baxes = shd._batch_axes(cfg, mesh, self.n_slots)
+        tok_sh = NamedSharding(mesh, P(baxes, None))
+        pos_sh = NamedSharding(mesh, P(baxes))
+        dec_logits_sh = NamedSharding(mesh, shd.logits_spec(cfg, mesh, self.n_slots))
+        one_logits_sh = NamedSharding(mesh, shd.logits_spec(cfg, mesh, 1))
+
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, self.s_adm),
+            in_shardings=(self._psh, {"tokens": rep}),
+            out_shardings=(one_logits_sh, self._adm_cache_sh))
+        self._decode = jax.jit(
+            self._decode_fn, donate_argnums=(2,),
+            in_shardings=(self._psh, tok_sh, self._slot_cache_sh, pos_sh),
+            out_shardings=(dec_logits_sh, pos_sh, self._slot_cache_sh))
+        if self.chunk_size:
+            self._prefill_chunk = jax.jit(
+                lambda p, t, c, pos: model.prefill_chunk(p, t, c, pos),
+                donate_argnums=(2,),
+                in_shardings=(self._psh, rep, self._adm_cache_sh, rep),
+                out_shardings=(one_logits_sh, self._adm_cache_sh))
 
     # ---------------------------------------------------------------- submit
     def submit(self, req: Request):
+        if req.tokens.size == 0 or req.tokens.shape[-1] < 1:
+            # bucket_length(0, chunk) == 0 would produce a zero-length
+            # admission (no chunks, no first token) — reject up front
+            raise ValueError(
+                f"request {req.rid}: empty prompt (0 tokens); prompts must "
+                "contain at least one token")
         if req.tokens.shape[-1] >= self.s_max:
             raise ValueError(
                 f"request {req.rid}: prompt length {req.tokens.shape[-1]} "
@@ -237,7 +320,7 @@ class ContinuousBatcher:
             self._finish(req, slot)
             return
         self.cache = self._write_slot(self.cache, one_cache, slot)
-        self.tokens = self.tokens.at[slot, 0].set(tok)
+        self.tokens[slot, 0] = tok
         self.pos[slot] = length
         self.done[slot] = False
 
@@ -299,10 +382,11 @@ class ContinuousBatcher:
         else:
             self._admit_full()
         if not all(self.done):
-            logits, self.cache = self._decode(
-                self.params, self.tokens, self.cache, jnp.asarray(self.pos))
+            logits, greedy_dev, self.cache = self._decode(
+                self.params, jnp.asarray(self.tokens), self.cache,
+                jnp.asarray(self.pos))
             self.metrics.decode_steps += 1
-            greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            greedy = np.asarray(greedy_dev, np.int32)
             for i, req in enumerate(self.slots):
                 if req is None or self.done[i]:
                     continue
@@ -317,7 +401,7 @@ class ContinuousBatcher:
                 if full:
                     self._finish(req, i)
                 else:
-                    self.tokens = self.tokens.at[i, 0].set(tok)
+                    self.tokens[i, 0] = tok
         finished, self._just_finished = self._just_finished, []
         return finished
 

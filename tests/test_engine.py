@@ -388,3 +388,111 @@ def test_model_matmul_shapes():
     cfg = get_config("smollm-135m")
     assert (cfg.d_ff, cfg.d_model) in shapes
     assert (cfg.d_model, cfg.n_heads * cfg.dh) in shapes
+
+
+def test_save_merges_concurrent_writers(tmp_cache):
+    """Two processes tuning different shape classes must not drop each
+    other's entries: _save re-reads the file under the atomic replace and
+    unions it with the in-memory entries (ours win on conflicts)."""
+    # process A: loads (empty) cache, tunes key A
+    tuning.autotune(8, 128, 256, kind=W_TERNARY, a_bits=2, w_bits=2,
+                    backend="pallas", measure=lambda b: 1.0,
+                    candidates=[(8, 128, 128)])
+    key_a = tuning.cache_key(W_TERNARY, 2, 2, "pallas", 8, 128, 256)
+
+    # process B persisted a different key while A was sweeping: simulate by
+    # rewriting the file behind A's in-memory cache
+    key_b = tuning.cache_key(W_TERNARY, 2, 2, "pallas", 8, 512, 256)
+    entry_b = {"block": [8, 512, 128], "us": 1.0, "default_us": 2.0}
+    tmp_cache.write_text(json.dumps(
+        {"version": 1, "entries": {key_b: entry_b}}))
+
+    # A tunes (and saves) another key: B's entry must survive on disk
+    tuning.autotune(8, 256, 256, kind=W_TERNARY, a_bits=2, w_bits=2,
+                    backend="pallas", measure=lambda b: 1.0,
+                    candidates=[(8, 256, 128)])
+    key_c = tuning.cache_key(W_TERNARY, 2, 2, "pallas", 8, 256, 256)
+    on_disk = json.loads(tmp_cache.read_text())["entries"]
+    assert set(on_disk) == {key_a, key_b, key_c}
+    assert on_disk[key_b]["block"] == [8, 512, 128]
+
+    # conflict case: the writer's own (fresh) measurement wins over disk
+    mine = list(tuning._load()[key_a]["block"])
+    data = json.loads(tmp_cache.read_text())
+    data["entries"][key_a] = dict(entry_b, block=[16, 128, 512])  # foreign
+    tmp_cache.write_text(json.dumps(data))
+    tuning.autotune(8, 1024, 256, kind=W_TERNARY, a_bits=2, w_bits=2,
+                    backend="pallas", measure=lambda b: 1.0,
+                    candidates=[(8, 1024, 128)])
+    on_disk = json.loads(tmp_cache.read_text())["entries"]
+    assert on_disk[key_a]["block"] == mine           # measured entry won
+
+    # NOT-measured keys must not resurrect: a fresh process that only
+    # LOADED key_a must not clobber a concurrent re-tune of key_a on disk
+    tuning.reset()
+    tuning._load()                                   # key_a now memory-held
+    fresher = dict(entry_b, block=[32, 128, 256])
+    data = json.loads(tmp_cache.read_text())
+    data["entries"][key_a] = fresher                 # another proc re-tuned
+    tmp_cache.write_text(json.dumps(data))
+    tuning.autotune(8, 2048, 256, kind=W_TERNARY, a_bits=2, w_bits=2,
+                    backend="pallas", measure=lambda b: 1.0,
+                    candidates=[(8, 2048, 128)])     # unrelated key -> save
+    on_disk = json.loads(tmp_cache.read_text())["entries"]
+    assert on_disk[key_a]["block"] == [32, 128, 256]  # re-tune survived
+
+
+def test_model_matmul_shapes_tp_local():
+    """tp > 1 yields per-device shard shapes per the sharding policy:
+    N-sharded projections shrink N, K-sharded ones shrink K, and
+    non-dividing head counts keep the matrix global (replicated)."""
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="t", n_layers=2, d_model=2048, n_heads=16,
+                      n_kv_heads=8, head_dim=128, d_ff=8192, vocab=4096)
+    d, f, h, kv, dh = 2048, 8192, 16, 8, 128
+    assert engine.model_matmul_shapes(cfg, tp=1) == {
+        (h * dh, d), (kv * dh, d), (d, h * dh), (f, d), (d, f)}
+    assert engine.model_matmul_shapes(cfg, tp=8) == {
+        (h * dh // 8, d), (kv * dh // 8, d), (d, h * dh // 8),
+        (f // 8, d), (d, f // 8)}
+    # 16 heads don't divide tp=32 -> attention replicated, FFN still sharded
+    got = engine.model_matmul_shapes(cfg, tp=32)
+    assert (h * dh, d) in got and (f // 32, d) in got
+
+
+def test_serving_tune_plan_per_device_shapes():
+    """With a mesh, the serving pre-tune plan shrinks to per-device shapes:
+    decode rows M = n_slots/dp, TP-local N and K; the batch-1 admission
+    chunk keeps M = chunk_size."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.models.config import ModelConfig
+
+    devs = np.array(jax.devices() * 8)[:8]
+    cfg = ModelConfig(name="t", n_layers=2, d_model=2048, n_heads=16,
+                      n_kv_heads=8, head_dim=128, d_ff=8192, vocab=4096)
+    pcfg = get_precision("2xT")
+
+    plan = engine.serving_tune_plan(cfg, pcfg, n_slots=16, chunk_size=32)
+    assert (16, cfg.d_ff, cfg.d_model) in plan
+    assert (32, cfg.d_ff, cfg.d_model) in plan
+
+    mesh_dp = Mesh(devs.reshape(8, 1), ("data", "model"))
+    plan = engine.serving_tune_plan(cfg, pcfg, n_slots=16, chunk_size=32,
+                                    mesh=mesh_dp)
+    assert (2, cfg.d_ff, cfg.d_model) in plan          # local M = 16/8
+    assert (32, cfg.d_ff, cfg.d_model) in plan         # chunk M unchanged
+
+    mesh_tp = Mesh(devs.reshape(1, 8), ("data", "model"))
+    plan = engine.serving_tune_plan(cfg, pcfg, n_slots=16, chunk_size=32,
+                                    mesh=mesh_tp)
+    assert (16, cfg.d_ff // 8, cfg.d_model) in plan    # local N = d_ff/tp
+    assert (16, cfg.d_model, cfg.d_ff // 8) in plan    # local K (w_down)
+
+    # pure-DP model (small d_model): params replicate -> global N/K, but the
+    # batch still shards over every axis (local decode M = n_slots/8)
+    small = ModelConfig(name="s", n_layers=2, d_model=512, n_heads=8,
+                        n_kv_heads=8, head_dim=64, d_ff=2048, vocab=4096)
+    plan = engine.serving_tune_plan(small, pcfg, n_slots=16, chunk_size=32,
+                                    mesh=mesh_tp)
+    assert (2, small.d_ff, small.d_model) in plan

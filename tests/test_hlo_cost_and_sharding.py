@@ -189,3 +189,43 @@ def test_pure_dp_replicates_everything():
     params = {"x": {"qw": FakeLeaf((2, 576, 288))}}
     specs = sh.param_specs(params, cfg, mesh)
     assert tuple(specs["x"]["qw"]) == (None, None, None)
+
+
+def test_cache_specs_allow_sp_disables_sequence_sharding():
+    """The serving admission cache (batch=1 on a dp mesh) must NOT fall back
+    to sequence-parallel sharding: chunk appends dynamic_update_slice over
+    the sequence dim, which has to stay local to one shard."""
+    mesh = _mesh((4, 4))
+    cfg = _cfg(2048, 8, 4, 128, 4096)
+    cache = {"layer_0": {"k": FakeLeaf((2, 1, 64, 4, 32)),
+                         "v": FakeLeaf((2, 1, 64, 4, 32))}}
+    # default (B=1, seq 64 divisible by data=4): SP fallback shards the seq
+    sp = sh.cache_specs(cache, cfg, mesh, batch=1)
+    assert tuple(sp["layer_0"]["k"])[2] == ("data",)
+    # allow_sp=False: sequence replicated, KV heads still sharded (4 % 4 == 0)
+    no_sp = sh.cache_specs(cache, cfg, mesh, batch=1, allow_sp=False)
+    assert tuple(no_sp["layer_0"]["k"])[2] is None
+    assert tuple(no_sp["layer_0"]["k"])[3] == "model"
+    # batch-divisible slot cache is unaffected by the flag
+    slot = {"layer_0": {"k": FakeLeaf((2, 8, 64, 4, 32))}}
+    a = sh.cache_specs(slot, cfg, mesh, batch=8)
+    b = sh.cache_specs(slot, cfg, mesh, batch=8, allow_sp=False)
+    assert tuple(a["layer_0"]["k"]) == tuple(b["layer_0"]["k"])
+
+
+def test_serving_shard_factors():
+    mesh = _mesh((4, 4))
+    big = _cfg(2048, 8, 4, 128, 4096)        # TP applies
+    assert sh.serving_shard_factors(big, mesh, n_slots=8) == (4, 4)
+    assert sh.serving_shard_factors(big, mesh, n_slots=3) == (1, 4)
+    small = _cfg(576, 9, 3, 1536, 4096)      # pure DP: batch over all axes
+    assert sh.serving_shard_factors(small, mesh, n_slots=16) == (16, 1)
+    assert sh.serving_shard_factors(small, mesh, n_slots=4) == (4, 1)
+
+
+def test_named_shardings_tree():
+    mesh = _mesh((4, 4))
+    specs = {"a": P("data", None), "b": {"c": P()}}
+    out = sh.named_shardings(mesh, specs)
+    assert out["a"].spec == P("data", None) and out["a"].mesh.shape == mesh.shape
+    assert out["b"]["c"].spec == P()

@@ -1,0 +1,96 @@
+"""Regression tests for the serving metrics accounting.
+
+Two bugfix anchors:
+  * the throughput wall-clock starts at the first ADMISSION, not the first
+    submit — requests queued into an idle scheduler must not deflate tok/s
+    (the legacy submit-anchored window is still reported for bench history);
+  * ``_pcts`` uses the canonical nearest-rank percentile (inverted CDF),
+    cross-checked against ``numpy.percentile(..., method="inverted_cdf")``.
+"""
+import time
+import types
+
+import numpy as np
+
+from repro.runtime.metrics import Metrics, _pcts
+
+
+def _req(submitted_at=0.0, started_at=0.0, prompt_len=4):
+    return types.SimpleNamespace(
+        submitted_at=submitted_at, started_at=started_at,
+        last_token_at=0.0, tokens=np.zeros((1, prompt_len), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# percentile math
+# ---------------------------------------------------------------------------
+def test_pcts_matches_numpy_inverted_cdf():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 4, 5, 10, 99, 100, 101, 200, 1000):
+        xs = rng.normal(size=n).tolist()
+        got = _pcts(xs)
+        for p in (50, 90, 99):
+            want = float(np.percentile(xs, p, method="inverted_cdf"))
+            assert got[f"p{p}"] == want, (n, p, got[f"p{p}"], want)
+        assert got["n"] == n
+        assert abs(got["mean"] - float(np.mean(xs))) < 1e-12
+
+
+def test_pcts_nearest_rank_regression_cases():
+    # p50 of 4 samples: canonical rank ceil(0.5*4)=2 -> 2nd smallest.  The
+    # old round(p/100*(n-1)) picked index 2 (the 3rd smallest).
+    assert _pcts([1.0, 2.0, 3.0, 4.0])["p50"] == 2.0
+    # p99 of 100 samples: rank ceil(99)=99 -> the 99th smallest
+    xs = [float(i) for i in range(1, 101)]
+    assert _pcts(xs)["p99"] == 99.0
+    assert _pcts(xs)["p50"] == 50.0
+    assert _pcts([7.0])["p99"] == 7.0
+    empty = _pcts([])
+    assert empty == {"p50": 0.0, "p90": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
+
+
+# ---------------------------------------------------------------------------
+# throughput window
+# ---------------------------------------------------------------------------
+def test_throughput_window_starts_at_first_admission():
+    m = Metrics(n_slots=2)
+    r = _req()
+    m.on_submit(r)
+    time.sleep(0.08)                       # pure queue-idle: no compute yet
+    r.started_at = time.time()
+    m.on_admit(r)
+    for _ in range(4):
+        m.on_token(r, first=(_ == 0))
+        r.last_token_at = time.time()
+        time.sleep(0.002)
+    m.on_finish(r)
+
+    s = m.summary()
+    th = s["throughput"]
+    # admission window excludes the idle wait; submit window includes it
+    assert th["window"] == "admission"
+    assert m.wall_since_submit_s >= m.wall_s + 0.05
+    # tail symmetry: a submit into an idle scheduler (no compute after it)
+    # must not extend either window's END
+    wall_before = m.wall_s
+    time.sleep(0.03)
+    m.on_submit(_req())
+    assert m.wall_s == wall_before
+    assert th["since_submit"]["wall_s"] == m.wall_since_submit_s
+    assert th["tok_per_s"] > th["since_submit"]["tok_per_s"]
+    assert abs(th["tok_per_s"] * max(m.wall_s, 1e-9)
+               - s["tokens"]["generated"]) < 1e-6
+
+
+def test_throughput_windows_coincide_under_immediate_admission():
+    """No queueing: both windows agree (continuity for old bench numbers)."""
+    m = Metrics(n_slots=1)
+    r = _req()
+    m.on_submit(r)
+    r.started_at = time.time()
+    m.on_admit(r)
+    m.on_token(r, first=True)
+    m.on_finish(r)
+    s = m.summary()["throughput"]
+    assert abs(s["wall_s"] - s["since_submit"]["wall_s"]) < 0.05
+    assert m.format()                      # renders without error

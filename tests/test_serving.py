@@ -252,6 +252,21 @@ def test_submit_rejects_overlong_prompt():
         batcher.submit(Request(rid=0, tokens=_prompt(8, 0, cfg.vocab)))
 
 
+def test_submit_rejects_empty_prompt():
+    """bucket_length(0, chunk) == 0 would admit a zero-length prefill (no
+    chunks, never a first token): empty prompts must be rejected up front,
+    and the scheduler must stay serviceable afterwards."""
+    cfg, model, params = _setup()
+    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=8,
+                                chunk_size=4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        batcher.submit(Request(rid=0, tokens=np.zeros((1, 0), np.int32)))
+    assert batcher.metrics.requests_submitted == 0      # rejected pre-count
+    batcher.submit(Request(rid=1, tokens=_prompt(3, 0, cfg.vocab), max_new=2))
+    done = batcher.run()
+    assert len(done) == 1 and len(done[0].output) == 2
+
+
 # ---------------------------------------------------------------------------
 # streaming + metrics
 # ---------------------------------------------------------------------------
