@@ -1,0 +1,186 @@
+"""Paged KV-cache bench — dense vs paged vs paged-quantized on a
+shared-prefix workload.
+
+Three claims, all recorded to ``BENCH_kvcache.json`` (CI artifact):
+
+  1. **Parity**: the paged batcher at kv_bits=16 reproduces the dense
+     batcher's greedy streams bit-for-bit on the workload (asserted), and
+     prefix-cache hits never change them (asserted).
+  2. **Effective capacity**: at a fixed pool byte budget, quantized blocks
+     multiply the number of concurrently resident sequences — the paper's
+     low-precision storage saving applied to the cache that bounds
+     concurrency.  kv_bits=8 must fit >= 2x the sequences of kv_bits=16
+     (asserted; kv_bits=4 recorded).
+  3. **Prefix TTFT win**: on a workload of request groups sharing prompt
+     prefixes, the radix cache skips the shared prefill chunks — strictly
+     fewer chunk dispatches (asserted, deterministic) and a lower mean TTFT
+     (asserted, wall-clock) than the same paged batcher with the prefix
+     cache disabled.
+
+Results print as ``name,value,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model, reduce_for_smoke
+from repro.runtime.kvcache import (PagedBatcher, paged_block_bytes,
+                                   paged_capacity_blocks)
+from repro.runtime.serving import ContinuousBatcher, Request
+
+S_MAX = 32
+CHUNK = 8
+BLOCK = 8
+PREFIX_LEN = 16
+GROUPS = 3
+PER_GROUP = 3
+MAX_NEW = 6
+
+
+def _setup():
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _shared_prefix_requests(cfg, rng):
+    """GROUPS prompt groups; within a group every request shares a
+    PREFIX_LEN-token prefix and differs in a short suffix."""
+    reqs = []
+    rid = 0
+    for g in range(GROUPS):
+        prefix = rng.integers(0, cfg.vocab, (PREFIX_LEN,))
+        for _ in range(PER_GROUP):
+            suffix = rng.integers(0, cfg.vocab, (int(rng.integers(3, 8)),))
+            toks = np.concatenate([prefix, suffix])[None].astype(np.int32)
+            reqs.append(Request(rid=rid, tokens=toks, max_new=MAX_NEW))
+            rid += 1
+    return reqs
+
+
+def _run_workload(batcher, cfg, *, warmup=True):
+    """Warm the compiled shapes with a throwaway wave, then serve the
+    shared-prefix workload and report outputs + metrics."""
+    rng = np.random.default_rng(7)
+    if warmup:
+        w = Request(rid=10_000, tokens=rng.integers(
+            0, cfg.vocab, (1, PREFIX_LEN + 3)).astype(np.int32),
+            max_new=MAX_NEW)
+        batcher.submit(w)
+        batcher.run()
+    m0_chunks = batcher.metrics.prefill_chunks
+    reqs = _shared_prefix_requests(cfg, np.random.default_rng(11))
+    for r in reqs:
+        batcher.submit(r)
+    done = batcher.run()
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    s = batcher.metrics.summary()
+    return ({r.rid: r.output for r in done}, {
+        "ttft_ms": s["ttft_ms"],
+        "itl_ms": s["itl_ms"],
+        "tok_per_s": s["throughput"]["tok_per_s"],
+        "prefill_chunks": batcher.metrics.prefill_chunks - m0_chunks,
+        "prefix_hit_tokens": batcher.metrics.prefix_hit_tokens,
+        "prefix_hit_rate": s["kv_cache"]["prefix"]["hit_rate"],
+        "peak_blocks": s["kv_cache"]["blocks"]["peak_in_use"],
+        "evicted_blocks": s["kv_cache"]["evicted_blocks"],
+    })
+
+
+def capacity_sweep(cfg):
+    """Max concurrently resident sequences at a fixed pool byte budget."""
+    blocks_per_seq = -(-S_MAX // BLOCK)
+    budget = 48 * paged_block_bytes(cfg, BLOCK, 16)   # 16 fp sequences
+    rows = {}
+    for kv_bits in (16, 8, 4):
+        blocks = paged_capacity_blocks(cfg, budget, BLOCK, kv_bits)
+        rows[kv_bits] = {
+            "block_bytes": paged_block_bytes(cfg, BLOCK, kv_bits),
+            "pool_blocks": blocks,
+            "max_concurrent_seqs": blocks // blocks_per_seq,
+        }
+        print(f"kvcache_capacity_kv{kv_bits},{rows[kv_bits]['max_concurrent_seqs']},"
+              f"blocks={blocks} at {budget} B")
+    ratio8 = rows[8]["max_concurrent_seqs"] / max(rows[16]["max_concurrent_seqs"], 1)
+    print(f"kvcache_capacity_ratio_8_vs_16,{ratio8:.2f},fixed_memory")
+    assert ratio8 >= 2.0, f"kv_bits=8 capacity ratio {ratio8} < 2x"
+    return {"pool_bytes": budget, "blocks_per_seq": blocks_per_seq,
+            "by_kv_bits": rows, "ratio_8_vs_16": ratio8}
+
+
+def main(out=None):
+    cfg, model, params = _setup()
+    mk_dense = lambda: ContinuousBatcher(model, params, n_slots=4,
+                                         s_max=S_MAX, chunk_size=CHUNK)
+    mk_paged = lambda kv_bits, prefix: PagedBatcher(
+        model, params, n_slots=4, s_max=S_MAX, chunk_size=CHUNK,
+        kv_bits=kv_bits, block_size=BLOCK, prefix_cache=prefix)
+
+    dense_out, dense_m = _run_workload(mk_dense(), cfg)
+    print(f"kvcache_dense,{dense_m['tok_per_s']:.1f},"
+          f"ttft_p50={dense_m['ttft_ms']['p50']:.1f}ms "
+          f"chunks={dense_m['prefill_chunks']}")
+
+    p16_out, p16_m = _run_workload(mk_paged(16, False), cfg)
+    assert p16_out == dense_out, "paged kv16 diverged from the dense batcher"
+    print(f"kvcache_paged16,{p16_m['tok_per_s']:.1f},"
+          f"ttft_p50={p16_m['ttft_ms']['p50']:.1f}ms "
+          f"chunks={p16_m['prefill_chunks']}")
+
+    pfx_out, pfx_m = _run_workload(mk_paged(16, True), cfg)
+    assert pfx_out == dense_out, "prefix-cache hit changed outputs"
+    assert pfx_m["prefill_chunks"] < p16_m["prefill_chunks"], \
+        "prefix cache skipped no prefill chunks"
+    assert pfx_m["ttft_ms"]["mean"] < p16_m["ttft_ms"]["mean"], \
+        "prefix cache produced no TTFT win"
+    ttft_win = p16_m["ttft_ms"]["mean"] / max(pfx_m["ttft_ms"]["mean"], 1e-9)
+    print(f"kvcache_paged16_prefix,{pfx_m['tok_per_s']:.1f},"
+          f"ttft_p50={pfx_m['ttft_ms']['p50']:.1f}ms "
+          f"chunks={pfx_m['prefill_chunks']} "
+          f"hit_rate={pfx_m['prefix_hit_rate']:.2f}")
+    print(f"kvcache_prefix_ttft_win,{ttft_win:.2f},"
+          f"mean_ttft_noprefix/prefix "
+          f"(chunks {p16_m['prefill_chunks']}->{pfx_m['prefill_chunks']})")
+
+    q8_out, q8_m = _run_workload(mk_paged(8, True), cfg)
+    assert sorted(q8_out) == sorted(dense_out)     # served, quantized stream
+    print(f"kvcache_paged8_prefix,{q8_m['tok_per_s']:.1f},"
+          f"ttft_p50={q8_m['ttft_ms']['p50']:.1f}ms "
+          f"chunks={q8_m['prefill_chunks']}")
+
+    capacity = capacity_sweep(cfg)
+
+    result = {
+        "workload": {"groups": GROUPS, "per_group": PER_GROUP,
+                     "prefix_len": PREFIX_LEN, "max_new": MAX_NEW,
+                     "s_max": S_MAX, "chunk": CHUNK, "block_size": BLOCK},
+        "parity": {"paged16_equals_dense": True,
+                   "prefix_hits_preserve_outputs": True},
+        "modes": {"dense": dense_m, "paged16": p16_m,
+                  "paged16_prefix": pfx_m, "paged8_prefix": q8_m},
+        "prefix": {"ttft_win": ttft_win,
+                   "chunks_skipped": p16_m["prefill_chunks"]
+                   - pfx_m["prefill_chunks"],
+                   "hit_rate": pfx_m["prefix_hit_rate"]},
+        "capacity": capacity,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write BENCH_kvcache.json here")
+    a = ap.parse_args()
+    main(out=a.out)

@@ -15,9 +15,10 @@ import json
 import traceback
 
 from benchmarks import (bench_engine_autotune, bench_fig6_widening,
-                        bench_kernels, bench_serving, bench_table2_pe,
-                        bench_table3_alexnet, bench_table4_resnet,
-                        bench_table5_device_compare, roofline)
+                        bench_kernels, bench_kvcache, bench_serving,
+                        bench_table2_pe, bench_table3_alexnet,
+                        bench_table4_resnet, bench_table5_device_compare,
+                        roofline)
 
 BENCHES = [
     ("table2", bench_table2_pe.main),
@@ -28,6 +29,7 @@ BENCHES = [
     ("kernels", bench_kernels.main),
     ("engine_autotune", bench_engine_autotune.main),
     ("serving", bench_serving.main),
+    ("kvcache", bench_kvcache.main),
     ("roofline", roofline.main),
 ]
 

@@ -74,6 +74,29 @@ def unpack_binary_pm1(words):
     return (2 * b - 1).astype(jnp.int8)
 
 
+def pack_nibbles(codes):
+    """int8 codes in [-7, 7], even last dim -> int8 bytes holding 2 codes
+    (two's-complement 4-bit fields, low nibble first).  The byte-granular
+    sibling of :func:`pack` used for 4-bit KV-cache storage, where the codes
+    are appended one position at a time and an int32 word would span
+    positions."""
+    lo = codes[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = (codes[..., 1::2].astype(jnp.uint8) & 0xF) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_nibbles(packed):
+    """Inverse of :func:`pack_nibbles`: int8 bytes -> sign-extended int8
+    codes, last axis doubled."""
+    b = packed.astype(jnp.uint8)
+    lo = (b & 0xF).astype(jnp.int8)
+    hi = (b >> 4).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
 def packed_last_dim(k: int, bits: int) -> int:
     """Length of the packed last axis for an unpacked length k."""
     n = codes_per_word(bits)

@@ -382,6 +382,215 @@ def fake_quant_dot(x, w, cfg: PrecisionConfig, *, axis=0):
 
 
 # ---------------------------------------------------------------------------
+# attention-kernel registry (serving decode hot path)
+# ---------------------------------------------------------------------------
+# A second, smaller registry for the cache-bound attention kernels, keyed on
+#
+#     (attn_kind, kv_bits, backend)
+#
+# attn_kind: "decode" (dense (B, S, KV, Dh) cache) | "paged" (block pool +
+# page table).  kv_bits is the KV-cache storage width (16 = raw model dtype,
+# 8/4 = int codes + scales).  Resolution falls back to the ``xla`` backend
+# exactly like the matmul registry — the xla implementations reproduce the
+# in-model jnp math bit-exactly, so registering the dispatch in the serving
+# path is a no-op off-TPU.
+
+ATTN_DECODE = "decode"
+ATTN_PAGED = "paged"
+AttnKey = Tuple[str, int, str]
+_ATTN_REGISTRY: Dict[AttnKey, Callable] = {}
+
+
+def register_attention(kind: str, kv_bits, backend: str):
+    b_list = (kv_bits,) if isinstance(kv_bits, int) else tuple(kv_bits)
+
+    def deco(fn):
+        for b in b_list:
+            _ATTN_REGISTRY[(kind, b, backend)] = fn
+        return fn
+    return deco
+
+
+def resolve_attention(kind: str, kv_bits: int, backend: str) -> Callable:
+    for key in ((kind, kv_bits, backend), (kind, kv_bits, BACKEND_XLA)):
+        fn = _ATTN_REGISTRY.get(key)
+        if fn is not None:
+            return fn
+    raise KeyError(
+        f"no attention kernel for (kind={kind!r}, kv_bits={kv_bits}, "
+        f"backend={backend!r}); registered: {sorted(_ATTN_REGISTRY)}")
+
+
+def available_attention_kernels() -> Dict[AttnKey, str]:
+    return {k: fn.__name__ for k, fn in sorted(_ATTN_REGISTRY.items())}
+
+
+@register_attention(ATTN_DECODE, (8, 4), BACKEND_XLA)
+def _decode_attn_xla(q, k, ks, v, vs, pos, *, kv_bits, dtype, block,
+                     interpret):
+    from .decode_attention import decode_attention_serving_ref
+    return decode_attention_serving_ref(q, k, ks, v, vs, pos,
+                                        kv_bits=kv_bits, dtype=dtype)
+
+
+@register_attention(ATTN_DECODE, 8, BACKEND_PALLAS)
+def _decode_attn_pallas(q, k, ks, v, vs, pos, *, kv_bits, dtype, block,
+                        interpret):
+    from .decode_attention import decode_attention
+    chunk = block[2] if block else 512
+    s = k.shape[1]
+    while s % chunk:
+        chunk //= 2
+    return decode_attention(q, k, ks, v, vs, pos, chunk=max(chunk, 1),
+                            interpret=interpret).astype(dtype)
+
+
+@register_attention(ATTN_PAGED, (16, 8, 4), BACKEND_XLA)
+def _paged_attn_xla(q, k, ks, v, vs, pt_pos, *, kv_bits, dtype, block,
+                    interpret):
+    from .paged_attention import paged_attention_ref
+    page_table, pos = pt_pos
+    return paged_attention_ref(q, k, ks, v, vs, page_table, pos,
+                               kv_bits=kv_bits, out_dtype=dtype)
+
+
+@register_attention(ATTN_PAGED, (16, 8, 4), BACKEND_PALLAS)
+def _paged_attn_pallas(q, k, ks, v, vs, pt_pos, *, kv_bits, dtype, block,
+                       interpret):
+    from .paged_attention import paged_attention
+    page_table, pos = pt_pos
+    return paged_attention(q, k, ks, v, vs, page_table, pos,
+                           kv_bits=kv_bits, interpret=interpret).astype(dtype)
+
+
+def decode_attention(q, k_codes, k_scale, v_codes, v_scale, pos, *,
+                     kv_bits: int = 8, dtype=jnp.float32,
+                     backend: Optional[str] = None,
+                     interpret: Optional[bool] = None):
+    """One-step dense-cache decode attention via the registry.
+
+    q: (B, KV, G, Dh); codes (B, S, KV, Dh'); scales (B, S, KV, 1);
+    pos scalar or (B,).  The Pallas path reads its KV chunk length from the
+    tuning cache (``autotune_decode_attention`` sweeps it offline)."""
+    backend = backend or default_backend()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = resolve_attention(ATTN_DECODE, kv_bits, backend)
+    block = None
+    if backend == BACKEND_PALLAS:
+        b, kv, g, dh = q.shape
+        block = tuning.get_block_sizes(
+            b * g, dh, k_codes.shape[1], kind=f"attn_{ATTN_DECODE}",
+            a_bits=kv_bits, w_bits=8, backend=backend)
+    return fn(q, k_codes, k_scale, v_codes, v_scale, pos, kv_bits=kv_bits,
+              dtype=dtype, block=block, interpret=interpret)
+
+
+def paged_attention(q, k_pool, k_scale, v_pool, v_scale, page_table, pos, *,
+                    kv_bits: int = 8, dtype=jnp.float32,
+                    backend: Optional[str] = None,
+                    interpret: Optional[bool] = None):
+    """One-step paged decode attention (block pool + page table) via the
+    registry.  Pool leaves (NB, bs, KV, Dh'); page_table (B, n_blocks)."""
+    backend = backend or default_backend()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fn = resolve_attention(ATTN_PAGED, kv_bits, backend)
+    return fn(q, k_pool, k_scale, v_pool, v_scale, (page_table, pos),
+              kv_bits=kv_bits, dtype=dtype, block=None, interpret=interpret)
+
+
+def autotune_decode_attention(*, b: int, s: int, kv: int, g: int, dh: int,
+                              kv_bits: int = 8, iters: int = 2,
+                              interpret: Optional[bool] = None,
+                              force: bool = False, seed: int = 0) -> dict:
+    """Sweep the flash-decode kernel's KV chunk length for one cache shape
+    class and persist the winner (tuning-cache kind ``attn_decode``; the
+    stored block is (1, dh, chunk))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    from .decode_attention import decode_attention as kernel
+    rng = np.random.default_rng(seed)
+    qmax = (1 << (kv_bits - 1)) - 1
+    q = jnp.asarray(rng.normal(size=(b, kv, g, dh)).astype(np.float32))
+    codes = lambda: jnp.asarray(
+        rng.integers(-qmax, qmax + 1, (b, s, kv, dh)).astype(np.int8))
+    scales = lambda: jnp.asarray(
+        rng.uniform(1e-3, 1e-1, (b, s, kv, 1)).astype(np.float32))
+    kc, ks, vc, vs = codes(), scales(), codes(), scales()
+    pos = jnp.full((b,), s - 1, jnp.int32)
+
+    def measure(block):
+        return tuning.time_fn(
+            lambda: kernel(q, kc, ks, vc, vs, pos, chunk=block[2],
+                           interpret=interpret), iters=iters)
+
+    cands = [(1, dh, c) for c in (128, 256, 512, 1024)
+             if c <= s and s % c == 0] or [(1, dh, s)]
+    return tuning.autotune(b * g, dh, s, kind=f"attn_{ATTN_DECODE}",
+                           a_bits=kv_bits, w_bits=8, backend=BACKEND_PALLAS,
+                           measure=measure, candidates=cands, force=force)
+
+
+def autotune_kv_block_size(*, b: int, kv: int, g: int, dh: int, s_max: int,
+                           kv_bits: int = 8, candidates=(16, 32, 64, 128),
+                           iters: int = 2, interpret: Optional[bool] = None,
+                           force: bool = False, seed: int = 0) -> dict:
+    """Sweep the paged-attention kernel over candidate KV **block sizes** —
+    the pool's block size is itself the kernel's sequence tile, so the sweep
+    recommends the block size a deployment should configure
+    (``preferred_kv_block_size`` reads it back; ``--kv-block-size 0`` in
+    launch.serve uses it)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    from .paged_attention import paged_attention as kernel
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, dh)).astype(np.float32))
+    pos = jnp.full((b,), s_max - 1, jnp.int32)
+    quant = kv_bits < 16
+    qmax = (1 << (min(kv_bits, 8) - 1)) - 1 if quant else 0
+    dh_store = dh // 2 if kv_bits == 4 else dh
+
+    def measure(block):
+        bs = block[2]
+        nb = s_max // bs
+        n_pool = b * nb + 1
+        if quant:
+            mk = lambda: jnp.asarray(rng.integers(
+                -qmax, qmax + 1, (n_pool, bs, kv, dh_store)).astype(np.int8))
+            ms = lambda: jnp.asarray(rng.uniform(
+                1e-3, 1e-1, (n_pool, bs, kv, 1)).astype(np.float32))
+            kp, ksc, vp, vsc = mk(), ms(), mk(), ms()
+        else:
+            mk = lambda: jnp.asarray(
+                rng.normal(size=(n_pool, bs, kv, dh)).astype(np.float32))
+            kp, vp, ksc, vsc = mk(), mk(), None, None
+        pt = jnp.asarray(
+            rng.permutation(b * nb).reshape(b, nb).astype(np.int32) + 1)
+        return tuning.time_fn(
+            lambda: kernel(q, kp, ksc, vp, vsc, pt, pos, kv_bits=kv_bits,
+                           interpret=interpret), iters=iters)
+
+    cands = [(1, dh, bs) for bs in candidates if s_max % bs == 0] \
+        or [(1, dh, s_max)]
+    return tuning.autotune(b * g, dh, s_max, kind=f"attn_{ATTN_PAGED}",
+                           a_bits=kv_bits, w_bits=8, backend=BACKEND_PALLAS,
+                           measure=measure, candidates=cands, force=force)
+
+
+def preferred_kv_block_size(*, b: int, kv: int, g: int, dh: int, s_max: int,
+                            kv_bits: int = 8, default: int = 16) -> int:
+    """Tuned pool block size for a cache shape class (cache lookup only —
+    returns ``default`` on a cold cache, never sweeps)."""
+    entry = tuning.lookup(b * g, dh, s_max, kind=f"attn_{ATTN_PAGED}",
+                          a_bits=kv_bits, w_bits=8, backend=BACKEND_PALLAS)
+    if entry is None:
+        return default
+    bs = int(entry["block"][2])
+    return bs if s_max % bs == 0 else default
+
+
+# ---------------------------------------------------------------------------
 # legacy entry point (pre-engine signature; tests/benches of the raw kernels)
 # ---------------------------------------------------------------------------
 def quantized_matmul(x, pw: PackedWeight, bias=None, *,

@@ -1,0 +1,173 @@
+"""Paged flash-decode attention — gather K/V through a page table.
+
+The KV cache lives in a global pool of fixed-size blocks (``runtime.kvcache``)
+instead of one dense (B, S_max) slab per slot: each request's blocks are named
+by a per-request page table, so physical HBM is allocated per *block* and can
+be shared between requests (radix prefix cache).  The paper's low-precision
+storage argument applies per block: codes stay int8/int4 in HBM and are
+dequantized in VMEM, so a kv_bits=8 pool holds ~2x the tokens of a bf16 pool
+at fixed memory.
+
+This kernel generalizes :mod:`repro.kernels.decode_attention` from contiguous
+chunks to page-table indirection: one new token's query per sequence attends
+over that sequence's blocks, with the physical block id resolved by the
+scalar-prefetched page table in the BlockSpec index map (the canonical Pallas
+pattern for paged attention — the DMA for block j of sequence b reads pool
+row ``page_table[b, j]``).
+
+Layout (per device, post-sharding):
+  q          : (B, KV, G, Dh)    f32/bf16 (current token's queries, grouped)
+  k_pool     : (NB, bs, KV, Dh)  int8 codes (kv_bits<=8) or float (kv_bits=16)
+  k_scale    : (NB, bs, KV, 1)   f32 per-(position, head) scales (None for 16)
+  v_pool     : (NB, bs, KV, Dh)  like k_pool
+  v_scale    : (NB, bs, KV, 1)   like k_scale
+  page_table : (B, n_blocks)     int32 physical block ids (scalar prefetch)
+  pos        : (B,)              int32 per-sequence positions (mask: s <= pos)
+  out        : (B, KV, G, Dh)    f32
+
+Grid: (B, KV, n_blocks), blocks innermost; scratch m/l/acc carried across a
+sequence's blocks (online softmax).  Blocks wholly beyond ``pos`` still DMA
+(their page-table entries point at the reserved null block 0) but contribute
+exact zeros through the mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import unpack_nibbles
+
+from ._compat import CompilerParams
+
+
+def _kernel(pt_ref, pos_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, n_blocks: int, dh: int,
+            kv_bits: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def dequant(codes_ref, scale_ref):
+        c = codes_ref[0, :, 0]                               # (bs, Dh_store)
+        if kv_bits == 4:
+            c = unpack_nibbles(c)
+        x = c.astype(jnp.float32)
+        if scale_ref is not None:
+            x = x * scale_ref[0, :, 0]
+        return x                                             # (bs, Dh)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, Dh)
+    k = dequant(kp_ref, ks_ref)
+    s = jnp.dot(q, k.T) / (dh ** 0.5)                        # (G, bs)
+    idx = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = idx <= pos_ref[b]                                 # (1, bs)
+    s_masked = jnp.where(mask, s, -1e30)
+
+    m_prev = m_ref[...]                                      # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)             # (G, bs)
+    corr = jnp.exp(m_prev - m_new)                           # (G, 1)
+    v = dequant(vp_ref, vs_ref)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kv_bits", "interpret"))
+def paged_attention(q, k_pool, k_scale, v_pool, v_scale, page_table, pos, *,
+                    kv_bits: int = 8, interpret: bool = False):
+    """One decode step of attention through a page table.
+
+    ``k_scale``/``v_scale`` must be None iff ``kv_bits == 16`` (raw storage).
+    ``pos`` is scalar or (B,) per-sequence current positions.
+    """
+    b, kv, g, dh = q.shape
+    nb_pool, bs = k_pool.shape[0], k_pool.shape[1]
+    n_blocks = page_table.shape[1]
+    has_scale = k_scale is not None
+    assert has_scale == (kv_bits < 16), (kv_bits, has_scale)
+    pt = page_table.astype(jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+
+    dh_store = k_pool.shape[-1]
+    kern = functools.partial(_kernel, bs=bs, n_blocks=n_blocks, dh=dh,
+                             kv_bits=kv_bits)
+    if not has_scale:
+        # kv_bits=16: no scale operands; close the kernel over None refs
+        def kern_ns(pt_ref, pos_ref, q_ref, kp_ref, vp_ref, out_ref,
+                    m_ref, l_ref, acc_ref):
+            return _kernel(pt_ref, pos_ref, q_ref, kp_ref, None, vp_ref, None,
+                           out_ref, m_ref, l_ref, acc_ref, bs=bs,
+                           n_blocks=n_blocks, dh=dh, kv_bits=kv_bits)
+        kern = kern_ns
+
+    pool_spec = pl.BlockSpec((1, bs, 1, dh_store),
+                             lambda bi, ki, j, pt, pos: (pt[bi, j], 0, ki, 0))
+    scale_spec = pl.BlockSpec((1, bs, 1, 1),
+                              lambda bi, ki, j, pt, pos: (pt[bi, j], 0, ki, 0))
+    q_spec = pl.BlockSpec((1, 1, g, dh), lambda bi, ki, j, pt, pos: (bi, ki, 0, 0))
+    in_specs = [q_spec, pool_spec, scale_spec, pool_spec, scale_spec] \
+        if has_scale else [q_spec, pool_spec, pool_spec]
+    operands = (q, k_pool, k_scale, v_pool, v_scale) if has_scale \
+        else (q, k_pool, v_pool)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, ki, j, pt, pos: (bi, ki, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pt, pos_b, *operands)
+
+
+def gather_pool(pool_leaf, page_table):
+    """Dense (B, n_blocks*bs, ...) view of a pooled leaf (NB, bs, ...) through
+    ``page_table`` (B, n_blocks) — the jnp-reference gather (XLA fuses it; on
+    TPU the Pallas kernel's index map performs the same indirection without
+    materializing the view)."""
+    g = pool_leaf[page_table]                    # (B, n_blocks, bs, ...)
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def paged_attention_ref(q, k_pool, k_scale, v_pool, v_scale, page_table,
+                        pos, *, kv_bits: int = 8, out_dtype=jnp.float32):
+    """Pure-jnp oracle: gather blocks dense, then the serving model's dense
+    decode attention (``decode_attention_serving_ref``) over the view.
+
+    Reusing the dense reference op-for-op is what makes the engine's
+    ``xla``-backend paged dispatch BIT-identical to the model's inline
+    dequant + ``layers._attend`` formulation — the paged batcher's
+    kv_bits=16 streams stay bit-identical to the dense batcher's.
+    """
+    from .decode_attention import decode_attention_serving_ref
+    gather = lambda leaf: None if leaf is None else \
+        gather_pool(leaf, page_table)
+    return decode_attention_serving_ref(
+        q, gather(k_pool), gather(k_scale), gather(v_pool), gather(v_scale),
+        pos, kv_bits=kv_bits, dtype=out_dtype)

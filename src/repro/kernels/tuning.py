@@ -235,6 +235,15 @@ def get_block_sizes(m: int, n: int, k: int, *, kind: str, a_bits: int,
     return fallback_block(m, n, k, kind, w_bits)
 
 
+def lookup(m: int, n: int, k: int, *, kind: str, a_bits: int, w_bits: int,
+           backend: str = "pallas") -> Optional[dict]:
+    """Raw cache entry for a shape class, or None on a miss (no fallback
+    synthesis, no stats) — for callers that need to distinguish a tuned
+    recommendation from the default (e.g. the paged-KV block-size pick)."""
+    entry = _load().get(cache_key(kind, a_bits, w_bits, backend, m, n, k))
+    return entry if entry is not None and _sane_entry(entry) else None
+
+
 def autotune(m: int, n: int, k: int, *, kind: str, a_bits: int, w_bits: int,
              backend: str, measure: Callable[[Block], float],
              candidates: Optional[Sequence[Block]] = None,

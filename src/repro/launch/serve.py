@@ -86,10 +86,40 @@ def _legacy_loop(model, params, cfg, args):
 def _batcher_loop(model, params, cfg, args, mesh=None):
     """Continuous batching through the scheduler v2 (SPMD when --mesh)."""
     s_max = args.prompt_len + args.gen
-    batcher = ContinuousBatcher(
-        model, params, n_slots=args.slots or args.requests, s_max=s_max,
-        prompt_len=args.prompt_len, chunk_size=args.chunk_size,
-        autotune=args.autotune, mesh=mesh)
+    if args.paged:
+        from repro.runtime.kvcache import PagedBatcher, paged_block_bytes
+        block_size = args.kv_block_size
+        if not block_size:
+            from repro.kernels import engine
+            n_slots = args.slots or args.requests
+            attn_shape = dict(
+                b=n_slots, kv=cfg.n_kv_heads,
+                g=max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1), dh=cfg.dh,
+                s_max=s_max, kv_bits=args.kv_bits)
+            if args.autotune:
+                # sweep candidate pool block sizes (the paged kernel's
+                # sequence tile) so the lookup below returns a measured
+                # recommendation instead of the cold-cache default
+                engine.autotune_kv_block_size(**attn_shape)
+            block_size = engine.preferred_kv_block_size(**attn_shape)
+            print(f"--kv-block-size 0 -> {block_size} "
+                  f"({'tuned' if args.autotune else 'tuning-cache'} pick)")
+        batcher = PagedBatcher(
+            model, params, n_slots=args.slots or args.requests, s_max=s_max,
+            kv_bits=args.kv_bits, block_size=block_size,
+            prefix_cache=args.prefix_cache,
+            prompt_len=args.prompt_len, chunk_size=args.chunk_size,
+            autotune=args.autotune, mesh=mesh)
+        print(f"paged KV cache: {batcher.num_blocks - 1} blocks x "
+              f"{batcher.block_size} positions at kv_bits={args.kv_bits} "
+              f"({paged_block_bytes(cfg, batcher.block_size, args.kv_bits)} "
+              f"B/block), prefix cache "
+              f"{'on' if args.prefix_cache else 'off'}")
+    else:
+        batcher = ContinuousBatcher(
+            model, params, n_slots=args.slots or args.requests, s_max=s_max,
+            prompt_len=args.prompt_len, chunk_size=args.chunk_size,
+            autotune=args.autotune, mesh=mesh)
     if mesh is not None:
         from repro.parallel.sharding import serving_shard_factors
         dp, tp = serving_shard_factors(cfg, mesh, batcher.n_slots)
@@ -137,7 +167,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
     ap.add_argument("--precision", default="2xT")
-    ap.add_argument("--kv-bits", type=int, default=8)
+    ap.add_argument("--kv-bits", type=int, default=8,
+                    help="KV-cache storage width.  Dense batcher: 0 = model "
+                         "dtype, 8/4 = quantized in-cache.  --paged: 16 = "
+                         "raw blocks, 8/4 = quantized blocks")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache (block pool + "
+                         "radix prefix sharing, runtime.kvcache)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="positions per paged KV block (0 -> tuned pick "
+                         "from the autotune cache)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="radix prefix sharing across requests (--paged)")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (0 -> one per request)")
@@ -167,7 +209,16 @@ def main(argv=None):
     from repro.launch.mesh import parse_mesh
     mesh = parse_mesh(args.mesh)
 
-    cfg = get_config(args.arch, precision=args.precision, kv_bits=args.kv_bits)
+    if args.paged and args.kv_bits == 0:
+        args.kv_bits = 16                  # dense spelling of "unquantized"
+    if not args.paged and args.kv_bits not in (0, 4, 8):
+        raise SystemExit(
+            f"--kv-bits {args.kv_bits}: the dense cache stores int8/int4 "
+            "codes (or model dtype with 0); 16 is a --paged storage width")
+    # paged serving owns KV quantization in the block pool; the in-model
+    # dense-cache quantizer stays off
+    cfg = get_config(args.arch, precision=args.precision,
+                     kv_bits=0 if args.paged else args.kv_bits)
     if args.reduced:
         cfg = reduce_for_smoke(cfg)
     model = build_model(cfg)

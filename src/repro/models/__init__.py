@@ -36,6 +36,11 @@ class Model:
     # chunked prefill (serving): (params, tokens, cache, pos) -> (logits, cache);
     # None for model families without a cache-append path (enc-dec)
     prefill_chunk: Callable = None
+    # paged-KV serving (runtime.kvcache): block-pool + page-table variants;
+    # (params, tokens, pool, page_table, pos, kv_bits) -> (logits, pool).
+    # None for stacks the paged cache does not cover (SSM/hybrid, enc-dec).
+    prefill_chunk_paged: Callable = None
+    decode_step_paged: Callable = None
 
     def loss(self, params, batch):
         logits, aux = self.forward(params, batch)
@@ -53,6 +58,8 @@ def _lm_inputs(batch, cfg):
 
 def build_model(cfg: ModelConfig) -> Model:
     if cfg.kind == "lm":
+        pageable = (cfg.frontend == "none"
+                    and all(m.startswith("attn") for m in cfg.layer_pattern))
         return Model(
             cfg=cfg,
             init=lambda key: transformer.init_params(key, cfg),
@@ -64,6 +71,14 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, tok, cache, pos, cfg),
             prefill_chunk=lambda p, tok, cache, pos: transformer.prefill_chunk(
                 p, tok, cache, pos, cfg),
+            prefill_chunk_paged=(
+                lambda p, tok, pool, pt, pos, kv_bits:
+                transformer.prefill_chunk_paged(p, tok, pool, pt, pos, cfg,
+                                                kv_bits)) if pageable else None,
+            decode_step_paged=(
+                lambda p, tok, pool, pt, pos, kv_bits:
+                transformer.decode_step_paged(p, tok, pool, pt, pos, cfg,
+                                              kv_bits)) if pageable else None,
         )
     if cfg.kind == "encdec":
         return Model(

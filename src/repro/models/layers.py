@@ -27,6 +27,7 @@ from repro.core.precision import (
     get_precision,
     signed,
 )
+from repro.core.packing import pack_nibbles, unpack_nibbles
 from repro.core.quantize import act_fake_quant, weight_fake_quant
 from repro.kernels import engine
 
@@ -126,22 +127,10 @@ def attn_init(key, cfg: ModelConfig, post_norms: bool = False):
     return p
 
 
-def _pack_nibbles(codes):
-    """int8 codes in [-7,7], even last dim -> int8 bytes holding 2 codes
-    (two's-complement 4-bit fields, low nibble first)."""
-    lo = codes[..., 0::2].astype(jnp.uint8) & 0xF
-    hi = (codes[..., 1::2].astype(jnp.uint8) & 0xF) << 4
-    return (lo | hi).astype(jnp.int8)
-
-
-def _unpack_nibbles(packed):
-    b = packed.astype(jnp.uint8)
-    lo = (b & 0xF).astype(jnp.int8)
-    hi = (b >> 4).astype(jnp.int8)
-    lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    out = jnp.stack([lo, hi], axis=-1)
-    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+# nibble packing lives in core.packing (shared with the paged-attention
+# kernel's in-VMEM decode); kept under the old names for local callers
+_pack_nibbles = pack_nibbles
+_unpack_nibbles = unpack_nibbles
 
 
 def _kv_quantize(k, v, bits: int):
@@ -323,22 +312,142 @@ def attn_apply(p, x, cfg: ModelConfig, positions, *, local: bool,
             ck, cv = write(cache["k"], kq), write(cache["v"], vq)
             nks, nvs = write(cache["ks"], ks), write(cache["vs"], vs)
             new = {"k": ck, "v": cv, "ks": nks, "vs": nvs}
-            kk = _kv_dequant(ck, nks, x.dtype, cfg.kv_bits)
-            vv = _kv_dequant(cv, nvs, x.dtype, cfg.kv_bits)
         else:
             ck, cv = write(cache["k"], k), write(cache["v"], v)
             new = {"k": ck, "v": cv}
-            kk, vv = ck, cv
-        j = jnp.arange(s_max)[None, :]                  # (1,S)
-        mask = (j <= pos_b[:, None])[:, None, None]     # (B,1,1,S)
+        if cfg.kv_bits and not local and cfg.attn_softcap <= 0:
+            # the serving hot path: engine-dispatched flash-decode over the
+            # quantized cache (Pallas kernel on TPU; the xla registration is
+            # the bit-exact jnp reference of the inline math below)
+            q4 = q[:, 0].reshape(b, kvh, h // kvh, dh)
+            out = engine.decode_attention(
+                q4, new["k"], new["ks"], new["v"], new["vs"], pos_b,
+                kv_bits=cfg.kv_bits, dtype=x.dtype)
+            out = out.reshape(b, 1, h * dh)
+        else:
+            if cfg.kv_bits:
+                kk = _kv_dequant(ck, nks, x.dtype, cfg.kv_bits)
+                vv = _kv_dequant(cv, nvs, x.dtype, cfg.kv_bits)
+            else:
+                kk, vv = ck, cv
+            j = jnp.arange(s_max)[None, :]                  # (1,S)
+            mask = (j <= pos_b[:, None])[:, None, None]     # (B,1,1,S)
+            if local:
+                mask &= (j > pos_b[:, None] - cfg.window)[:, None, None]
+            out = _attend(q, kk, vv, mask, cfg)
+
+    out = qlinear_apply(p["wo"], out, cfg)
+    if "post_norm" in p:
+        out = rmsnorm(p["post_norm"], out, cfg.norm_eps)
+    return out, new
+
+
+def attn_apply_paged(p, x, cfg: ModelConfig, positions, *, local: bool,
+                     pool, page_table, kv_bits: int):
+    """Attention over a block-paged KV pool (runtime.kvcache) instead of a
+    per-slot dense cache.
+
+    pool: one layer's block storage ``{"k","v"[,"ks","vs"]}`` with leaves
+    (NB, bs, KV, Dh') — physical blocks shared by every request; block 0 is
+    the reserved null/scratch block.  page_table: (B, n_blocks) int32 mapping
+    each sequence's logical block j to its physical block.  positions:
+    (B, Sq) query positions — Sq > 1 is a B=1 prefill-chunk append, Sq == 1
+    the batched decode step; both write the chunk/token KV into the owning
+    blocks (``positions // bs`` -> page-table row -> physical block) and
+    attend over the gathered (B, n_blocks*bs) dense view with the causal
+    position mask, so the math — and, for kv_bits=16, the bits — match the
+    dense cache path exactly.
+
+    Out-of-range positions (bucket padding past the pool view) and retired
+    slots (their page-table rows are zeroed) deflect writes to the null
+    block.  Returns (out, new_pool).
+    """
+    b = x.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    nb, bs = page_table.shape[1], pool["k"].shape[1]
+    s_pad = nb * bs
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    q = qlinear_apply(p["wq"], xn, cfg).reshape(b, -1, h, dh)
+    k = qlinear_apply(p["wk"], xn, cfg).reshape(b, -1, kvh, dh)
+    v = qlinear_apply(p["wv"], xn, cfg).reshape(b, -1, kvh, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    sq = x.shape[1]
+
+    # ---- block writes: (b, sq) positions -> (physical block, offset) ------
+    pos = jnp.asarray(positions, jnp.int32)                    # (B, Sq)
+    lb = jnp.clip(pos // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(page_table.astype(jnp.int32), lb, axis=1)
+    phys = jnp.where(pos < s_pad, phys, 0)                     # OOB -> null
+    off = pos % bs
+    flat = lambda t: t.reshape(b * sq, *t.shape[2:])
+    pi, oi = phys.reshape(-1), off.reshape(-1)
+
+    def write(buf, upd):
+        return buf.at[pi, oi].set(flat(upd).astype(buf.dtype))
+
+    if kv_bits < 16:
+        kq, ks, vq, vs = _kv_quantize(k, v, kv_bits)
+        new = {"k": write(pool["k"], kq), "v": write(pool["v"], vq),
+               "ks": write(pool["ks"], ks), "vs": write(pool["vs"], vs)}
+    else:
+        new = {"k": write(pool["k"], k), "v": write(pool["v"], v)}
+
+    if sq == 1 and not local and cfg.attn_softcap <= 0:
+        # batched decode: engine-dispatched paged attention (page-table
+        # prefetch Pallas kernel on TPU; the xla registration gathers the
+        # dense view and reproduces the chunk path's _attend bit-exactly)
+        q4 = q[:, 0].reshape(b, kvh, h // kvh, dh)
+        out = engine.paged_attention(
+            q4, new["k"], new.get("ks"), new["v"], new.get("vs"),
+            page_table.astype(jnp.int32), pos[:, 0], kv_bits=kv_bits,
+            dtype=x.dtype)
+        out = out.reshape(b, 1, h * dh)
+    else:
+        # prefill-chunk append (or local/softcap attention): attend over the
+        # gathered dense (B, s_pad) page-table view
+        from repro.kernels.paged_attention import gather_pool
+        gather = lambda leaf: gather_pool(leaf, page_table)
+        if kv_bits < 16:
+            kk = _kv_dequant(gather(new["k"]), gather(new["ks"]), x.dtype,
+                             kv_bits)
+            vv = _kv_dequant(gather(new["v"]), gather(new["vs"]), x.dtype,
+                             kv_bits)
+        else:
+            kk, vv = gather(new["k"]), gather(new["v"])
+        j = jnp.arange(s_pad)[None, None, :]                   # (1,1,S)
+        qpos = pos[:, :, None]                                 # (B,Sq,1)
+        mask = (j <= qpos)[:, None]                            # (B,1,Sq,S)
         if local:
-            mask &= (j > pos_b[:, None] - cfg.window)[:, None, None]
+            mask &= (j > qpos - cfg.window)[:, None]
         out = _attend(q, kk, vv, mask, cfg)
 
     out = qlinear_apply(p["wo"], out, cfg)
     if "post_norm" in p:
         out = rmsnorm(p["post_norm"], out, cfg.norm_eps)
     return out, new
+
+
+def make_kv_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                 kv_bits: int, stacked: int = None):
+    """Block-pool pytree for one attention layer (or stacked leading dim):
+    ``num_blocks`` physical blocks of ``block_size`` positions each.  Block 0
+    is reserved as the null/scratch block (never allocated)."""
+    kvh, dh = cfg.n_kv_heads, cfg.dh
+    lead = (stacked,) if stacked else ()
+    if kv_bits < 16:
+        dh_store = dh // 2 if kv_bits == 4 else dh
+        return {
+            "k": jnp.zeros(lead + (num_blocks, block_size, kvh, dh_store), jnp.int8),
+            "v": jnp.zeros(lead + (num_blocks, block_size, kvh, dh_store), jnp.int8),
+            "ks": jnp.full(lead + (num_blocks, block_size, kvh, 1), 1e-6, jnp.float32),
+            "vs": jnp.full(lead + (num_blocks, block_size, kvh, 1), 1e-6, jnp.float32),
+        }
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros(lead + (num_blocks, block_size, kvh, dh), dt),
+        "v": jnp.zeros(lead + (num_blocks, block_size, kvh, dh), dt),
+    }
 
 
 def make_kv_cache(cfg: ModelConfig, b: int, s_max: int, stacked: int = None):

@@ -170,6 +170,82 @@ def make_cache(cfg: ModelConfig, b: int, s_max: int, mesh=None):
     return per
 
 
+def make_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+              kv_bits: int, mesh=None):
+    """Stacked per-period block-pool pytree for the paged KV cache
+    (runtime.kvcache): every attention layer gets ``num_blocks`` physical
+    blocks of ``block_size`` positions (block 0 reserved as null).  Requires
+    an attention-only stack — SSM state has no sequence dim to page.
+
+    With ``mesh``, leaves are placed under ``parallel.sharding.pool_specs``:
+    KV heads shard over 'model' when they divide; the block and in-block
+    position dims always stay local to a shard (appends are scatters at
+    dynamic positions — the shard-local append rule)."""
+    assert all(m.startswith("attn") for m in cfg.layer_pattern), \
+        f"{cfg.name}: paged KV cache needs an attention-only stack"
+    per = {f"layer_{i}": L.make_kv_pool(cfg, num_blocks, block_size, kv_bits,
+                                        stacked=cfg.n_periods)
+           for i in range(cfg.period)}
+    if mesh is not None:
+        from repro.parallel.sharding import named_shardings, pool_specs
+        per = jax.device_put(per, named_shardings(
+            mesh, pool_specs(per, cfg, mesh)))
+    return per
+
+
+def _paged_scan(params, x, cfg: ModelConfig, positions, pool, page_table,
+                kv_bits: int):
+    def body(x, scanned):
+        pp, pool_p = scanned
+        new_pool_p = {}
+        for i, (mixer, ffn) in enumerate(zip(cfg.layer_pattern, cfg.ffn_pattern)):
+            lp = pp[f"layer_{i}"]
+            out, new_pool_p[f"layer_{i}"] = L.attn_apply_paged(
+                lp["attn"], x, cfg, positions, local=(mixer == "attn_local"),
+                pool=pool_p[f"layer_{i}"], page_table=page_table,
+                kv_bits=kv_bits)
+            x = x + out
+            if ffn == "dense":
+                x = x + L.ffn_apply(lp["ffn"], x, cfg)
+            elif ffn == "moe":
+                out, _ = L.moe_apply(lp["moe"], x, cfg)
+                x = x + out
+        return x, new_pool_p
+
+    return jax.lax.scan(body, x, (params["blocks"], pool))
+
+
+def prefill_chunk_paged(params, tokens, pool, page_table, pos,
+                        cfg: ModelConfig, kv_bits: int):
+    """Paged counterpart of :func:`prefill_chunk`: the chunk's KV is written
+    into the pool blocks named by ``page_table`` (B=1 row) at positions
+    [pos, pos + C), and queries attend through the page table.  Unlike the
+    dense path, ``pos`` may start past 0 — admission skips the portion of
+    the prompt covered by a radix prefix-cache hit.  Returns (logits, pool)."""
+    b, c = tokens.shape[0], tokens.shape[1]
+    x = _embed(params, tokens, cfg)
+    pos = jnp.asarray(pos, jnp.int32).reshape(())
+    positions = jnp.broadcast_to(pos + jnp.arange(c, dtype=jnp.int32)[None],
+                                 (b, c))
+    x, new_pool = _paged_scan(params, x, cfg, positions, pool, page_table,
+                              kv_bits)
+    return _logits(params, x, cfg), new_pool
+
+
+def decode_step_paged(params, token, pool, page_table, pos,
+                      cfg: ModelConfig, kv_bits: int):
+    """Paged counterpart of :func:`decode_step`: per-slot page tables
+    (B, n_blocks) resolve each slot's blocks; the new token's KV row lands in
+    the slot's current block (retired slots' zeroed rows deflect to the null
+    block).  Returns (logits, pool)."""
+    b = token.shape[0]
+    x = _embed(params, token, cfg)
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+    x, new_pool = _paged_scan(params, x, cfg, positions, pool, page_table,
+                              kv_bits)
+    return _logits(params, x, cfg), new_pool
+
+
 def prefill(params, inputs, cfg: ModelConfig, s_max: int):
     """Process a prompt, build the cache, return last-position logits."""
     b, s = inputs.shape[0], inputs.shape[1]

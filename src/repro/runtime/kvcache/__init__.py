@@ -1,0 +1,29 @@
+"""Paged, quantized KV-cache subsystem with radix-prefix sharing.
+
+The serving KV cache is the tensor that bounds concurrency: the dense
+scheduler gives every slot a full (s_max, KV, Dh) fp slab whether the request
+uses 12 tokens or 4000.  This package replaces the slabs with a **block
+pool** — the paper's limited-precision storage argument applied to the cache
+that actually fills HBM:
+
+  * :mod:`pool` — a refcounted pool of fixed-size physical blocks with a
+    free list; block 0 is the reserved null/scratch block.
+  * :mod:`radix` — a radix tree over block-granular token prefixes: requests
+    sharing a prompt prefix reference the same physical blocks
+    (copy-on-write discipline: only FULL, immutable blocks are ever shared)
+    and skip the shared portion of prefill at admission.  Unreferenced
+    cached blocks are evicted LRU under pool pressure.
+  * :mod:`batcher` — :class:`PagedBatcher`, a drop-in
+    :class:`repro.runtime.serving.ContinuousBatcher` whose KV state is the
+    pool + per-slot page tables.  Blocks store raw model-dtype KV
+    (kv_bits=16) or int8/int4 codes + per-position scales (kv_bits=8/4 via
+    the same quantizer as the dense cache), multiplying effective cache
+    capacity at fixed memory.
+
+The attention indirection itself lives in
+:mod:`repro.kernels.paged_attention` (Pallas page-table gather kernel +
+jnp reference), dispatched through :mod:`repro.kernels.engine`.
+"""
+from .batcher import PagedBatcher, paged_block_bytes, paged_capacity_blocks  # noqa: F401
+from .pool import BlockPool  # noqa: F401
+from .radix import RadixPrefixCache  # noqa: F401

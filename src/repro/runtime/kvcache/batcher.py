@@ -1,0 +1,319 @@
+"""PagedBatcher — continuous batching over the paged, quantized KV cache.
+
+A drop-in :class:`repro.runtime.serving.ContinuousBatcher` whose KV state is
+a global block pool + per-slot page tables instead of dense (n_slots, s_max)
+slabs:
+
+  * **Admission** looks the prompt up in the radix prefix cache; matched
+    full blocks are referenced (refcount++) into the new request's page
+    table and their prefill is SKIPPED — chunked prefill starts at the first
+    uncached position.  The remaining blocks (through the request's whole
+    generation budget) are allocated up front, so decode never allocates and
+    an admitted request can always run to completion (no mid-flight
+    preemption).  When the free list can't cover the need, cold prefix
+    blocks are evicted LRU; if that still isn't enough the request stays
+    queued until running requests release blocks.
+  * **Prefill chunks** write their KV directly into the owning blocks
+    through the page table (no separate admission cache, no slot-join copy).
+  * **Decode** is the same batched one-token step, with per-slot page tables
+    resolving each slot's blocks; retired slots' zeroed page-table rows
+    deflect their dead writes to the reserved null block.
+  * **kv_bits** ∈ {16, 8, 4}: blocks store raw model-dtype KV or int8/int4
+    codes + per-position scales (the dense cache's quantizer, so paged-8
+    streams are bit-identical to the dense batcher with ``cfg.kv_bits=8``,
+    and paged-16 to the unquantized dense batcher).
+
+Exactness: with greedy sampling and ``s_max`` aligned to
+lcm(chunk, block_size), paged generations are bit-identical to the dense
+batcher's (the gathered page-table view IS the dense cache tensor), and a
+prefix-cache hit never changes outputs — matched blocks hold exactly the KV
+the skipped prefill would have recomputed (matches are additionally aligned
+down to chunk boundaries so dynamic per-chunk activation quantization sees
+identical chunk contents).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.serving import (ContinuousBatcher, Request, _Admission,
+                                   bucket_length)
+
+from .pool import BlockPool
+from .radix import RadixPrefixCache
+
+KV_BITS_CHOICES = (16, 8, 4)
+
+
+def paged_block_bytes(cfg, block_size: int, kv_bits: int) -> int:
+    """HBM bytes one physical block costs across the whole layer stack —
+    the denominator of the effective-capacity claim."""
+    kvh, dh = cfg.n_kv_heads, cfg.dh
+    n_attn = sum(1 for m in cfg.layer_pattern if m.startswith("attn")) \
+        * cfg.n_periods
+    if kv_bits < 16:
+        dh_store = dh // 2 if kv_bits == 4 else dh
+        per_layer = 2 * block_size * kvh * (dh_store + 4)    # codes + f32 scale
+    else:
+        per_layer = 2 * block_size * kvh * dh * jnp.dtype(cfg.dtype).itemsize
+    return per_layer * n_attn
+
+
+def paged_capacity_blocks(cfg, pool_bytes: int, block_size: int,
+                          kv_bits: int) -> int:
+    """Allocatable blocks (excluding the null block) a byte budget buys."""
+    return max(pool_bytes // paged_block_bytes(cfg, block_size, kv_bits) - 1, 0)
+
+
+class PagedBatcher(ContinuousBatcher):
+    """Slot-based continuous batching over a paged KV pool.
+
+    Extra knobs over the dense batcher:
+      kv_bits      : 16 (raw) | 8 | 4 (codes + per-position scales)
+      block_size   : positions per physical block (s_max rounds up to it)
+      num_blocks   : pool size incl. the null block (default: every slot can
+                     hold a full sequence, plus one sequence of slack for
+                     the prefix cache)
+      pool_bytes   : alternative to num_blocks — size the pool to a byte
+                     budget via :func:`paged_capacity_blocks`
+      prefix_cache : enable radix prefix sharing (on by default)
+    """
+
+    def __init__(self, model, params, *, n_slots: int, s_max: int,
+                 kv_bits: int = 16, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 pool_bytes: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 prompt_len: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 autotune: bool = False, metrics=None, mesh=None):
+        if kv_bits not in KV_BITS_CHOICES:
+            raise ValueError(f"kv_bits must be one of {KV_BITS_CHOICES}, "
+                             f"got {kv_bits}")
+        if model.decode_step_paged is None:
+            raise ValueError(
+                f"{model.cfg.name}: the paged KV cache needs an "
+                "attention-only token LM (SSM state has no sequence dim to "
+                "page; embeds/enc-dec stacks have no token stream to share)")
+        if model.cfg.kv_bits:
+            raise ValueError(
+                "paged serving owns KV quantization (kv_bits=...); build the "
+                "model with cfg.kv_bits=0")
+        self.kv_bits = int(kv_bits)
+        self.block_size = int(block_size)
+        self.prefix_cache = bool(prefix_cache)
+        self._num_blocks_arg = num_blocks
+        self._pool_bytes_arg = pool_bytes
+        super().__init__(model, params, n_slots=n_slots, s_max=s_max,
+                         prompt_len=prompt_len, chunk_size=chunk_size,
+                         autotune=autotune, metrics=metrics, mesh=mesh)
+
+    # ------------------------------------------------------------- runtime
+    def _build_runtime(self, model, cfg, mesh):
+        if not self.chunk_size:
+            raise ValueError(
+                f"{cfg.name}: paged serving admits prompts through chunked "
+                "prefill; pass a chunk_size > 0")
+        bs = self.block_size
+        self.s_pad = bucket_length(self.s_max, bs)
+        self.blocks_per_seq = self.s_pad // bs
+        if self._num_blocks_arg is not None:
+            num_blocks = int(self._num_blocks_arg)
+        elif self._pool_bytes_arg is not None:
+            num_blocks = 1 + paged_capacity_blocks(
+                cfg, self._pool_bytes_arg, bs, self.kv_bits)
+        else:
+            num_blocks = 1 + (self.n_slots + 1) * self.blocks_per_seq
+        if num_blocks < 1 + self.blocks_per_seq:
+            raise ValueError(
+                f"pool of {num_blocks} blocks cannot hold one "
+                f"{self.blocks_per_seq}-block sequence (s_max={self.s_max}, "
+                f"block_size={bs})")
+        self.num_blocks = num_blocks
+
+        self.pool_meta = BlockPool(num_blocks)
+        self.radix = RadixPrefixCache(self.pool_meta, bs) \
+            if self.prefix_cache else None
+        from repro.models import transformer as tfm
+        self.pool = tfm.make_pool(cfg, num_blocks, bs, self.kv_bits,
+                                  mesh=mesh)
+        self._pt = np.zeros((self.n_slots, self.blocks_per_seq), np.int32)
+        self._slot_blocks: List[Optional[List[int]]] = [None] * self.n_slots
+        self.metrics.on_kv_blocks(0, num_blocks - 1)
+
+        kv_bits = self.kv_bits
+
+        def _decode_fn(p, t, pool, pt, pos_vec):
+            logits, new_pool = model.decode_step_paged(p, t, pool, pt,
+                                                       pos_vec, kv_bits)
+            return logits, jnp.argmax(logits[:, 0], axis=-1), new_pool
+
+        self._decode_fn = _decode_fn
+        chunk_fn = lambda p, t, pool, pt, pos: \
+            model.prefill_chunk_paged(p, t, pool, pt, pos, kv_bits)
+        if mesh is None:
+            self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+            self._prefill_chunk = jax.jit(chunk_fn, donate_argnums=(2,))
+        else:
+            # TP-sharded paged serving: the pool shards KV heads over
+            # 'model' (pool_specs — block/position dims stay shard-local per
+            # the append rule) and the decode batch replicates.  DP-sharding
+            # the pool needs per-shard pools + sharded page tables (open).
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            shd = self._shd
+            rep = NamedSharding(mesh, P())
+            pool_tmpl = jax.eval_shape(
+                lambda: tfm.make_pool(cfg, num_blocks, bs, kv_bits))
+            pool_sh = shd.named_shardings(
+                mesh, shd.pool_specs(pool_tmpl, cfg, mesh))
+            vspec = tuple(shd.logits_spec(cfg, mesh, 1))[-1]
+            logits_sh = NamedSharding(mesh, P(None, None, vspec))
+            self._decode = jax.jit(
+                _decode_fn, donate_argnums=(2,),
+                in_shardings=(self._psh, rep, pool_sh, rep, rep),
+                out_shardings=(logits_sh, rep, pool_sh))
+            self._prefill_chunk = jax.jit(
+                chunk_fn, donate_argnums=(2,),
+                in_shardings=(self._psh, rep, pool_sh, rep, rep),
+                out_shardings=(logits_sh, pool_sh))
+
+    # -------------------------------------------------------------- submit
+    def _blocks_needed(self, length: int, max_new: int) -> int:
+        """Blocks covering every position the request can ever write:
+        prompt 0..L-1 plus decode appends (the token emitted at budget
+        max_new was preceded by writes up to L+max_new-2), capped by the
+        scheduler's s_max-1 position cap."""
+        n_pos = min(length + max_new - 1, self.s_max)
+        return -(-n_pos // self.block_size)
+
+    def submit(self, req: Request):
+        length = req.tokens.shape[-1] if req.tokens.size else 0
+        if length and req.max_new >= 1:
+            need = self._blocks_needed(length, req.max_new)
+            if need > self.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} KV blocks "
+                    f"(prompt {length} + max_new {req.max_new} at "
+                    f"block_size {self.block_size}) but the pool holds only "
+                    f"{self.num_blocks - 1} allocatable blocks")
+        super().submit(req)
+
+    # ----------------------------------------------------------- admission
+    def _match_prefix(self, req: Request) -> List[int]:
+        """Radix lookup, capped so (a) at least the last prompt token is
+        still prefilled (its logits seed generation) and (b) the match ends
+        on a chunk boundary as well as a block boundary (per-chunk dynamic
+        activation quantization must see the same chunk contents a fresh
+        prefill would).  Metrics are recorded by the caller on a SUCCESSFUL
+        admission only — a pool-exhausted request is re-matched every
+        scheduler step while it waits, and those retries must not inflate
+        the lookup/hit counters."""
+        if self.radix is None:
+            return []
+        length = req.tokens.shape[1]
+        matched = self.radix.match(req.tokens[0])
+        align = math.lcm(self.block_size, self.chunk_size)
+        max_match = (length - 1) // align * align
+        return matched[:max_match // self.block_size]
+
+    def _advance_admission(self):
+        if self._adm is None:
+            slot = self._free_slot()
+            if not self.queue or slot is None:
+                return
+            req = self.queue[0]
+            length = req.tokens.shape[1]
+            shared = self._match_prefix(req)
+            for bid in shared:                   # hold before any eviction
+                self.pool_meta.acquire(bid)
+            need = self._blocks_needed(length, req.max_new) - len(shared)
+            blocks = self.pool_meta.alloc(need)
+            if blocks is None and self.radix is not None:
+                freed = self.radix.evict(need - self.pool_meta.free_blocks)
+                self.metrics.on_evictions(freed)
+                blocks = self.pool_meta.alloc(need)
+            if blocks is None:
+                # pool exhausted by running requests: stay queued (their
+                # blocks were all reserved at admission, so they finish and
+                # release without ever allocating — no deadlock)
+                for bid in shared:
+                    self.pool_meta.release(bid)
+                return
+            self.queue.popleft()
+            req.started_at = time.time()
+            self.metrics.on_admit(req)
+            if self.radix is not None:
+                self.metrics.on_prefix_lookup(
+                    len(shared) * self.block_size, length)
+            owned = shared + blocks
+            self._slot_blocks[slot] = owned
+            # the slot's live page-table row (self._pt) stays ZEROED until
+            # activation: the interleaved batched decode writes a dead KV
+            # row for every not-yet-active slot, and those writes must
+            # deflect to the null block instead of corrupting the freshly
+            # allocated (or shared!) blocks mid-prefill.  Chunks use the
+            # admission's private row.
+            row = np.zeros((1, self.blocks_per_seq), np.int32)
+            row[0, :len(owned)] = owned
+            self._adm_row = row
+            self.metrics.on_kv_blocks(self.pool_meta.used_blocks,
+                                      self.num_blocks - 1)
+            start = len(shared) * self.block_size
+            l_pad = bucket_length(length - start, self.chunk_size)
+            padded = np.zeros((1, l_pad), np.int32)
+            padded[:, :length - start] = req.tokens[:, start:]
+            self._adm = _Admission(req, slot, padded, length, start=start)
+            self.slots[slot] = req               # reserve (done stays True)
+
+        adm = self._adm
+        c = self.chunk_size
+        chunk = jnp.asarray(adm.tokens[:, adm.next_pos:adm.next_pos + c])
+        self.metrics.prefill_chunks += 1
+        logits, self.pool = self._prefill_chunk(
+            self.params, chunk, self.pool, jnp.asarray(self._adm_row),
+            jnp.int32(adm.start + adm.next_pos))
+        adm.next_pos += c
+        if adm.next_pos >= adm.tokens.shape[1]:
+            row = logits[0, (adm.length - 1 - adm.start) % c]
+            self._adm = None
+            self._register_prefix(adm.req, adm.slot)
+            self._pt[adm.slot, :] = self._adm_row[0]
+            self._activate(adm.req, adm.slot, None, row)
+
+    def _register_prefix(self, req: Request, slot: int):
+        """Publish the request's full prompt blocks to the radix cache the
+        moment they are complete (immutable from here on), so concurrent
+        requests with the same prompt already hit them."""
+        if self.radix is None:
+            return
+        full = req.tokens.shape[1] // self.block_size
+        if full:
+            self.radix.insert(req.tokens[0], self._slot_blocks[slot][:full])
+
+    def _join_slot(self, slot: int, one_cache):
+        pass                  # prefill chunks already wrote the slot's blocks
+
+    def _admit_full(self):
+        raise NotImplementedError(
+            "paged serving always admits through chunked prefill")
+
+    # ------------------------------------------------------------- decode
+    def _decode_call(self):
+        logits, greedy_dev, self.pool = self._decode(
+            self.params, jnp.asarray(self.tokens), self.pool,
+            jnp.asarray(self._pt), jnp.asarray(self.pos))
+        return logits, np.asarray(greedy_dev, np.int32)
+
+    # -------------------------------------------------------------- finish
+    def _release_slot(self, req: Request, slot: int):
+        for bid in self._slot_blocks[slot] or ():
+            self.pool_meta.release(bid)
+        self._slot_blocks[slot] = None
+        self._pt[slot, :] = 0               # dead decode writes -> null block
+        self.metrics.on_kv_blocks(self.pool_meta.used_blocks,
+                                  self.num_blocks - 1)

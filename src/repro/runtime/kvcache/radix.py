@@ -1,0 +1,126 @@
+"""Radix prefix cache over block-granular token sequences.
+
+A tree whose edges are ``block_size``-token runs: a node at depth d caches
+the physical block holding positions [(d-1)*bs, d*bs) of every sequence that
+shares the token prefix spelled by the path to it.  Admission walks the tree
+with the new prompt (``match``) and reuses the matched blocks instead of
+re-prefilling them; completed prefills register their full blocks
+(``insert``) so later requests can hit them.
+
+Sharing discipline (the copy-on-write rule made trivial): only FULL blocks
+are ever registered, and full blocks are immutable — a request appends only
+into blocks past its matched prefix, which it owns exclusively.  So there is
+never a write to a shared block, and "copy" on write is simply "the
+remainder is prefilled into fresh blocks".
+
+The tree holds one pool reference per registered block.  Under pool
+pressure, ``evict`` walks leaves in LRU order (``last_used`` is a logical
+clock bumped on every match) and drops their references — blocks still
+referenced by an active request survive the node removal; truly cold blocks
+return to the free list.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .pool import BlockPool
+
+
+class _Node:
+    __slots__ = ("key", "block", "children", "parent", "last_used")
+
+    def __init__(self, key: Optional[bytes], block: int,
+                 parent: Optional["_Node"]):
+        self.key = key                     # bytes of this edge's bs tokens
+        self.block = block                 # physical block id (-1 for root)
+        self.children: Dict[bytes, _Node] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class RadixPrefixCache:
+    def __init__(self, pool: BlockPool, block_size: int):
+        self.pool = pool
+        self.block_size = block_size
+        self.root = _Node(None, -1, None)
+        self._clock = 0
+        self._n_nodes = 0
+
+    def __len__(self) -> int:
+        """Registered (cached) blocks."""
+        return self._n_nodes
+
+    def _keys(self, tokens: np.ndarray) -> List[bytes]:
+        bs = self.block_size
+        t = np.asarray(tokens, np.int32).reshape(-1)
+        return [t[i:i + bs].tobytes() for i in range(0, len(t) // bs * bs, bs)]
+
+    # ------------------------------------------------------------------ match
+    def match(self, tokens: np.ndarray) -> List[int]:
+        """Physical block ids of the longest cached block-aligned prefix of
+        ``tokens``.  Bumps the matched path's LRU clock.  The caller must
+        ``pool.acquire`` each returned block before anything else can evict
+        it."""
+        self._clock += 1
+        node, out = self.root, []
+        for key in self._keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_used = self._clock
+            out.append(child.block)
+            node = child
+        return out
+
+    # ----------------------------------------------------------------- insert
+    def insert(self, tokens: np.ndarray, block_ids: List[int]) -> int:
+        """Register ``block_ids`` as the cache of ``tokens``' full blocks
+        (``len(block_ids)`` leading blocks).  Existing nodes win on conflict
+        (two requests prefilled the same prompt concurrently — the duplicate
+        blocks simply stay owned by their request and free on its release).
+        Returns the number of NEW nodes (pool references taken)."""
+        self._clock += 1
+        node, added = self.root, 0
+        for key, bid in zip(self._keys(tokens), block_ids):
+            child = node.children.get(key)
+            if child is None:
+                self.pool.acquire(bid)
+                child = _Node(key, bid, node)
+                node.children[key] = child
+                self._n_nodes += 1
+                added += 1
+            child.last_used = self._clock
+            node = child
+        return added
+
+    # ------------------------------------------------------------------ evict
+    def _leaves(self) -> List[_Node]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            if n is not self.root and not n.children:
+                out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    def evict(self, n_blocks: int) -> int:
+        """Drop up to ``n_blocks`` cache references, coldest leaves first
+        (evicting a leaf may expose its parent as the next candidate).
+        Returns how many references were dropped; the pool frees each block
+        whose last reference this was."""
+        dropped = 0
+        while dropped < n_blocks:
+            leaves = self._leaves()
+            if not leaves:
+                break
+            leaves.sort(key=lambda nd: nd.last_used)
+            for leaf in leaves:
+                if dropped >= n_blocks:
+                    break
+                del leaf.parent.children[leaf.key]
+                self.pool.release(leaf.block)
+                self._n_nodes -= 1
+                dropped += 1
+        return dropped

@@ -48,6 +48,14 @@ class Metrics:
       iterations, chunk-admission calls, and whole-prompt prefill calls;
       decode_slot_tokens: tokens produced by batched decode (occupancy
       numerator — decode_steps * n_slots is the denominator).
+
+    Paged-KV counters (runtime.kvcache; all zero for the dense batcher):
+      prefix_lookups / prefix_hits / prefix_hit_tokens : radix prefix-cache
+      admissions — lookups, admissions with a non-empty match, and prompt
+      tokens whose prefill was skipped;
+      blocks_evicted : cached blocks dropped under pool pressure;
+      kv_blocks_in_use / kv_blocks_peak / kv_blocks_total : pool occupancy
+      gauge, its high-water mark, and the allocatable pool size.
     """
 
     def __init__(self, n_slots: int = 0):
@@ -63,6 +71,13 @@ class Metrics:
         self.decode_slot_tokens = 0
         self.prefill_chunks = 0
         self.prefill_full = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.blocks_evicted = 0
+        self.kv_blocks_in_use = 0
+        self.kv_blocks_peak = 0
+        self.kv_blocks_total = 0
         self._t0: Optional[float] = None           # first ADMISSION (compute)
         self._t0_submit: Optional[float] = None    # first submit (queue open)
         self._t1: Optional[float] = None
@@ -102,6 +117,24 @@ class Metrics:
     def on_finish(self, req) -> None:
         self.requests_finished += 1
         self._touch()
+
+    # ------------------------------------------------------ paged-KV counters
+    def on_prefix_lookup(self, hit_tokens: int, prompt_tokens: int) -> None:
+        """One radix prefix-cache admission lookup: ``hit_tokens`` prompt
+        positions were served from cached blocks (0 on a miss)."""
+        self.prefix_lookups += 1
+        if hit_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += int(hit_tokens)
+
+    def on_evictions(self, n_blocks: int) -> None:
+        self.blocks_evicted += int(n_blocks)
+
+    def on_kv_blocks(self, in_use: int, total: int) -> None:
+        """Pool occupancy gauge (called on every allocation/release wave)."""
+        self.kv_blocks_in_use = int(in_use)
+        self.kv_blocks_total = int(total)
+        self.kv_blocks_peak = max(self.kv_blocks_peak, int(in_use))
 
     # --------------------------------------------------------------- summary
     @property
@@ -152,6 +185,23 @@ class Metrics:
                 # fraction of decode-slot capacity that produced a token
                 "slot_occupancy": self.decode_slot_tokens / decode_cap,
             },
+            "kv_cache": {
+                "prefix": {
+                    "lookups": self.prefix_lookups,
+                    "hits": self.prefix_hits,
+                    "hit_tokens": self.prefix_hit_tokens,
+                    # fraction of admitted prompt tokens served from cache
+                    "hit_rate": self.prefix_hit_tokens / max(self.prompt_tokens, 1),
+                },
+                "blocks": {
+                    "total": self.kv_blocks_total,
+                    "in_use": self.kv_blocks_in_use,
+                    "peak_in_use": self.kv_blocks_peak,
+                    "utilization": self.kv_blocks_in_use / max(self.kv_blocks_total, 1),
+                    "peak_utilization": self.kv_blocks_peak / max(self.kv_blocks_total, 1),
+                },
+                "evicted_blocks": self.blocks_evicted,
+            },
         }
 
     def format(self) -> str:
@@ -167,4 +217,10 @@ class Metrics:
             f"  queue ms p50 {q['p50']:.1f}  p90 {q['p90']:.1f}  p99 {q['p99']:.1f}\n"
             f"  decode steps {sc['decode_steps']} (occupancy "
             f"{sc['slot_occupancy']:.2f}), prefill chunks {sc['prefill_chunks']}, "
-            f"full prefills {sc['prefill_full']}")
+            f"full prefills {sc['prefill_full']}"
+            + (f"\n  kv blocks {kc['blocks']['in_use']}/{kc['blocks']['total']}"
+               f" (peak {kc['blocks']['peak_in_use']}), prefix hit rate "
+               f"{kc['prefix']['hit_rate']:.2f} "
+               f"({kc['prefix']['hit_tokens']} tok), "
+               f"evicted {kc['evicted_blocks']}"
+               if (kc := s["kv_cache"])["blocks"]["total"] else ""))

@@ -88,9 +88,11 @@ class _Admission:
     """One request mid-chunked-prefill (its cache is not yet slot-resident)."""
     req: Request
     slot: int
-    tokens: np.ndarray                 # (1, L_pad) bucket-padded prompt
+    tokens: np.ndarray                 # (1, L_pad) bucket-padded prompt tail
     length: int                        # true prompt length L
-    next_pos: int = 0                  # next chunk start
+    next_pos: int = 0                  # next chunk start (relative to start)
+    start: int = 0                     # first position to prefill (> 0 when a
+                                       # radix prefix-cache hit covers [0, start))
 
 
 def supports_chunked_prefill(cfg) -> bool:
@@ -166,12 +168,19 @@ class ContinuousBatcher:
         self._adm: Optional[_Admission] = None
         self._adm_cache = None             # reused (1, s_adm) admission cache
         self._just_finished: List[Request] = []
+        # host-side next-token buffer; placed (sharded) at each decode call
+        self.tokens = np.zeros((n_slots, 1), np.int32)
+        self._build_runtime(model, cfg, mesh)
 
+    # ------------------------------------------------------------- runtime
+    def _build_runtime(self, model, cfg, mesh):
+        """Cache construction + step-function jit wiring.  The paged batcher
+        (runtime.kvcache.PagedBatcher) overrides this wholesale: its KV state
+        is a block pool + page tables instead of dense per-slot slabs."""
+        n_slots, s_max = self.n_slots, self.s_max
         from repro.models import transformer as tfm
         self._make_cache = lambda b, s: tfm.make_cache(cfg, b, s, mesh=mesh)
         self.cache = self._make_cache(n_slots, s_max)
-        # host-side next-token buffer; placed (sharded) at each decode call
-        self.tokens = np.zeros((n_slots, 1), np.int32)
 
         # decode fuses the greedy argmax into the step program: one dispatch
         # per step and only a (B,) token vector crosses back to the host
@@ -225,9 +234,10 @@ class ContinuousBatcher:
         rep = NamedSharding(mesh, P())
 
         # slot cache: batch over data axes; admission cache (B=1) replicated
+        slot_tmpl = jax.eval_shape(
+            lambda: tfm.make_cache(cfg, self.n_slots, self.s_max))
         self._slot_cache_sh = shd.named_shardings(mesh, shd.cache_specs(
-            jax.eval_shape(lambda: tfm.make_cache(cfg, self.n_slots, self.s_max)),
-            cfg, mesh, self.n_slots, allow_sp=False))
+            slot_tmpl, cfg, mesh, self.n_slots, allow_sp=False))
         adm_tmpl = jax.eval_shape(lambda: tfm.make_cache(cfg, 1, self.s_adm))
         self._adm_cache_sh = shd.named_shardings(mesh, shd.cache_specs(
             adm_tmpl, cfg, mesh, 1, allow_sp=False))
@@ -242,8 +252,30 @@ class ContinuousBatcher:
             lambda p, b: model.prefill(p, b, self.s_adm),
             in_shardings=(self._psh, {"tokens": rep}),
             out_shardings=(one_logits_sh, self._adm_cache_sh))
+
+        # Pure-DP decode runs SHARD-LOCAL via shard_map: params replicate and
+        # nothing in a decode step crosses batch rows, so each device steps
+        # its local slots (including the per-token KV row write, which pjit
+        # lowered as a cross-device scatter-gather — ROADMAP leftover) and
+        # the compiled step is fully collective-free.  Gated on precisions
+        # without batch-shaped dynamic activation quantization: a per-tensor
+        # act scale computed over the LOCAL batch would change numerics vs
+        # the single-device stream (the exactness contract).
+        decode_fn = self._decode_fn
+        if self._shard_local_decode(cfg, mesh, baxes):
+            from repro.parallel._compat import shard_map
+            cache_specs = shd.cache_specs(slot_tmpl, cfg, mesh, self.n_slots,
+                                          allow_sp=False)
+            decode_fn = shard_map(
+                self._decode_fn, mesh=mesh,
+                in_specs=(jax.tree_util.tree_map(
+                              lambda l: P(*(None,) * len(l.shape)), self.params),
+                          P(baxes, None), cache_specs, P(baxes)),
+                out_specs=(shd.logits_spec(cfg, mesh, self.n_slots),
+                           P(baxes), cache_specs),
+                check_vma=False)
         self._decode = jax.jit(
-            self._decode_fn, donate_argnums=(2,),
+            decode_fn, donate_argnums=(2,),
             in_shardings=(self._psh, tok_sh, self._slot_cache_sh, pos_sh),
             out_shardings=(dec_logits_sh, pos_sh, self._slot_cache_sh))
         if self.chunk_size:
@@ -254,6 +286,18 @@ class ContinuousBatcher:
                 out_shardings=(one_logits_sh, self._adm_cache_sh))
 
     # ---------------------------------------------------------------- submit
+    def _shard_local_decode(self, cfg, mesh, baxes) -> bool:
+        """Whether the batched decode step can run shard-local (shard_map):
+        pure-DP (params replicated, no TP collectives inside the step), the
+        slot batch actually sharded, and no batch-shaped numerics (dynamic
+        per-tensor activation quantization sees the whole batch under pjit
+        but only the local shard under shard_map)."""
+        from repro.core.precision import A_FLOAT, W_FLOAT, get_precision, signed
+        if baxes is None or not self._shd.pure_dp(cfg, mesh):
+            return False
+        pcfg = signed(get_precision(cfg.precision))
+        return pcfg.w_mode == W_FLOAT or pcfg.a_mode == A_FLOAT
+
     def submit(self, req: Request):
         if req.tokens.size == 0 or req.tokens.shape[-1] < 1:
             # bucket_length(0, chunk) == 0 would produce a zero-length
@@ -261,10 +305,22 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request {req.rid}: empty prompt (0 tokens); prompts must "
                 "contain at least one token")
-        if req.tokens.shape[-1] >= self.s_max:
+        if req.max_new < 1:
+            # max_new=0 used to fall through the `max_new <= 1` finish check
+            # in _activate and still emit one token — reject instead of
+            # silently producing output against a zero budget
             raise ValueError(
-                f"request {req.rid}: prompt length {req.tokens.shape[-1]} "
-                f"needs s_max > {req.tokens.shape[-1]} (got {self.s_max})")
+                f"request {req.rid}: max_new={req.max_new} must be >= 1 "
+                "(the first token is sampled from the prefill logits, so "
+                "every admitted request emits at least one token)")
+        length = req.tokens.shape[-1]
+        if length >= self.s_max:
+            raise ValueError(
+                f"request {req.rid}: prompt length {length} needs s_max > "
+                f"{length} (got {self.s_max}); the cache budget admits "
+                f"prompts up to {self.s_max - 1} tokens, so this prompt is "
+                f"{length - (self.s_max - 1)} tokens over the remaining "
+                "budget")
         req.submitted_at = time.time()
         self.metrics.on_submit(req)
         self.queue.append(req)
@@ -298,9 +354,14 @@ class ContinuousBatcher:
     def _finish(self, req: Request, slot: int):
         req.finished_at = time.time()
         self.metrics.on_finish(req)
+        self._release_slot(req, slot)
         self.done[slot] = True
         self.slots[slot] = None
         self._just_finished.append(req)
+
+    def _release_slot(self, req: Request, slot: int):
+        """Dense slots hold no shared state; the paged batcher releases the
+        request's block references (and registers its prefix) here."""
 
     # ----------------------------------------------------------------- admit
     def _free_slot(self) -> Optional[int]:
@@ -319,10 +380,15 @@ class ContinuousBatcher:
         if finished:
             self._finish(req, slot)
             return
-        self.cache = self._write_slot(self.cache, one_cache, slot)
+        self._join_slot(slot, one_cache)
         self.tokens[slot, 0] = tok
         self.pos[slot] = length
         self.done[slot] = False
+
+    def _join_slot(self, slot: int, one_cache):
+        """Copy the admission cache into slot ``slot`` (no-op for the paged
+        batcher, whose prefill chunks write blocks in place)."""
+        self.cache = self._write_slot(self.cache, one_cache, slot)
 
     def _advance_admission(self):
         """Chunked path: at most ONE prefill chunk per scheduler step, so
@@ -373,6 +439,13 @@ class ContinuousBatcher:
             self._activate(req, slot, one_cache, logits[0, -1])
 
     # ----------------------------------------------------------------- step
+    def _decode_call(self):
+        """One batched decode dispatch; returns (logits, greedy (B,) np)."""
+        logits, greedy_dev, self.cache = self._decode(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.pos))
+        return logits, np.asarray(greedy_dev, np.int32)
+
     def step(self):
         """One scheduler iteration: a prefill chunk (if a request is being
         admitted) plus one decode step for every active slot.  Returns the
@@ -382,11 +455,8 @@ class ContinuousBatcher:
         else:
             self._admit_full()
         if not all(self.done):
-            logits, greedy_dev, self.cache = self._decode(
-                self.params, jnp.asarray(self.tokens), self.cache,
-                jnp.asarray(self.pos))
+            logits, greedy = self._decode_call()
             self.metrics.decode_steps += 1
-            greedy = np.asarray(greedy_dev, np.int32)
             for i, req in enumerate(self.slots):
                 if req is None or self.done[i]:
                     continue

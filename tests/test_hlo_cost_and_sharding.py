@@ -1,5 +1,11 @@
 """Unit tests for the trip-count-aware HLO cost parser (synthetic HLO text)
-and hypothesis property tests for the sharding rules."""
+and hypothesis property tests for the sharding rules — plus the compiled-HLO
+assertion that the pure-DP serving decode step is fully collective-free
+(shard_map-local cache writes)."""
+import os
+import subprocess
+import sys
+
 import jax
 import numpy as np
 import pytest
@@ -229,3 +235,70 @@ def test_named_shardings_tree():
     out = sh.named_shardings(mesh, specs)
     assert out["a"].spec == P("data", None) and out["a"].mesh.shape == mesh.shape
     assert out["b"]["c"].spec == P()
+
+
+def test_pool_specs_never_shard_block_or_position_dims():
+    """Paged KV pool: appends scatter at dynamic (block, offset) coordinates,
+    so only the KV-head dim may shard (over 'model', when TP applies)."""
+    mesh = _mesh((4, 4))
+    big = _cfg(2048, 8, 4, 128, 4096)          # TP applies, kv=4 divides 4
+    pool = {"layer_0": {"k": FakeLeaf((2, 10, 16, 4, 32)),
+                        "v": FakeLeaf((2, 10, 16, 4, 32)),
+                        "ks": FakeLeaf((2, 10, 16, 4, 1)),
+                        "vs": FakeLeaf((2, 10, 16, 4, 1))}}
+    specs = sh.pool_specs(pool, big, mesh)
+    for leaf in specs["layer_0"].values():
+        t = tuple(leaf)
+        assert t[:3] == (None, None, None)     # periods, blocks, positions
+        assert t[3] == "model" and t[4] is None
+    # misaligned KV heads replicate; pure-DP models always replicate
+    odd = _cfg(2048, 9, 3, 128, 4096)
+    assert tuple(sh.pool_specs(pool, odd, mesh)["layer_0"]["k"]) == (None,) * 5
+    small = _cfg(576, 9, 3, 1536, 4096)
+    assert tuple(sh.pool_specs(pool, small, mesh)["layer_0"]["k"]) == (None,) * 5
+
+
+# ---------------------------------------------------------------------------
+# compiled decode step on a dp mesh: fully collective-free (shard_map-local
+# per-token KV row writes — the ROADMAP leftover this PR closes)
+# ---------------------------------------------------------------------------
+_DECODE_HLO_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models import build_model, reduce_for_smoke
+from repro.runtime.serving import ContinuousBatcher
+from repro.launch.mesh import make_mesh
+
+cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                          dtype="float32")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+for spec in [(8, 1), (2, 4)]:
+    b = ContinuousBatcher(model, params, n_slots=8, s_max=24, chunk_size=4,
+                          mesh=make_mesh(*spec))
+    txt = b._decode.lower(b.params, jnp.asarray(b.tokens), b.cache,
+                          jnp.asarray(b.pos)).compile().as_text()
+    for coll in ("all-gather", "all-reduce", "all-to-all",
+                 "collective-permute", "reduce-scatter"):
+        assert coll not in txt, (spec, coll)
+    print(f"DECODE_LOCAL_{spec[0]}x{spec[1]}_OK")
+print("DECODE_SHARD_LOCAL_OK")
+"""
+
+
+def test_decode_step_collective_free_on_dp_mesh_8dev():
+    """Pure-DP serving decode compiles to ZERO collectives: the per-token KV
+    row write (formerly a cross-device scatter/gather under pjit) now runs
+    shard-local under shard_map."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.pop("XLA_FLAGS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", _DECODE_HLO_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "DECODE_SHARD_LOCAL_OK" in out.stdout

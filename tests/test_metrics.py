@@ -82,6 +82,42 @@ def test_throughput_window_starts_at_first_admission():
                - s["tokens"]["generated"]) < 1e-6
 
 
+# ---------------------------------------------------------------------------
+# paged-KV counters (prefix hit rate / cache utilization / evictions)
+# ---------------------------------------------------------------------------
+def test_kv_cache_counters_default_zero_and_absent_from_format():
+    m = Metrics(n_slots=2)
+    s = m.summary()["kv_cache"]
+    assert s["prefix"] == {"lookups": 0, "hits": 0, "hit_tokens": 0,
+                           "hit_rate": 0.0}
+    assert s["blocks"]["total"] == 0 and s["blocks"]["utilization"] == 0.0
+    assert s["evicted_blocks"] == 0
+    assert "kv blocks" not in m.format()       # dense batcher: no noise
+
+
+def test_kv_cache_prefix_and_eviction_accounting():
+    m = Metrics(n_slots=2)
+    r = _req(prompt_len=10)
+    m.on_submit(r)
+    m.on_admit(r)                              # prompt_tokens += 10
+    m.on_prefix_lookup(8, 10)                  # 8 of 10 tokens from cache
+    m.on_prefix_lookup(0, 6)                   # miss
+    m.on_evictions(3)
+    m.on_kv_blocks(5, 20)
+    m.on_kv_blocks(12, 20)
+    m.on_kv_blocks(4, 20)
+    s = m.summary()["kv_cache"]
+    assert s["prefix"]["lookups"] == 2 and s["prefix"]["hits"] == 1
+    assert s["prefix"]["hit_tokens"] == 8
+    assert s["prefix"]["hit_rate"] == 8 / 10   # over admitted prompt tokens
+    assert s["blocks"] == {"total": 20, "in_use": 4, "peak_in_use": 12,
+                           "utilization": 4 / 20,
+                           "peak_utilization": 12 / 20}
+    assert s["evicted_blocks"] == 3
+    assert "kv blocks 4/20" in m.format()
+    assert "prefix hit rate 0.80" in m.format()
+
+
 def test_throughput_windows_coincide_under_immediate_admission():
     """No queueing: both windows agree (continuity for old bench numbers)."""
     m = Metrics(n_slots=1)

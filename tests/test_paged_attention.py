@@ -1,0 +1,230 @@
+"""Paged-attention kernel vs oracle (page-table gather, quantized blocks,
+null-block deflection) and the engine's attention-kernel registry: dispatch,
+xla fallback, serving-path bit-exactness, and the block-size autotune."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import engine, tuning
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_serving_ref)
+from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _pool(nb, bs, kv, dh, kv_bits):
+    if kv_bits == 16:
+        mk = lambda: jnp.asarray(
+            RNG.normal(size=(nb, bs, kv, dh)).astype(np.float32))
+        return mk(), None, mk(), None
+    qmax = (1 << (min(kv_bits, 8) - 1)) - 1
+    dh_store = dh // 2 if kv_bits == 4 else dh
+    mk = lambda: jnp.asarray(RNG.integers(
+        -qmax, qmax + 1, (nb, bs, kv, dh_store)).astype(np.int8))
+    ms = lambda: jnp.asarray(RNG.uniform(
+        1e-3, 1e-1, (nb, bs, kv, 1)).astype(np.float32))
+    return mk(), ms(), mk(), ms()
+
+
+def _page_table(b, n_blocks, nb_pool):
+    """Distinct physical blocks per (b, j) drawn from [1, nb_pool)."""
+    ids = RNG.permutation(nb_pool - 1)[: b * n_blocks] + 1
+    return jnp.asarray(ids.reshape(b, n_blocks).astype(np.int32))
+
+
+@pytest.mark.parametrize("b,kv,g,dh,bs,nblk,kv_bits", [
+    (2, 2, 4, 64, 16, 8, 8),
+    (1, 4, 1, 128, 32, 4, 8),      # MQA-style grouping 1
+    (3, 1, 8, 64, 16, 4, 16),      # float blocks
+    (2, 2, 2, 64, 16, 8, 4),       # nibble-packed blocks
+])
+def test_paged_attention_kernel_matches_ref(b, kv, g, dh, bs, nblk, kv_bits):
+    nb_pool = b * nblk + 3
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    kp, ks, vp, vs = _pool(nb_pool, bs, kv, dh, kv_bits)
+    pt = _page_table(b, nblk, nb_pool)
+    pos = jnp.asarray(RNG.integers(1, nblk * bs, (b,)).astype(np.int32))
+    got = paged_attention(q, kp, ks, vp, vs, pt, pos, kv_bits=kv_bits,
+                          interpret=True)
+    want = paged_attention_ref(q, kp, ks, vp, vs, pt, pos, kv_bits=kv_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_unreferenced_blocks_are_invisible():
+    """Poisoning pool blocks no page table references (other requests' data,
+    the null block) must not change any output."""
+    b, kv, g, dh, bs, nblk = 2, 2, 2, 64, 16, 4
+    nb_pool = b * nblk + 4
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    kp, ks, vp, vs = _pool(nb_pool, bs, kv, dh, 8)
+    pt = _page_table(b, nblk, nb_pool)
+    pos = jnp.asarray([nblk * bs - 1, 7], np.int32)
+    out1 = paged_attention(q, kp, ks, vp, vs, pt, pos, interpret=True)
+    unref = sorted(set(range(nb_pool)) - set(np.asarray(pt).ravel().tolist()))
+    kp2 = jnp.asarray(np.asarray(kp)).at[jnp.asarray(unref)].set(127)
+    vp2 = jnp.asarray(np.asarray(vp)).at[jnp.asarray(unref)].set(127)
+    out2 = paged_attention(q, kp2, ks, vp2, vs, pt, pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_paged_attention_masks_past_pos():
+    """Blocks wholly beyond pos contribute nothing even with garbage."""
+    b, kv, g, dh, bs, nblk = 1, 2, 2, 64, 16, 4
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    kp, ks, vp, vs = _pool(nblk + 1, bs, kv, dh, 8)
+    pt = jnp.asarray([[1, 2, 3, 4]], np.int32)
+    pos = jnp.int32(bs - 1)                       # only block 1 visible
+    out1 = paged_attention(q, kp, ks, vp, vs, pt, pos, interpret=True)
+    kp2 = jnp.asarray(np.asarray(kp)).at[2:].set(127)
+    out2 = paged_attention(q, kp2, ks, vp, vs, pt, pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_paged_ref_equals_dense_gather():
+    """The paged oracle over a page table == dense decode attention over the
+    gathered cache (same codes, same scales)."""
+    b, kv, g, dh, bs, nblk = 2, 2, 4, 32, 8, 3
+    nb_pool = b * nblk + 1
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    kp, ks, vp, vs = _pool(nb_pool, bs, kv, dh, 8)
+    pt = _page_table(b, nblk, nb_pool)
+    pos = jnp.asarray([13, 20], np.int32)
+    got = paged_attention_ref(q, kp, ks, vp, vs, pt, pos)
+    gather = lambda leaf: leaf[pt].reshape(b, nblk * bs, *leaf.shape[2:])
+    want = decode_attention_serving_ref(q, gather(kp), gather(ks),
+                                        gather(vp), gather(vs), pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine attention registry
+# ---------------------------------------------------------------------------
+def test_attention_registry_resolution_and_fallback():
+    ks = engine.available_attention_kernels()
+    assert (engine.ATTN_DECODE, 8, engine.BACKEND_PALLAS) in ks
+    assert (engine.ATTN_PAGED, 16, engine.BACKEND_PALLAS) in ks
+    # 4-bit dense decode has no Pallas kernel -> xla fallback
+    fn = engine.resolve_attention(engine.ATTN_DECODE, 4, engine.BACKEND_PALLAS)
+    assert fn is engine.resolve_attention(engine.ATTN_DECODE, 4,
+                                          engine.BACKEND_XLA)
+    with pytest.raises(KeyError):
+        engine.resolve_attention("nope", 8, engine.BACKEND_XLA)
+
+
+def test_engine_decode_attention_backends_agree():
+    """engine.decode_attention: pallas(interpret) vs xla reference across
+    cache widths — the serving decode path dispatches through this."""
+    b, s, kv, g, dh = 3, 64, 2, 4, 32
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    for kv_bits in (8, 4):
+        qmax = (1 << (kv_bits - 1)) - 1
+        dh_store = dh // 2 if kv_bits == 4 else dh
+        mk = lambda: jnp.asarray(RNG.integers(
+            -qmax, qmax + 1, (b, s, kv, dh_store)).astype(np.int8))
+        ms = lambda: jnp.asarray(RNG.uniform(
+            1e-3, 1e-1, (b, s, kv, 1)).astype(np.float32))
+        kc, ksc, vc, vsc = mk(), ms(), mk(), ms()
+        pos = jnp.asarray([5, 30, 63], np.int32)
+        xla = engine.decode_attention(q, kc, ksc, vc, vsc, pos,
+                                      kv_bits=kv_bits, backend="xla")
+        pal = engine.decode_attention(q, kc, ksc, vc, vsc, pos,
+                                      kv_bits=kv_bits, backend="pallas",
+                                      interpret=True)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_engine_paged_attention_backends_agree():
+    b, kv, g, dh, bs, nblk = 2, 2, 2, 64, 16, 4
+    nb_pool = b * nblk + 1
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    for kv_bits in (16, 8):
+        kp, ks, vp, vs = _pool(nb_pool, bs, kv, dh, kv_bits)
+        pt = _page_table(b, nblk, nb_pool)
+        pos = jnp.asarray([20, 40], np.int32)
+        xla = engine.paged_attention(q, kp, ks, vp, vs, pt, pos,
+                                     kv_bits=kv_bits, backend="xla")
+        pal = engine.paged_attention(q, kp, ks, vp, vs, pt, pos,
+                                     kv_bits=kv_bits, backend="pallas",
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_per_slot_positions():
+    """The dense kernel's pos operand accepts per-slot (B,) vectors: each
+    row masks at its own position (continuous batching)."""
+    b, s, kv, g, dh = 2, 64, 2, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    qmax = 127
+    kc = jnp.asarray(RNG.integers(-qmax, qmax + 1, (b, s, kv, dh)).astype(np.int8))
+    vc = jnp.asarray(RNG.integers(-qmax, qmax + 1, (b, s, kv, dh)).astype(np.int8))
+    ks = jnp.asarray(RNG.uniform(1e-3, 1e-1, (b, s, kv, 1)).astype(np.float32))
+    vs = jnp.asarray(RNG.uniform(1e-3, 1e-1, (b, s, kv, 1)).astype(np.float32))
+    pos = jnp.asarray([7, 45], np.int32)
+    got = decode_attention(q, kc, ks, vc, vs, pos, chunk=16, interpret=True)
+    for i in range(b):
+        want = decode_attention(q[i:i + 1], kc[i:i + 1], ks[i:i + 1],
+                                vc[i:i + 1], vs[i:i + 1], jnp.int32(pos[i]),
+                                chunk=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want[0]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_serving_decode_dispatch_bit_exact_vs_inline_math(tmp_path,
+                                                          monkeypatch):
+    """The engine-dispatched decode path (xla impl) is BIT-identical to the
+    pre-dispatch inline formulation (dequant + layers._attend) — wiring the
+    registry into models.layers changed nothing numerically off-TPU."""
+    from repro.models import layers as L
+    from repro.models.config import ModelConfig
+    b, s, kv, h, dh = 3, 32, 2, 4, 16
+    g = h // kv
+    cfg = ModelConfig(name="t", n_layers=1, d_model=h * dh, n_heads=h,
+                      n_kv_heads=kv, kv_bits=8)
+    qmax = 127
+    q = jnp.asarray(RNG.normal(size=(b, 1, h, dh)).astype(np.float32))
+    kc = jnp.asarray(RNG.integers(-qmax, qmax + 1, (b, s, kv, dh)).astype(np.int8))
+    vc = jnp.asarray(RNG.integers(-qmax, qmax + 1, (b, s, kv, dh)).astype(np.int8))
+    ks = jnp.asarray(RNG.uniform(1e-3, 1e-1, (b, s, kv, 1)).astype(np.float32))
+    vs = jnp.asarray(RNG.uniform(1e-3, 1e-1, (b, s, kv, 1)).astype(np.float32))
+    pos_b = jnp.asarray([3, 17, 31], np.int32)
+
+    kk = L._kv_dequant(kc, ks, jnp.float32)
+    vv = L._kv_dequant(vc, vs, jnp.float32)
+    mask = (jnp.arange(s)[None, :] <= pos_b[:, None])[:, None, None]
+    inline = L._attend(q, kk, vv, mask, cfg)                 # (B, 1, H*Dh)
+
+    q4 = q[:, 0].reshape(b, kv, g, dh)
+    ref = decode_attention_serving_ref(q4, kc, ks, vc, vs, pos_b)
+    np.testing.assert_array_equal(np.asarray(inline),
+                                  np.asarray(ref.reshape(b, 1, h * dh)))
+
+
+def test_autotune_attention_persists_and_short_circuits(tmp_path,
+                                                        monkeypatch):
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tuning.json"))
+    tuning.reset()
+    e1 = engine.autotune_decode_attention(b=2, s=256, kv=2, g=2, dh=32,
+                                          iters=1)
+    assert e1["block"][2] in (128, 256)
+    sweeps = tuning.stats()["sweeps"]
+    e2 = engine.autotune_decode_attention(b=2, s=256, kv=2, g=2, dh=32,
+                                          iters=1)
+    assert tuning.stats()["sweeps"] == sweeps        # cache hit, no re-sweep
+    assert e2["block"] == e1["block"]
+
+    e3 = engine.autotune_kv_block_size(b=2, kv=2, g=2, dh=32, s_max=64,
+                                       candidates=(16, 32), iters=1)
+    # candidates plus the clipped default (one whole-sequence block)
+    assert e3["block"][2] in (16, 32, 64)
+    assert engine.preferred_kv_block_size(b=2, kv=2, g=2, dh=32, s_max=64,
+                                          kv_bits=8) == e3["block"][2]
+    # cold cache (different shape class) -> default, never a sweep
+    assert engine.preferred_kv_block_size(b=2, kv=2, g=2, dh=32, s_max=128,
+                                          kv_bits=8, default=16) == 16
+    tuning.reset()

@@ -252,6 +252,33 @@ def test_submit_rejects_overlong_prompt():
         batcher.submit(Request(rid=0, tokens=_prompt(8, 0, cfg.vocab)))
 
 
+def test_submit_overlong_prompt_reports_cache_budget():
+    """The too-long-prompt error states the remaining cache budget, not just
+    the raw s_max comparison."""
+    cfg, model, params = _setup()
+    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=8)
+    with pytest.raises(ValueError, match=r"up to 7 tokens.*3 tokens over"):
+        batcher.submit(Request(rid=0, tokens=_prompt(10, 0, cfg.vocab)))
+
+
+def test_submit_rejects_nonpositive_max_new():
+    """max_new=0 used to fall through the `max_new <= 1` finish check and
+    still emit a token; now it (and negatives) are rejected up front and the
+    scheduler stays serviceable."""
+    cfg, model, params = _setup()
+    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=12,
+                                chunk_size=4)
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_new"):
+            batcher.submit(Request(rid=0, tokens=_prompt(4, 0, cfg.vocab),
+                                   max_new=bad))
+    assert batcher.metrics.requests_submitted == 0
+    # the boundary budget still emits exactly one token
+    batcher.submit(Request(rid=1, tokens=_prompt(4, 0, cfg.vocab), max_new=1))
+    done = batcher.run()
+    assert len(done) == 1 and len(done[0].output) == 1
+
+
 def test_submit_rejects_empty_prompt():
     """bucket_length(0, chunk) == 0 would admit a zero-length prefill (no
     chunks, never a first token): empty prompts must be rejected up front,
