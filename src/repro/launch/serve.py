@@ -108,13 +108,16 @@ def _batcher_loop(model, params, cfg, args, mesh=None):
             model, params, n_slots=args.slots or args.requests, s_max=s_max,
             kv_bits=args.kv_bits, block_size=block_size,
             prefix_cache=args.prefix_cache,
+            reserve=args.reserve, preemption=args.preemption,
+            pool_bytes=args.pool_bytes or None,
             prompt_len=args.prompt_len, chunk_size=args.chunk_size,
             autotune=args.autotune, mesh=mesh)
         print(f"paged KV cache: {batcher.num_blocks - 1} blocks x "
               f"{batcher.block_size} positions at kv_bits={args.kv_bits} "
               f"({paged_block_bytes(cfg, batcher.block_size, args.kv_bits)} "
               f"B/block), prefix cache "
-              f"{'on' if args.prefix_cache else 'off'}")
+              f"{'on' if args.prefix_cache else 'off'}, "
+              f"reserve={args.reserve}, preemption={args.preemption}")
     else:
         batcher = ContinuousBatcher(
             model, params, n_slots=args.slots or args.requests, s_max=s_max,
@@ -180,6 +183,23 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="radix prefix sharing across requests (--paged)")
+    ap.add_argument("--reserve", choices=["prompt", "budget"],
+                    default="prompt",
+                    help="--paged admission policy: 'prompt' reserves only "
+                         "the prompt's blocks (decode allocates on demand, "
+                         "admits aggressively), 'budget' reserves the whole "
+                         "generation budget up front (never preempts)")
+    ap.add_argument("--preemption", choices=["recompute", "off"],
+                    default="recompute",
+                    help="--paged pool-exhaustion policy: 'recompute' "
+                         "preempts the latest-admitted request and replays "
+                         "it via chunked prefill (radix suffix hits make "
+                         "that cheap); 'off' stalls starved slots until "
+                         "blocks free up")
+    ap.add_argument("--pool-bytes", type=int, default=0,
+                    help="--paged pool byte budget (0 -> size the pool to "
+                         "n_slots+1 full sequences); lets you overcommit "
+                         "the pool below the workload's aggregate budget")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (0 -> one per request)")

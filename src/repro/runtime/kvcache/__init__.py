@@ -18,12 +18,19 @@ that actually fills HBM:
     pool + per-slot page tables.  Blocks store raw model-dtype KV
     (kv_bits=16) or int8/int4 codes + per-position scales (kv_bits=8/4 via
     the same quantizer as the dense cache), multiplying effective cache
-    capacity at fixed memory.
+    capacity at fixed memory.  Admission reserves only the prompt's blocks
+    by default (``reserve="prompt"``): decode allocates on demand, and pool
+    exhaustion preempts the latest-admitted request
+    (``preemption="recompute"`` — blocks released, re-queued, re-admission
+    prefills prompt + generated tokens, mostly via radix suffix hits), so
+    the pool can be overcommitted far below the workload's aggregate
+    generation budget while greedy streams stay bit-identical.
 
 The attention indirection itself lives in
 :mod:`repro.kernels.paged_attention` (Pallas page-table gather kernel +
 jnp reference), dispatched through :mod:`repro.kernels.engine`.
 """
-from .batcher import PagedBatcher, paged_block_bytes, paged_capacity_blocks  # noqa: F401
+from .batcher import (PagedBatcher, paged_block_bytes,  # noqa: F401
+                      paged_capacity_blocks)
 from .pool import BlockPool  # noqa: F401
 from .radix import RadixPrefixCache  # noqa: F401

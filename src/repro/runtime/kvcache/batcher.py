@@ -7,17 +7,32 @@ slabs:
   * **Admission** looks the prompt up in the radix prefix cache; matched
     full blocks are referenced (refcount++) into the new request's page
     table and their prefill is SKIPPED — chunked prefill starts at the first
-    uncached position.  The remaining blocks (through the request's whole
-    generation budget) are allocated up front, so decode never allocates and
-    an admitted request can always run to completion (no mid-flight
-    preemption).  When the free list can't cover the need, cold prefix
-    blocks are evicted LRU; if that still isn't enough the request stays
-    queued until running requests release blocks.
+    uncached position.  Under ``reserve="prompt"`` (the default) admission
+    reserves only the blocks the *prompt* needs; ``reserve="budget"`` keeps
+    the old reserve-everything policy (every block through the generation
+    budget up front, so decode never allocates and nothing is ever
+    preempted — capacity stays budget-bound).
+  * **Decode** allocates lazily: a slot crossing a block boundary takes one
+    block from the pool right before the batched step.  When the pool is
+    exhausted mid-flight, the scheduler **preempts** the lowest-priority
+    running request — latest-admitted first, the mid-flight admission
+    before any active slot — releasing its blocks and re-queuing it at the
+    queue head with its generated tokens carried along; re-admission
+    prefills prompt + generated tokens (chunked), so the stream continues
+    bit-exactly without replaying a token.  The recompute is mostly radix
+    hits because preemption and release both register the victim's full
+    (prompt + generated) block-aligned prefix.  With ``preemption="off"``
+    an allocation-starved slot instead *stalls* (its dead write deflects to
+    the null block; the token is re-fed once a block frees) — and the
+    scheduler raises if every active slot is stalled with no admission in
+    flight, since no progress is then possible.
+  * **Generated-suffix sharing**: ``_release_slot`` and preemption register
+    decode-written blocks in the radix tree (kind ``suffix``) for float-act
+    configs; quantized-act configs register prompt blocks only — their
+    decode KV is batch-shaped (per-tensor dynamic act scales over the whole
+    decode batch), so a B=1 recompute could not reproduce it bit-exactly.
   * **Prefill chunks** write their KV directly into the owning blocks
     through the page table (no separate admission cache, no slot-join copy).
-  * **Decode** is the same batched one-token step, with per-slot page tables
-    resolving each slot's blocks; retired slots' zeroed page-table rows
-    deflect their dead writes to the reserved null block.
   * **kv_bits** ∈ {16, 8, 4}: blocks store raw model-dtype KV or int8/int4
     codes + per-position scales (the dense cache's quantizer, so paged-8
     streams are bit-identical to the dense batcher with ``cfg.kv_bits=8``,
@@ -25,17 +40,24 @@ slabs:
 
 Exactness: with greedy sampling and ``s_max`` aligned to
 lcm(chunk, block_size), paged generations are bit-identical to the dense
-batcher's (the gathered page-table view IS the dense cache tensor), and a
-prefix-cache hit never changes outputs — matched blocks hold exactly the KV
-the skipped prefill would have recomputed (matches are additionally aligned
-down to chunk boundaries so dynamic per-chunk activation quantization sees
-identical chunk contents).
+batcher's REGARDLESS of preemption timing — the recompute prefill sees the
+identical token sequence chunk-aligned (matches align down to
+lcm(block, chunk) boundaries), per-position attention math is row-consistent
+across chunk and decode dispatch shapes for float-act stacks, and a
+prefix/suffix-cache hit never changes outputs: matched blocks hold exactly
+the KV the skipped prefill would have recomputed.
+
+Progress: the earliest-admitted active request is never a preemption victim
+(victims are strictly later-admitted) and a sole resident request never
+needs more than ``blocks_per_seq`` blocks — which the constructor guarantees
+the pool holds — so every admitted request eventually finishes even on a
+pool overcommitted far below the workload's aggregate budget.
 """
 from __future__ import annotations
 
 import math
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +70,8 @@ from .pool import BlockPool
 from .radix import RadixPrefixCache
 
 KV_BITS_CHOICES = (16, 8, 4)
+RESERVE_CHOICES = ("prompt", "budget")
+PREEMPTION_CHOICES = ("recompute", "off")
 
 
 def paged_block_bytes(cfg, block_size: int, kv_bits: int) -> int:
@@ -82,6 +106,13 @@ class PagedBatcher(ContinuousBatcher):
       pool_bytes   : alternative to num_blocks — size the pool to a byte
                      budget via :func:`paged_capacity_blocks`
       prefix_cache : enable radix prefix sharing (on by default)
+      reserve      : "prompt" (default) — admission reserves prompt blocks
+                     only, decode allocates on demand; "budget" — reserve
+                     the whole generation budget up front (never preempts)
+      preemption   : "recompute" (default) — on pool exhaustion, preempt the
+                     latest-admitted request and recompute it via chunked
+                     prefill at re-admission; "off" — starved slots stall
+                     until blocks free up
     """
 
     def __init__(self, model, params, *, n_slots: int, s_max: int,
@@ -89,12 +120,20 @@ class PagedBatcher(ContinuousBatcher):
                  num_blocks: Optional[int] = None,
                  pool_bytes: Optional[int] = None,
                  prefix_cache: bool = True,
+                 reserve: str = "prompt",
+                 preemption: str = "recompute",
                  prompt_len: Optional[int] = None,
                  chunk_size: Optional[int] = None,
                  autotune: bool = False, metrics=None, mesh=None):
         if kv_bits not in KV_BITS_CHOICES:
             raise ValueError(f"kv_bits must be one of {KV_BITS_CHOICES}, "
                              f"got {kv_bits}")
+        if reserve not in RESERVE_CHOICES:
+            raise ValueError(f"reserve must be one of {RESERVE_CHOICES}, "
+                             f"got {reserve!r}")
+        if preemption not in PREEMPTION_CHOICES:
+            raise ValueError(f"preemption must be one of "
+                             f"{PREEMPTION_CHOICES}, got {preemption!r}")
         if model.decode_step_paged is None:
             raise ValueError(
                 f"{model.cfg.name}: the paged KV cache needs an "
@@ -107,8 +146,19 @@ class PagedBatcher(ContinuousBatcher):
         self.kv_bits = int(kv_bits)
         self.block_size = int(block_size)
         self.prefix_cache = bool(prefix_cache)
+        self.reserve = reserve
+        self.preemption = preemption
         self._num_blocks_arg = num_blocks
         self._pool_bytes_arg = pool_bytes
+        # generated-suffix blocks are registrable only when decode KV is a
+        # per-position function of the token stream: float weights or float
+        # activations (quantized-act decode KV sees batch-shaped dynamic act
+        # scales — a B=1 recompute would not reproduce it; ROADMAP note)
+        from repro.core.precision import (A_FLOAT, W_FLOAT, get_precision,
+                                          signed)
+        pcfg = signed(get_precision(model.cfg.precision))
+        self._share_suffix = (pcfg.w_mode == W_FLOAT
+                              or pcfg.a_mode == A_FLOAT)
         super().__init__(model, params, n_slots=n_slots, s_max=s_max,
                          prompt_len=prompt_len, chunk_size=chunk_size,
                          autotune=autotune, metrics=metrics, mesh=mesh)
@@ -129,11 +179,20 @@ class PagedBatcher(ContinuousBatcher):
                 cfg, self._pool_bytes_arg, bs, self.kv_bits)
         else:
             num_blocks = 1 + (self.n_slots + 1) * self.blocks_per_seq
-        if num_blocks < 1 + self.blocks_per_seq:
+        # budget reservation should serve ANY admissible request, so the
+        # pool must hold the worst-case lifetime footprint (an s_max-1
+        # prompt writes through position s_max-1 -> blocks_per_seq blocks);
+        # prompt reservation only needs per-request footprints to fit, and
+        # ``submit`` checks those request by request
+        min_blocks = 1 + (self.blocks_per_seq if self.reserve == "budget"
+                          else 1)
+        if num_blocks < min_blocks:
             raise ValueError(
                 f"pool of {num_blocks} blocks cannot hold one "
-                f"{self.blocks_per_seq}-block sequence (s_max={self.s_max}, "
-                f"block_size={bs})")
+                + (f"{self.blocks_per_seq}-block sequence "
+                   if self.reserve == "budget" else "block ")
+                + f"(s_max={self.s_max}, block_size={bs}, "
+                  f"reserve={self.reserve!r})")
         self.num_blocks = num_blocks
 
         self.pool_meta = BlockPool(num_blocks)
@@ -144,6 +203,13 @@ class PagedBatcher(ContinuousBatcher):
                                   mesh=mesh)
         self._pt = np.zeros((self.n_slots, self.blocks_per_seq), np.int32)
         self._slot_blocks: List[Optional[List[int]]] = [None] * self.n_slots
+        # admission order = preemption priority (earlier admitted wins)
+        self._slot_seq = np.zeros(self.n_slots, np.int64)
+        self._seq_counter = 0
+        # rid -> positions computed before its preemption (decode-written,
+        # or chunk-prefilled for a mid-admission victim): the re-admission's
+        # recomputed_tokens debt, net of whatever the radix serves back
+        self._recompute_debt = {}
         self.metrics.on_kv_blocks(0, num_blocks - 1)
 
         kv_bits = self.kv_bits
@@ -184,16 +250,29 @@ class PagedBatcher(ContinuousBatcher):
 
     # -------------------------------------------------------------- submit
     def _blocks_needed(self, length: int, max_new: int) -> int:
-        """Blocks covering every position the request can ever write:
-        prompt 0..L-1 plus decode appends (the token emitted at budget
-        max_new was preceded by writes up to L+max_new-2), capped by the
-        scheduler's s_max-1 position cap."""
-        n_pos = min(length + max_new - 1, self.s_max)
+        """Blocks covering every position the request can ever write.
+
+        The decode chain retires a slot once its position counter reaches
+        s_max-1, so decode writes stop at position s_max-2 — EXCEPT the
+        first decode write at position L itself, which activation never
+        caps: a fresh prompt of exactly s_max-1 tokens still writes
+        position s_max-1.  Hence the cap is max(L+1, s_max-1) positions,
+        not the old flat s_max (which reserved a phantom block whenever
+        s_max ≡ 1 mod block_size and made ``submit`` reject budget-heavy
+        requests the pool could in fact serve) and not a flat s_max-1
+        (which would strand that first decode write)."""
+        n_pos = min(length + max_new - 1, max(length + 1, self.s_max - 1))
         return -(-n_pos // self.block_size)
 
     def submit(self, req: Request):
         length = req.tokens.shape[-1] if req.tokens.size else 0
         if length and req.max_new >= 1:
+            # lifetime capacity check — it applies under BOTH reserve
+            # policies: even with dynamic allocation + preemption, a sole
+            # resident request must eventually hold its whole footprint at
+            # once (recompute re-admission prefills prompt + generated), so
+            # a request needing more blocks than the pool holds could never
+            # finish and would livelock the scheduler
             need = self._blocks_needed(length, req.max_new)
             if need > self.num_blocks - 1:
                 raise ValueError(
@@ -204,19 +283,30 @@ class PagedBatcher(ContinuousBatcher):
         super().submit(req)
 
     # ----------------------------------------------------------- admission
-    def _match_prefix(self, req: Request) -> List[int]:
-        """Radix lookup, capped so (a) at least the last prompt token is
-        still prefilled (its logits seed generation) and (b) the match ends
-        on a chunk boundary as well as a block boundary (per-chunk dynamic
-        activation quantization must see the same chunk contents a fresh
-        prefill would).  Metrics are recorded by the caller on a SUCCESSFUL
-        admission only — a pool-exhausted request is re-matched every
-        scheduler step while it waits, and those retries must not inflate
-        the lookup/hit counters."""
+    def _resume_prompt(self, req: Request) -> np.ndarray:
+        """Admission token view: the original prompt — plus, for a request
+        re-queued by preemption, every token it already generated, so the
+        recompute prefill rebuilds the KV its released blocks held (and
+        writes the KV of the last generated token, which decode had not
+        gotten to yet)."""
+        if not req.output:
+            return req.tokens
+        gen = np.asarray(req.output, np.int32)[None]
+        return np.concatenate([req.tokens, gen], axis=1)
+
+    def _match_prefix(self, tokens: np.ndarray) -> List[Tuple[int, bool]]:
+        """Radix lookup of (block, is_suffix) pairs, capped so (a) at least
+        the last token is still prefilled (its logits seed generation) and
+        (b) the match ends on a chunk boundary as well as a block boundary
+        (per-chunk dynamic activation quantization must see the same chunk
+        contents a fresh prefill would).  Metrics are recorded by the caller
+        on a SUCCESSFUL admission only — a pool-exhausted request is
+        re-matched every scheduler step while it waits, and those retries
+        must not inflate the lookup/hit counters."""
         if self.radix is None:
             return []
-        length = req.tokens.shape[1]
-        matched = self.radix.match(req.tokens[0])
+        length = tokens.shape[-1]
+        matched = self.radix.match_with_kinds(tokens.reshape(-1))
         align = math.lcm(self.block_size, self.chunk_size)
         max_match = (length - 1) // align * align
         return matched[:max_match // self.block_size]
@@ -227,31 +317,47 @@ class PagedBatcher(ContinuousBatcher):
             if not self.queue or slot is None:
                 return
             req = self.queue[0]
-            length = req.tokens.shape[1]
-            shared = self._match_prefix(req)
+            toks = self._resume_prompt(req)
+            length = toks.shape[1]
+            matched = self._match_prefix(toks)
+            shared = [bid for bid, _ in matched]
             for bid in shared:                   # hold before any eviction
                 self.pool_meta.acquire(bid)
-            need = self._blocks_needed(length, req.max_new) - len(shared)
-            blocks = self.pool_meta.alloc(need)
-            if blocks is None and self.radix is not None:
-                freed = self.radix.evict(need - self.pool_meta.free_blocks)
-                self.metrics.on_evictions(freed)
-                blocks = self.pool_meta.alloc(need)
+            if self.reserve == "prompt":
+                need_total = -(-length // self.block_size)
+            else:
+                need_total = self._blocks_needed(
+                    length, req.max_new - len(req.output))
+            need = need_total - len(shared)
+            blocks = self._alloc(need)
             if blocks is None:
-                # pool exhausted by running requests: stay queued (their
-                # blocks were all reserved at admission, so they finish and
-                # release without ever allocating — no deadlock)
+                # pool exhausted by resident requests: stay queued (running
+                # requests finish — or get preempted — and release)
                 for bid in shared:
                     self.pool_meta.release(bid)
                 return
             self.queue.popleft()
+            readmission = req.started_at != 0.0   # preempted earlier
             req.started_at = time.time()
-            self.metrics.on_admit(req)
+            self.metrics.on_admit(req, n_prompt_tokens=length,
+                                  resumed=readmission)
+            start = len(shared) * self.block_size
             if self.radix is not None:
+                n_sfx = sum(1 for _, sfx in matched if sfx)
                 self.metrics.on_prefix_lookup(
-                    len(shared) * self.block_size, length)
+                    (len(shared) - n_sfx) * self.block_size, length,
+                    suffix_tokens=n_sfx * self.block_size)
+            debt = self._recompute_debt.pop(req.rid, 0)
+            if debt:
+                # positions re-prefilled that were computed before the
+                # preemption (decode-written for a mid-stream victim,
+                # chunk-prefilled for a mid-admission one) — radix hits
+                # shrink this, often to zero
+                self.metrics.on_recompute(max(0, debt - start))
             owned = shared + blocks
             self._slot_blocks[slot] = owned
+            self._slot_seq[slot] = self._seq_counter
+            self._seq_counter += 1
             # the slot's live page-table row (self._pt) stays ZEROED until
             # activation: the interleaved batched decode writes a dead KV
             # row for every not-yet-active slot, and those writes must
@@ -261,12 +367,10 @@ class PagedBatcher(ContinuousBatcher):
             row = np.zeros((1, self.blocks_per_seq), np.int32)
             row[0, :len(owned)] = owned
             self._adm_row = row
-            self.metrics.on_kv_blocks(self.pool_meta.used_blocks,
-                                      self.num_blocks - 1)
-            start = len(shared) * self.block_size
+            self._gauge()
             l_pad = bucket_length(length - start, self.chunk_size)
             padded = np.zeros((1, l_pad), np.int32)
-            padded[:, :length - start] = req.tokens[:, start:]
+            padded[:, :length - start] = toks[:, start:]
             self._adm = _Admission(req, slot, padded, length, start=start)
             self.slots[slot] = req               # reserve (done stays True)
 
@@ -281,19 +385,67 @@ class PagedBatcher(ContinuousBatcher):
         if adm.next_pos >= adm.tokens.shape[1]:
             row = logits[0, (adm.length - 1 - adm.start) % c]
             self._adm = None
-            self._register_prefix(adm.req, adm.slot)
+            self._register_written(adm.req, adm.slot, adm.length)
             self._pt[adm.slot, :] = self._adm_row[0]
             self._activate(adm.req, adm.slot, None, row)
 
-    def _register_prefix(self, req: Request, slot: int):
-        """Publish the request's full prompt blocks to the radix cache the
-        moment they are complete (immutable from here on), so concurrent
-        requests with the same prompt already hit them."""
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Pool alloc with LRU radix eviction as the fallback; ``None`` only
+        when resident requests genuinely hold the pool.  Eviction targets
+        FREEABLE leaves only (radix-only references): dropping a reference
+        on a block an active request still holds frees nothing and would
+        just strip-mine the cache on an allocation that cannot succeed."""
+        if n <= 0:
+            return []
+        blocks = self.pool_meta.alloc(n)
+        if blocks is None and self.radix is not None and len(self.radix):
+            # feasibility first: an infeasible allocation (queue head
+            # retrying every scheduler step) must not strip the warm cache.
+            # A radix block at refcount 1 has no slot-held descendant (a
+            # held child implies a held parent), so every such block is
+            # eventually freeable — their count bounds what eviction buys.
+            freeable = sum(1 for b in self.radix.blocks()
+                           if self.pool_meta.refcount(b) == 1)
+            if self.pool_meta.free_blocks + freeable < n:
+                return None
+            while blocks is None:
+                dropped = self.radix.evict(
+                    max(n - self.pool_meta.free_blocks, 1),
+                    freeable_only=True)
+                self.metrics.on_evictions(dropped)
+                if dropped == 0:
+                    break
+                blocks = self.pool_meta.alloc(n)
+        return blocks
+
+    def _gauge(self):
+        """Refresh the pool-occupancy metrics; the pool's own ``peak_used``
+        watermark is folded in because it also sees the transient highs
+        inside an allocate-then-preempt wave that a post-wave gauge read
+        would miss."""
+        self.metrics.on_kv_blocks(self.pool_meta.used_blocks,
+                                  self.num_blocks - 1)
+        self.metrics.kv_blocks_peak = max(self.metrics.kv_blocks_peak,
+                                          self.pool_meta.peak_used)
+
+    def _register_written(self, req: Request, slot: int, n_written: int):
+        """Publish the slot's computed KV — the full blocks of the first
+        ``n_written`` positions of (prompt + generated) — to the radix tree.
+        Called at activation (prompt' complete and immutable), at preemption
+        (so the recompute prefill radix-hits what the victim already
+        computed), and at release (so agent-style follow-up prompts reuse
+        generated suffixes).  Blocks past the original prompt register as
+        kind ``suffix``, and only for float-act configs."""
         if self.radix is None:
             return
-        full = req.tokens.shape[1] // self.block_size
+        toks = self._resume_prompt(req).reshape(-1)[:n_written]
+        n_prompt = req.tokens.shape[1] // self.block_size
+        full = n_written // self.block_size
+        if not self._share_suffix:
+            full = min(full, n_prompt)
         if full:
-            self.radix.insert(req.tokens[0], self._slot_blocks[slot][:full])
+            self.radix.insert(toks, self._slot_blocks[slot][:full],
+                              suffix_from=n_prompt)
 
     def _join_slot(self, slot: int, one_cache):
         pass                  # prefill chunks already wrote the slot's blocks
@@ -303,6 +455,99 @@ class PagedBatcher(ContinuousBatcher):
             "paged serving always admits through chunked prefill")
 
     # ------------------------------------------------------------- decode
+    def _pre_decode(self):
+        """Dynamic allocation: hand every active slot crossing a block
+        boundary one fresh block before the batched step.  On exhaustion,
+        preempt latest-admitted-first (the mid-flight admission, then active
+        slots) — but never a request admitted before the one asking, so the
+        earliest-admitted request always advances and the system always
+        drains."""
+        if self.reserve != "prompt":
+            return
+        order = sorted((i for i in range(self.n_slots)
+                        if not self.done[i] and self.slots[i] is not None),
+                       key=lambda i: self._slot_seq[i])
+        moved = False
+        for i in order:
+            if self.done[i]:                # preempted by an earlier slot
+                continue
+            self.stalled[i] = False
+            b_idx = int(self.pos[i]) // self.block_size
+            if self._pt[i, b_idx] != 0:
+                continue
+            blk = self._alloc(1)
+            while blk is None:
+                victim = self._lowest_priority_after(int(self._slot_seq[i]))
+                if victim is None or self.preemption != "recompute":
+                    break
+                self._preempt(victim)
+                moved = True
+                blk = self._alloc(1)
+            if blk is None:
+                if self.preemption == "recompute":
+                    # the asking slot is itself the lowest priority left
+                    self._preempt(("slot", i))
+                    moved = True
+                else:
+                    self.stalled[i] = True
+                continue
+            self._slot_blocks[i].append(blk[0])
+            self._pt[i, b_idx] = blk[0]
+            moved = True
+        if moved:
+            self._gauge()
+        if self.preemption != "recompute":
+            active = [i for i in range(self.n_slots)
+                      if not self.done[i] and self.slots[i] is not None]
+            if active and all(self.stalled[i] for i in active) \
+                    and self._adm is None:
+                raise RuntimeError(
+                    f"pool deadlock: all {len(active)} active slots are "
+                    "stalled on block allocation and nothing can release "
+                    "(preemption='off'); use preemption='recompute' or a "
+                    "larger pool")
+
+    def _lowest_priority_after(self, seq: int):
+        """The preemption victim for a request admitted at ``seq``: the
+        mid-flight admission if any (admission is serialized, so it is
+        always the most recent), else the latest-admitted active slot —
+        and only ever one admitted strictly AFTER ``seq``."""
+        if self._adm is not None:
+            return ("adm", self._adm)
+        best = None
+        for j in range(self.n_slots):
+            if self.done[j] or self.slots[j] is None:
+                continue
+            if self._slot_seq[j] > seq and (
+                    best is None or self._slot_seq[j] > self._slot_seq[best]):
+                best = j
+        return None if best is None else ("slot", best)
+
+    def _preempt(self, victim):
+        """Release a victim back to the queue head: register its computed
+        full blocks (cheap recompute), drop its references, zero its live
+        page-table row, and re-queue it with stream state intact."""
+        kind, v = victim
+        if kind == "adm":
+            adm = v
+            req, slot = adm.req, adm.slot
+            # chunks already prefilled → full blocks are registrable
+            n_written = min(adm.start + adm.next_pos, adm.length)
+            self._adm = None
+        else:
+            slot = v
+            req = self.slots[slot]
+            n_written = int(self.pos[slot])   # decode wrote [0, pos)
+        self._register_written(req, slot, n_written)
+        self._recompute_debt[req.rid] = n_written
+        for bid in self._slot_blocks[slot] or ():
+            self.pool_meta.release(bid)
+        self._slot_blocks[slot] = None
+        self._pt[slot, :] = 0               # dead decode writes -> null block
+        self._requeue(req, slot)
+        self.metrics.on_preempt(req)
+        self._gauge()
+
     def _decode_call(self):
         logits, greedy_dev, self.pool = self._decode(
             self.params, jnp.asarray(self.tokens), self.pool,
@@ -311,9 +556,21 @@ class PagedBatcher(ContinuousBatcher):
 
     # -------------------------------------------------------------- finish
     def _release_slot(self, req: Request, slot: int):
+        # decode wrote [0, L + g - 1): the final emitted token's KV was
+        # never written (the loop ends before feeding it)
+        self._register_written(
+            req, slot, req.tokens.shape[1] + len(req.output) - 1)
         for bid in self._slot_blocks[slot] or ():
             self.pool_meta.release(bid)
         self._slot_blocks[slot] = None
         self._pt[slot, :] = 0               # dead decode writes -> null block
-        self.metrics.on_kv_blocks(self.pool_meta.used_blocks,
-                                  self.num_blocks - 1)
+        self._gauge()
+
+    # ---------------------------------------------------------- invariants
+    def check_pool(self):
+        """Cross-check the pool against every live holder (active slots' and
+        the mid-flight admission's block lists, plus the radix tree) — the
+        chaos harness calls this after every scheduler step."""
+        self.pool_meta.check(
+            (blocks for blocks in self._slot_blocks if blocks),
+            self.radix.blocks() if self.radix is not None else ())

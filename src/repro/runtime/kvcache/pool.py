@@ -15,7 +15,7 @@ function.  It is pinned with a permanent reference.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Iterable, List, Optional
 
 import numpy as np
 
@@ -30,6 +30,7 @@ class BlockPool:
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._ref = np.zeros(num_blocks, np.int32)
         self._ref[0] = 1                         # pin the null block
+        self.peak_used = 0                       # allocation high-water mark
 
     # ------------------------------------------------------------ accounting
     @property
@@ -57,6 +58,7 @@ class BlockPool:
             return None
         out = [self._free.pop() for _ in range(n)]
         self._ref[out] = 1
+        self.peak_used = max(self.peak_used, self.used_blocks)
         return out
 
     def acquire(self, block_id: int) -> None:
@@ -75,3 +77,46 @@ class BlockPool:
             self._free.append(block_id)
             return True
         return False
+
+    # ------------------------------------------------------------- invariants
+    def check(self, page_tables: Iterable[Iterable[int]] = (),
+              radix_holders: Iterable[int] = ()) -> None:
+        """Cross-check the pool's accounting against its live holders.
+
+        ``page_tables``: one block-id sequence per resident request (its
+        owned blocks, shared + private).  ``radix_holders``: the block ids
+        the radix prefix cache currently references (one per node).  Raises
+        ``RuntimeError`` on the first violated invariant:
+
+          * the null block stays pinned and never enters the free list;
+          * the free list holds no duplicates and no referenced block
+            (free list ∩ allocated = ∅);
+          * every block's refcount equals its live holder count — nothing
+            leaks (refs without holders) and nothing dangles (holders of
+            freed blocks).
+        """
+        if self._ref[0] < 1:
+            raise RuntimeError("null block 0 lost its pin")
+        free = list(self._free)
+        if len(free) != len(set(free)):
+            raise RuntimeError(f"free list holds duplicates: {sorted(free)}")
+        if 0 in free:
+            raise RuntimeError("null block 0 entered the free list")
+        for bid in free:
+            if self._ref[bid] != 0:
+                raise RuntimeError(
+                    f"block {bid} is free but still has refcount "
+                    f"{int(self._ref[bid])}")
+        holders = np.zeros(self.num_blocks, np.int64)
+        for row in page_tables:
+            for bid in row:
+                if bid != 0:
+                    holders[bid] += 1
+        for bid in radix_holders:
+            holders[bid] += 1
+        for bid in range(1, self.num_blocks):
+            if holders[bid] != self._ref[bid]:
+                raise RuntimeError(
+                    f"block {bid}: refcount {int(self._ref[bid])} != "
+                    f"{int(holders[bid])} live holders "
+                    f"({'leaked' if self._ref[bid] > holders[bid] else 'dangling'})")

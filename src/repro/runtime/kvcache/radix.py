@@ -7,6 +7,16 @@ with the new prompt (``match``) and reuses the matched blocks instead of
 re-prefilling them; completed prefills register their full blocks
 (``insert``) so later requests can hit them.
 
+Nodes carry a **kind**: ``suffix=False`` for blocks whose tokens come from a
+request's prompt (prefill-computed), ``suffix=True`` for blocks past the
+prompt — KV the request *generated* and registered at release or preemption
+(``insert(..., suffix_from=...)``).  The split feeds the serving metrics
+(prompt-prefix hits vs generated-suffix hits) and lets agent-style
+multi-turn prompts (old prompt + old generation + new turn) and
+preemption-recompute prefills reuse decode-written KV.  Inserting a
+generated extension under an existing leaf is just a deeper insert: the
+shared prompt path already exists, only the suffix nodes are new.
+
 Sharing discipline (the copy-on-write rule made trivial): only FULL blocks
 are ever registered, and full blocks are immutable — a request appends only
 into blocks past its matched prefix, which it owns exclusively.  So there is
@@ -21,7 +31,7 @@ return to the free list.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -29,15 +39,16 @@ from .pool import BlockPool
 
 
 class _Node:
-    __slots__ = ("key", "block", "children", "parent", "last_used")
+    __slots__ = ("key", "block", "children", "parent", "last_used", "suffix")
 
     def __init__(self, key: Optional[bytes], block: int,
-                 parent: Optional["_Node"]):
+                 parent: Optional["_Node"], suffix: bool = False):
         self.key = key                     # bytes of this edge's bs tokens
         self.block = block                 # physical block id (-1 for root)
         self.children: Dict[bytes, _Node] = {}
         self.parent = parent
         self.last_used = 0
+        self.suffix = suffix               # generated-suffix (vs prompt) KV
 
 
 class RadixPrefixCache:
@@ -52,6 +63,16 @@ class RadixPrefixCache:
         """Registered (cached) blocks."""
         return self._n_nodes
 
+    def blocks(self) -> Iterator[int]:
+        """Every physical block id the tree currently holds a reference to
+        (one per node) — the radix side of ``BlockPool.check``."""
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            if n is not self.root:
+                yield n.block
+            stack.extend(n.children.values())
+
     def _keys(self, tokens: np.ndarray) -> List[bytes]:
         bs = self.block_size
         t = np.asarray(tokens, np.int32).reshape(-1)
@@ -63,6 +84,12 @@ class RadixPrefixCache:
         ``tokens``.  Bumps the matched path's LRU clock.  The caller must
         ``pool.acquire`` each returned block before anything else can evict
         it."""
+        return [bid for bid, _ in self.match_with_kinds(tokens)]
+
+    def match_with_kinds(self, tokens: np.ndarray) -> List[Tuple[int, bool]]:
+        """Like :meth:`match` but each block id comes with its node's
+        ``suffix`` flag, so the caller can split prompt-prefix hits from
+        generated-suffix hits in the metrics."""
         self._clock += 1
         node, out = self.root, []
         for key in self._keys(tokens):
@@ -70,24 +97,30 @@ class RadixPrefixCache:
             if child is None:
                 break
             child.last_used = self._clock
-            out.append(child.block)
+            out.append((child.block, child.suffix))
             node = child
         return out
 
     # ----------------------------------------------------------------- insert
-    def insert(self, tokens: np.ndarray, block_ids: List[int]) -> int:
+    def insert(self, tokens: np.ndarray, block_ids: List[int],
+               suffix_from: Optional[int] = None) -> int:
         """Register ``block_ids`` as the cache of ``tokens``' full blocks
         (``len(block_ids)`` leading blocks).  Existing nodes win on conflict
         (two requests prefilled the same prompt concurrently — the duplicate
-        blocks simply stay owned by their request and free on its release).
-        Returns the number of NEW nodes (pool references taken)."""
+        blocks simply stay owned by their request and free on its release),
+        and an existing node keeps its kind.  Blocks at index >=
+        ``suffix_from`` are marked generated-suffix (decode-written KV);
+        ``None`` marks everything as prompt.  Returns the number of NEW
+        nodes (pool references taken)."""
         self._clock += 1
         node, added = self.root, 0
-        for key, bid in zip(self._keys(tokens), block_ids):
+        for depth, (key, bid) in enumerate(zip(self._keys(tokens), block_ids)):
             child = node.children.get(key)
             if child is None:
                 self.pool.acquire(bid)
-                child = _Node(key, bid, node)
+                child = _Node(key, bid, node,
+                              suffix=(suffix_from is not None
+                                      and depth >= suffix_from))
                 node.children[key] = child
                 self._n_nodes += 1
                 added += 1
@@ -105,14 +138,24 @@ class RadixPrefixCache:
             stack.extend(n.children.values())
         return out
 
-    def evict(self, n_blocks: int) -> int:
+    def evict(self, n_blocks: int, freeable_only: bool = False) -> int:
         """Drop up to ``n_blocks`` cache references, coldest leaves first
         (evicting a leaf may expose its parent as the next candidate).
         Returns how many references were dropped; the pool frees each block
-        whose last reference this was."""
+        whose last reference this was.
+
+        ``freeable_only`` (pool-pressure allocation) skips leaves whose
+        block an active request still holds: dropping those frees nothing,
+        and a held child block implies a held parent block (the holder's
+        page table spans its whole prefix chain), so skipping them never
+        hides a freeable ancestor — while the cold-but-shared subtree
+        survives for the holders' future re-admissions."""
         dropped = 0
         while dropped < n_blocks:
             leaves = self._leaves()
+            if freeable_only:
+                leaves = [l for l in leaves
+                          if self.pool.refcount(l.block) == 1]
             if not leaves:
                 break
             leaves.sort(key=lambda nd: nd.last_used)

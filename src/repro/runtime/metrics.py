@@ -51,11 +51,23 @@ class Metrics:
 
     Paged-KV counters (runtime.kvcache; all zero for the dense batcher):
       prefix_lookups / prefix_hits / prefix_hit_tokens : radix prefix-cache
-      admissions — lookups, admissions with a non-empty match, and prompt
-      tokens whose prefill was skipped;
+      admissions — lookups, admissions with a non-empty PROMPT-block match,
+      and prompt tokens whose prefill was skipped;
+      suffix_hits / suffix_hit_tokens : admissions that matched
+      generated-suffix blocks (decode-written KV registered at release or
+      preemption), and the tokens those blocks covered — split from the
+      prompt counters so agent-style reuse and preemption-recompute savings
+      are visible separately;
+      preemptions / recomputed_tokens : requests preempted mid-flight
+      (blocks released, re-queued), and the already-computed positions their
+      re-admissions actually re-prefilled (radix suffix hits shrink this);
       blocks_evicted : cached blocks dropped under pool pressure;
       kv_blocks_in_use / kv_blocks_peak / kv_blocks_total : pool occupancy
       gauge, its high-water mark, and the allocatable pool size.
+
+    Concurrency gauge: requests_active / requests_active_peak — admitted
+    requests currently resident (admission++ / finish-or-preempt--) and the
+    high-water mark; the overcommit bench's "admitted concurrency" number.
     """
 
     def __init__(self, n_slots: int = 0):
@@ -65,6 +77,8 @@ class Metrics:
         self.itl_ms: List[float] = []
         self.requests_submitted = 0
         self.requests_finished = 0
+        self.requests_active = 0
+        self.requests_active_peak = 0
         self.tokens_out = 0
         self.prompt_tokens = 0
         self.decode_steps = 0
@@ -74,6 +88,10 @@ class Metrics:
         self.prefix_lookups = 0
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
+        self.suffix_hits = 0
+        self.suffix_hit_tokens = 0
+        self.preemptions = 0
+        self.recomputed_tokens = 0
         self.blocks_evicted = 0
         self.kv_blocks_in_use = 0
         self.kv_blocks_peak = 0
@@ -100,9 +118,21 @@ class Metrics:
         if self._t0_submit is None:
             self._t0_submit = time.time()
 
-    def on_admit(self, req) -> None:
-        self.queue_ms.append((req.started_at - req.submitted_at) * 1e3)
-        self.prompt_tokens += int(req.tokens.shape[-1])
+    def on_admit(self, req, n_prompt_tokens: Optional[int] = None,
+                 resumed: bool = False) -> None:
+        """One admission.  ``n_prompt_tokens`` overrides the prompt width
+        (a preemption-resumed request prefills prompt + generated tokens);
+        ``resumed`` re-admissions skip the queue-wait sample — queue_ms
+        measures submit -> FIRST admission only — but still count their
+        prefill traffic so prefix/suffix hit rates stay true rates."""
+        if not resumed:
+            self.queue_ms.append((req.started_at - req.submitted_at) * 1e3)
+        self.prompt_tokens += int(n_prompt_tokens
+                                  if n_prompt_tokens is not None
+                                  else req.tokens.shape[-1])
+        self.requests_active += 1
+        self.requests_active_peak = max(self.requests_active_peak,
+                                        self.requests_active)
         self._touch()
 
     def on_token(self, req, first: bool) -> None:
@@ -116,16 +146,34 @@ class Metrics:
 
     def on_finish(self, req) -> None:
         self.requests_finished += 1
+        self.requests_active = max(self.requests_active - 1, 0)
         self._touch()
 
     # ------------------------------------------------------ paged-KV counters
-    def on_prefix_lookup(self, hit_tokens: int, prompt_tokens: int) -> None:
+    def on_prefix_lookup(self, hit_tokens: int, prompt_tokens: int,
+                         suffix_tokens: int = 0) -> None:
         """One radix prefix-cache admission lookup: ``hit_tokens`` prompt
-        positions were served from cached blocks (0 on a miss)."""
+        positions were served from cached prompt blocks (0 on a miss) and
+        ``suffix_tokens`` from generated-suffix blocks."""
         self.prefix_lookups += 1
         if hit_tokens > 0:
             self.prefix_hits += 1
             self.prefix_hit_tokens += int(hit_tokens)
+        if suffix_tokens > 0:
+            self.suffix_hits += 1
+            self.suffix_hit_tokens += int(suffix_tokens)
+
+    def on_preempt(self, req) -> None:
+        """One mid-flight preemption: the request's blocks were released and
+        it went back to the queue (its re-admission recomputes)."""
+        self.preemptions += 1
+        self.requests_active = max(self.requests_active - 1, 0)
+
+    def on_recompute(self, n_tokens: int) -> None:
+        """A preemption-resumed admission re-prefilled ``n_tokens`` positions
+        whose KV had already been computed before the preemption (suffix
+        radix hits make this approach zero)."""
+        self.recomputed_tokens += int(n_tokens)
 
     def on_evictions(self, n_blocks: int) -> None:
         self.blocks_evicted += int(n_blocks)
@@ -184,6 +232,11 @@ class Metrics:
                 "prefill_full": self.prefill_full,
                 # fraction of decode-slot capacity that produced a token
                 "slot_occupancy": self.decode_slot_tokens / decode_cap,
+                "preemptions": self.preemptions,
+                "recomputed_tokens": self.recomputed_tokens,
+                # admitted-concurrency high-water mark (requests resident
+                # at once — the overcommit capacity number)
+                "active_peak": self.requests_active_peak,
             },
             "kv_cache": {
                 "prefix": {
@@ -192,6 +245,13 @@ class Metrics:
                     "hit_tokens": self.prefix_hit_tokens,
                     # fraction of admitted prompt tokens served from cache
                     "hit_rate": self.prefix_hit_tokens / max(self.prompt_tokens, 1),
+                },
+                # generated-suffix (decode-written, release/preempt-registered)
+                # block hits, split from the prompt-prefix counters above
+                "suffix": {
+                    "hits": self.suffix_hits,
+                    "hit_tokens": self.suffix_hit_tokens,
+                    "hit_rate": self.suffix_hit_tokens / max(self.prompt_tokens, 1),
                 },
                 "blocks": {
                     "total": self.kv_blocks_total,
@@ -222,5 +282,10 @@ class Metrics:
                f" (peak {kc['blocks']['peak_in_use']}), prefix hit rate "
                f"{kc['prefix']['hit_rate']:.2f} "
                f"({kc['prefix']['hit_tokens']} tok), "
+               f"suffix hits {kc['suffix']['hit_tokens']} tok, "
                f"evicted {kc['evicted_blocks']}"
-               if (kc := s["kv_cache"])["blocks"]["total"] else ""))
+               if (kc := s["kv_cache"])["blocks"]["total"] else "")
+            + (f"\n  preemptions {sc['preemptions']} "
+               f"(recomputed {sc['recomputed_tokens']} tok), "
+               f"peak concurrent {sc['active_peak']}"
+               if sc["preemptions"] else ""))

@@ -165,6 +165,10 @@ class ContinuousBatcher:
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)
         self.done = np.ones(n_slots, bool)
+        # slots paused by the paged batcher (block-pool exhaustion with
+        # preemption off): their decode write deflects to the null block and
+        # the emit loop skips them until a block frees up
+        self.stalled = np.zeros(n_slots, bool)
         self._adm: Optional[_Admission] = None
         self._adm_cache = None             # reused (1, s_adm) admission cache
         self._just_finished: List[Request] = []
@@ -363,6 +367,19 @@ class ContinuousBatcher:
         """Dense slots hold no shared state; the paged batcher releases the
         request's block references (and registers its prefix) here."""
 
+    def _requeue(self, req: Request, slot: int):
+        """Preemption hook point: return an admitted request to the FRONT of
+        the queue with its slot freed.  ``rid``, ``output`` and the
+        ``on_token`` stream survive untouched — re-admission prefills
+        prompt + already-generated tokens and the stream continues from the
+        next token, never replaying one.  Victims are preempted
+        latest-admitted-first, so successive appendlefts restore
+        admission-order priority at the queue head."""
+        self.slots[slot] = None
+        self.done[slot] = True
+        self.stalled[slot] = False
+        self.queue.appendleft(req)
+
     # ----------------------------------------------------------------- admit
     def _free_slot(self) -> Optional[int]:
         for i in range(self.n_slots):
@@ -371,11 +388,20 @@ class ContinuousBatcher:
         return None
 
     def _activate(self, req: Request, slot: int, one_cache, first_logits_row):
-        """First token sampled, admission cache copied into the slot."""
+        """First token of this admission sampled, admission cache resident.
+
+        A preemption-resumed request (non-empty ``output``) re-enters here
+        mid-stream: ``length`` counts prompt + already-generated tokens, the
+        budget check runs against the whole stream, and the cache-budget cap
+        that the decode loop would have applied fires here instead — the
+        resumed stream stops exactly where the uninterrupted one would
+        have."""
         tok = self._sample(req, first_logits_row)
-        length = req.tokens.shape[1]
-        finished = (req.max_new <= 1
-                    or (req.eos_id is not None and tok == req.eos_id))
+        resumed = bool(req.output)
+        length = req.tokens.shape[1] + len(req.output)
+        finished = (len(req.output) + 1 >= req.max_new
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or (resumed and length >= self.s_max - 1))
         self._emit(req, tok, finished)
         if finished:
             self._finish(req, slot)
@@ -446,6 +472,14 @@ class ContinuousBatcher:
             jnp.asarray(self.pos))
         return logits, np.asarray(greedy_dev, np.int32)
 
+    def _pre_decode(self):
+        """Hook before the batched decode dispatch.  The paged batcher's
+        dynamic allocation lives here: lazily allocate the next block of
+        every slot about to cross a block boundary, preempting
+        lowest-priority requests when the pool is exhausted.  May retire
+        slots (preemption re-queues them), so the caller re-checks
+        ``done``."""
+
     def step(self):
         """One scheduler iteration: a prefill chunk (if a request is being
         admitted) plus one decode step for every active slot.  Returns the
@@ -455,10 +489,16 @@ class ContinuousBatcher:
         else:
             self._admit_full()
         if not all(self.done):
+            self._pre_decode()
+        if not all(self.done):
             logits, greedy = self._decode_call()
             self.metrics.decode_steps += 1
             for i, req in enumerate(self.slots):
-                if req is None or self.done[i]:
+                if req is None or self.done[i] or self.stalled[i]:
+                    # stalled slots took no block this step: their write
+                    # deflected to the null block and their logits are
+                    # meaningless — re-feed the same token at the same
+                    # position once a block frees up
                     continue
                 tok = int(greedy[i]) if req.temperature <= 0.0 \
                     else self._sample(req, logits[i, 0])

@@ -243,6 +243,50 @@ def test_prefix_hits_never_change_outputs():
     assert off.metrics.prefix_lookups == 0
 
 
+def test_generated_suffix_shared_with_followup_turns():
+    """Agent-style reuse: a finished request registers its generated
+    blocks, so a follow-up turn whose prompt extends (old prompt + old
+    generation) radix-hits past the original prompt — and the stream stays
+    bit-identical to a cold dense run of the same turn-2 prompt."""
+    cfg, model, params = _setup()
+    p = _prompt(8, 3, cfg.vocab)
+    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
+                         kv_bits=16, block_size=4)
+    r0 = Request(rid=0, tokens=p, max_new=8)
+    paged.submit(r0)
+    paged.run()
+    turn2 = np.concatenate([p, np.asarray(r0.output, np.int32)[None]], axis=1)
+    want = _dense_memo(0, [turn2], 4, 1, 4)
+    r1 = Request(rid=1, tokens=turn2, max_new=4)
+    paged.submit(r1)
+    paged.run()
+    assert r1.output == want[0]
+    assert paged.metrics.suffix_hit_tokens > 0      # generated KV reused
+    assert paged.metrics.prefix_hit_tokens >= 8     # ...plus the old prompt
+
+
+def test_quantized_act_configs_register_prompt_blocks_only():
+    """ROADMAP gate: decode KV of quantized-act configs is batch-shaped
+    (per-tensor dynamic act scales over the decode batch), so generated
+    suffixes must NOT enter the radix tree — only prompt blocks do."""
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                              dtype="float32", precision="2xT")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    paged = PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
+                         kv_bits=16, block_size=4)
+    assert not paged._share_suffix
+    _run(paged, [_prompt(8, 9, cfg.vocab)], max_new=8)
+    # 8-token prompt -> 2 full prompt blocks; the 7 decode-written
+    # positions would add a suffix block if the gate were open
+    assert len(paged.radix) == 2
+
+    _, model0, params0 = _setup()
+    fp = PagedBatcher(model0, params0, n_slots=1, s_max=S_MAX, chunk_size=4,
+                      kv_bits=16, block_size=4)
+    assert fp._share_suffix
+
+
 def test_prefix_sharing_between_concurrent_requests():
     """A prompt registered at admission is hit by a same-prompt request that
     arrives while the first is still decoding."""
@@ -281,33 +325,59 @@ def test_eviction_under_pool_pressure_keeps_streams_exact():
 
 
 def test_pool_exhaustion_queues_instead_of_deadlocking():
-    """With a pool holding exactly one sequence, concurrent requests
-    serialize through the queue and all finish."""
+    """With a pool holding exactly one sequence, every request still
+    finishes under both reserve policies: budget reservation serializes
+    admissions through the queue; prompt reservation over-admits and
+    preempts, and each preemption costs exactly one extra admission (and
+    radix lookup) — never a deadlock either way."""
     cfg, model, params = _setup()
     blocks_per_seq = -(-S_MAX // 8)
-    paged = PagedBatcher(model, params, n_slots=4, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=8,
-                         num_blocks=1 + blocks_per_seq)
     prompts = [_prompt(6, 40 + i, cfg.vocab) for i in range(3)]
-    got = _run(paged, prompts, max_new=10)
+
+    budget = PagedBatcher(model, params, n_slots=4, s_max=S_MAX, chunk_size=4,
+                          kv_bits=16, block_size=8, reserve="budget",
+                          num_blocks=1 + blocks_per_seq)
+    got = _run(budget, prompts, max_new=10)
     assert all(len(v) == 10 for v in got.values())
     # the 3-block pool fits one 2-block request at a time plus no slack:
     # admissions must have serialized, never deadlocked
-    assert paged.metrics.kv_blocks_peak <= 3
+    assert budget.metrics.kv_blocks_peak <= 3
+    assert budget.metrics.preemptions == 0
     # retried (pool-exhausted) admissions must not inflate the prefix
     # counters: exactly one lookup per ADMITTED request, and the token-level
     # hit rate stays a rate
-    assert paged.metrics.prefix_lookups == len(prompts)
+    assert budget.metrics.prefix_lookups == len(prompts)
+    s = budget.metrics.summary()["kv_cache"]["prefix"]
+    assert 0.0 <= s["hit_rate"] <= 1.0
+
+    paged = PagedBatcher(model, params, n_slots=4, s_max=S_MAX, chunk_size=4,
+                         kv_bits=16, block_size=8,
+                         num_blocks=1 + blocks_per_seq)
+    got2 = _run(paged, prompts, max_new=10)
+    assert got2 == got                    # preemption timing never changes streams
+    assert paged.metrics.kv_blocks_peak <= 3
+    # dynamic allocation admits all 3 up front (1 prompt block each) and
+    # preempts when decode outgrows the pool; every preemption re-admits
+    # once, so lookups track admissions exactly — waiting retries still
+    # don't inflate the counters
+    assert paged.metrics.preemptions > 0
+    # dynamic allocation sustains strictly more admitted concurrency than
+    # budget reservation on the same pool (which serialized: peak 1)
+    assert paged.metrics.requests_active_peak >= 2 \
+        > budget.metrics.requests_active_peak
+    assert paged.metrics.prefix_lookups == \
+        len(prompts) + paged.metrics.preemptions
     s = paged.metrics.summary()["kv_cache"]["prefix"]
     assert 0.0 <= s["hit_rate"] <= 1.0
 
 
 def test_paged_submit_validation():
     cfg, model, params = _setup()
-    # a pool smaller than one full sequence could never admit anything
+    # budget reservation: a pool smaller than one full sequence could never
+    # admit anything — rejected at construction
     with pytest.raises(ValueError, match="blocks"):
         PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
-                     kv_bits=16, block_size=8, num_blocks=3)
+                     kv_bits=16, block_size=8, num_blocks=3, reserve="budget")
     paged = PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
                          kv_bits=16, block_size=8)
     with pytest.raises(ValueError, match="max_new"):
@@ -315,6 +385,71 @@ def test_paged_submit_validation():
                              max_new=0))
     with pytest.raises(ValueError, match="budget"):
         paged.submit(Request(rid=2, tokens=_prompt(S_MAX, 0, cfg.vocab)))
+    # prompt reservation accepts the small pool and serves any request
+    # whose LIFETIME footprint fits; one that could never hold all its
+    # blocks at once is still rejected up front (it could never finish)
+    small = PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
+                         kv_bits=16, block_size=8, num_blocks=3)
+    with pytest.raises(ValueError, match="KV blocks"):
+        small.submit(Request(rid=3, tokens=_prompt(6, 0, cfg.vocab),
+                             max_new=S_MAX))
+    got = _run(small, [_prompt(6, 77, cfg.vocab)], max_new=4)
+    assert len(got[0]) == 4
+
+
+def test_submit_capacity_check_counts_writable_positions():
+    """Regression for the _blocks_needed cap.  Decode-chain writes stop at
+    position s_max-2 (the finish check retires a slot at pos s_max-1), so
+    a budget-heavy request's footprint is min(L+max_new-1, s_max-1)
+    positions — with s_max ≡ 1 (mod block_size) the old min(..., s_max)
+    cap charged a phantom block and made submit reject requests the pool
+    could in fact serve.  BUT activation never caps the FIRST decode
+    write: a fresh prompt of exactly s_max-1 tokens still writes position
+    s_max-1, so the cap is max(L+1, s_max-1), not a flat s_max-1."""
+    cfg, model, params = _setup()
+    s_max, bs = 25, 8                     # s_max % bs == 1: the phantom case
+    blocks = -(-(s_max - 1) // bs)        # 3 blocks suffice for small L
+    paged = PagedBatcher(model, params, n_slots=1, s_max=s_max,
+                         chunk_size=4, kv_bits=16, block_size=bs,
+                         num_blocks=1 + blocks)
+    assert paged._blocks_needed(4, s_max) == blocks          # phantom fixed
+    assert paged._blocks_needed(s_max - 1, 2) == blocks + 1  # edge kept
+    # lifetime footprint 3 blocks == pool: admits and finishes
+    req = Request(rid=0, tokens=_prompt(4, 5, cfg.vocab), max_new=s_max)
+    paged.submit(req)
+    done = paged.run()
+    assert len(done) == 1
+    # budget truncates at the cache cap: pos finishes at s_max-1
+    assert len(req.output) == s_max - 1 - 4 + 1
+    # the s_max-1-token prompt needs the 4th block this pool lacks
+    with pytest.raises(ValueError, match="KV blocks"):
+        paged.submit(Request(rid=1, tokens=_prompt(s_max - 1, 5, cfg.vocab),
+                             max_new=2))
+
+
+def test_full_length_prompt_writes_last_position_exactly():
+    """The edge the footprint cap must cover: a fresh prompt of s_max-1
+    tokens activates at pos = s_max-1 and its one decode step writes that
+    very position — under BOTH reserve policies the paged streams must
+    match the dense batcher (a short footprint would deflect the write to
+    the null block and silently corrupt the final token)."""
+    cfg, model, params = _setup()
+    s_max, bs = 25, 8
+    p = _prompt(s_max - 1, 13, cfg.vocab)
+    dense = ContinuousBatcher(model, params, n_slots=1, s_max=s_max,
+                              chunk_size=4)
+    d = Request(rid=0, tokens=p, max_new=4)
+    dense.submit(d)
+    dense.run()
+    assert len(d.output) == 2             # pos cap truncates after one step
+    for reserve in ("prompt", "budget"):
+        paged = PagedBatcher(model, params, n_slots=1, s_max=s_max,
+                             chunk_size=4, kv_bits=16, block_size=bs,
+                             num_blocks=1 + 4, reserve=reserve)
+        r = Request(rid=0, tokens=p, max_new=4)
+        paged.submit(r)
+        paged.run()
+        assert r.output == d.output, reserve
 
 
 def test_paged_rejects_unsupported_stacks():

@@ -118,6 +118,58 @@ def test_kv_cache_prefix_and_eviction_accounting():
     assert "prefix hit rate 0.80" in m.format()
 
 
+def test_preemption_and_suffix_hit_accounting():
+    """The dynamic-allocation counters: preemptions / recomputed_tokens /
+    generated-suffix hits split from prompt-prefix hits — and the
+    admitted-concurrency gauge that the overcommit bench reads."""
+    m = Metrics(n_slots=2)
+    a, b = _req(prompt_len=6), _req(prompt_len=4)
+    m.on_submit(a)
+    m.on_submit(b)
+    m.on_admit(a)
+    m.on_admit(b)
+    assert m.requests_active == 2 and m.requests_active_peak == 2
+
+    m.on_preempt(b)                            # b back to the queue
+    assert m.preemptions == 1 and m.requests_active == 1
+    # b's re-admission: prompt' = 4 prompt + 5 generated tokens; the radix
+    # served 4 prompt-kind and 4 suffix-kind tokens, 0 were re-prefilled
+    # redundantly beyond the match
+    m.on_admit(b, n_prompt_tokens=9, resumed=True)
+    m.on_prefix_lookup(4, 9, suffix_tokens=4)
+    m.on_recompute(0)
+    assert m.requests_active == 2
+    # resumed admissions never re-sample the queue wait
+    assert len(m.queue_ms) == 2
+
+    m.on_finish(a)
+    m.on_finish(b)
+    m.on_kv_blocks(3, 20)                      # enables the kv format() line
+    s = m.summary()
+    assert s["scheduler"]["preemptions"] == 1
+    assert s["scheduler"]["recomputed_tokens"] == 0
+    assert s["scheduler"]["active_peak"] == 2
+    kc = s["kv_cache"]
+    assert kc["prefix"]["hit_tokens"] == 4
+    assert kc["suffix"] == {"hits": 1, "hit_tokens": 4,
+                            "hit_rate": 4 / (6 + 4 + 9)}
+    # prompt_tokens counted the resumed admission too: rates stay rates
+    assert 0.0 <= kc["prefix"]["hit_rate"] <= 1.0
+    out = m.format()
+    assert "preemptions 1" in out and "suffix hits 4 tok" in out
+
+
+def test_preemption_absent_from_format_when_zero():
+    m = Metrics(n_slots=1)
+    r = _req()
+    m.on_submit(r)
+    m.on_admit(r)
+    m.on_token(r, first=True)
+    m.on_finish(r)
+    assert "preemptions" not in m.format()      # dense batcher: no noise
+    assert m.summary()["scheduler"]["preemptions"] == 0
+
+
 def test_throughput_windows_coincide_under_immediate_admission():
     """No queueing: both windows agree (continuity for old bench numbers)."""
     m = Metrics(n_slots=1)

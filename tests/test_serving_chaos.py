@@ -1,0 +1,350 @@
+"""Chaos differential harness for dynamic-allocation paged serving.
+
+The tentpole claim of the preemption rework is *scheduling invisibility*:
+whatever the pool pressure does — lazy block allocation, radix eviction,
+mid-flight preemption with recompute-by-chunked-prefill, re-queues, stalls —
+every request's greedy stream must be bit-identical to an isolated
+sequential run, and the dense batcher must agree with paged kv_bits=16
+token for token under the same arrival schedule.
+
+This suite drives that claim through randomized chaos:
+
+  * random arrival times (requests submitted at different scheduler steps,
+    not queued up front) x prompt/budget lengths x deliberately tiny pools
+    (sized to force eviction AND preemption) x kv_bits ∈ {16, 8} x
+    prefix-heavy prompt distributions (shared-prefix groups, so radix hits,
+    generated-suffix reuse, COW sharing and preemption all interleave);
+  * ``BlockPool.check`` runs after EVERY scheduler step (refcounts == live
+    holders, free list ∩ allocated = ∅, null block pinned), and each run
+    must drain to zero leaked blocks (used == radix-cached, slots empty);
+  * streaming callbacks are captured and compared — a preempted request's
+    ``on_token`` stream must continue, never replay.
+
+Deterministic companions pin the behaviors randomness only probably hits:
+preemption firing under overcommit, a recompute that rides the suffix cache
+end-to-end (zero recomputed tokens), and stall-mode completion vs detected
+deadlock.
+
+Runs with real ``hypothesis`` when installed (CI) and the deterministic
+fallback in conftest.py otherwise.  ``REPRO_SERVING_EXAMPLES`` scales the
+example count (CI's chaos-fuzz step raises it).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model, reduce_for_smoke
+from repro.runtime.kvcache import PagedBatcher
+from repro.runtime.serving import ContinuousBatcher, Request
+
+EXAMPLES = int(os.environ.get("REPRO_SERVING_EXAMPLES", "4"))
+S_MAX = 24
+CHUNK = 4
+BLOCK = 4
+N_REQ = 5
+# tiny pools (allocatable blocks): both far below N_REQ concurrent
+# footprints (up to 6 blocks each), so eviction and preemption are routine
+POOL_CHOICES = (5, 8)
+
+_STATE = {}
+
+
+def _setup(kv_bits=0):
+    """Model per dense-cache width; one shared param set (pattern of
+    test_kvcache.py).  kv_bits=0 is the fp32 cache (paged kv_bits=16
+    oracle); kv_bits=8 the quantized dense cache (paged kv_bits=8 oracle)."""
+    key = f"m{kv_bits}"
+    if "cfg" not in _STATE:
+        cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                                  dtype="float32")
+        _STATE["cfg"] = cfg
+        _STATE["params"] = build_model(cfg).init(jax.random.PRNGKey(0))
+        _STATE["memo"] = {}
+        _STATE["batchers"] = {}
+        # three shared prefix pools: prefix-heavy workloads draw from these
+        rng = np.random.default_rng(1234)
+        _STATE["prefixes"] = [rng.integers(0, cfg.vocab, (12,)).astype(np.int32)
+                              for _ in range(3)]
+    if key not in _STATE:
+        cfg = dataclasses.replace(_STATE["cfg"], kv_bits=kv_bits)
+        _STATE[key] = build_model(cfg)
+    return _STATE[key].cfg, _STATE[key], _STATE["params"]
+
+
+def _prompt(group: int, length: int, salt: int, vocab: int) -> np.ndarray:
+    """Prefix-heavy prompt: all but the last token comes from the group's
+    shared prefix (when it reaches), so same-group requests share
+    block-aligned prefixes and the radix tree stays hot."""
+    prefix = _STATE["prefixes"][group][:min(length - 1, 10)]
+    rng = np.random.default_rng(7919 * salt + 31 * group + length)
+    tail = rng.integers(0, vocab, (length - len(prefix),)).astype(np.int32)
+    return np.concatenate([prefix, tail])[None][:, :length]
+
+
+def _oracle(kv_bits, prompt, max_new):
+    """Sequential single-request greedy stream (memoized).
+
+    kv_bits=0 (the fp32 cache): raw ``model.prefill`` + ``decode_step`` —
+    maximally independent of the scheduler under test (whole-prompt and
+    chunked prefill are bit-identical for float caches, asserted in
+    test_serving.py).  kv_bits=8: a one-slot dense batcher — the quantized
+    cache's defined numerics are CHUNK-granular (a pad-free whole-prompt
+    prefill quantizes the same values but attends the raw in-prompt K/V
+    instead of the stored round-trip, a pre-existing quantization-noise
+    difference outside this subsystem), so the sequential oracle is the
+    sequential run of the same serving numerics."""
+    import jax.numpy as jnp
+    key = (kv_bits, prompt.tobytes(), prompt.shape[1], max_new)
+    memo = _STATE["memo"]
+    if key not in memo:
+        _, model, params = _setup(kv_bits)
+        if kv_bits:
+            solo = _batcher("dense", kv_bits, 1, 0)   # memoized one-slot run
+            req = Request(rid=0, tokens=prompt, max_new=max_new)
+            solo.submit(req)
+            solo.run()
+            memo[key] = req.output
+        else:
+            batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+            logits, cache = model.prefill(params, batch, S_MAX)
+            tok = int(jnp.argmax(logits[0, -1]))
+            out, pos = [tok], prompt.shape[1]
+            for _ in range(max_new - 1):
+                logits, cache = model.decode_step(
+                    params, jnp.asarray([[tok]], jnp.int32), cache,
+                    jnp.int32(pos))
+                tok = int(jnp.argmax(logits[0, 0]))
+                out.append(tok)
+                pos += 1
+            memo[key] = out
+    return memo[key]
+
+
+def _batcher(kind, kv_bits, n_slots, pool_blocks):
+    """Memoized batcher reuse across examples: bounds jit compiles AND makes
+    the chaos nastier — the radix tree and pool arrive pre-populated from
+    earlier examples."""
+    key = (kind, kv_bits, n_slots, pool_blocks)
+    cache = _STATE["batchers"]
+    if key not in cache:
+        _, model, params = _setup(0 if kind != "dense" else kv_bits)
+        if kind == "dense":
+            cache[key] = ContinuousBatcher(model, params, n_slots=n_slots,
+                                           s_max=S_MAX, chunk_size=CHUNK)
+        else:
+            cache[key] = PagedBatcher(
+                model, params, n_slots=n_slots, s_max=S_MAX, chunk_size=CHUNK,
+                kv_bits=kv_bits, block_size=BLOCK,
+                num_blocks=1 + pool_blocks)
+    return cache[key]
+
+
+def _drive(batcher, reqs, arrivals, max_steps=4000):
+    """Run the scheduler with requests arriving at their scheduled steps;
+    paged batchers get the pool invariant checked after EVERY step."""
+    order = sorted(range(len(reqs)), key=lambda i: (arrivals[i], i))
+    paged = isinstance(batcher, PagedBatcher)
+    done, k, step = [], 0, 0
+    while k < len(order) or not batcher.idle:
+        while k < len(order) and arrivals[order[k]] <= step:
+            batcher.submit(reqs[order[k]])
+            k += 1
+        done.extend(batcher.step())
+        if paged:
+            batcher.check_pool()
+        step += 1
+        assert step < max_steps, "scheduler failed to drain"
+    return {r.rid: r.output for r in done}
+
+
+def _assert_drained(paged):
+    """Zero leaked blocks: every remaining reference is the radix cache's."""
+    assert all(b is None for b in paged._slot_blocks)
+    assert paged.pool_meta.used_blocks == len(paged.radix or ())
+    paged.check_pool()
+
+
+# ---------------------------------------------------------------------------
+# the chaos property
+# ---------------------------------------------------------------------------
+@settings(max_examples=EXAMPLES, deadline=None, derandomize=True)
+@given(groups=st.lists(st.integers(0, 2), min_size=N_REQ, max_size=N_REQ),
+       lengths=st.lists(st.integers(2, 10), min_size=N_REQ, max_size=N_REQ),
+       budgets=st.lists(st.integers(4, 16), min_size=N_REQ, max_size=N_REQ),
+       arrivals=st.lists(st.integers(0, 6), min_size=N_REQ, max_size=N_REQ),
+       n_req=st.integers(3, N_REQ),
+       n_slots=st.sampled_from([2, 3]),
+       pool_blocks=st.sampled_from(POOL_CHOICES),
+       kv_bits=st.sampled_from([16, 8]),
+       salt=st.integers(0, 3))
+def test_chaos_streams_survive_eviction_and_preemption(
+        groups, lengths, budgets, arrivals, n_req, n_slots, pool_blocks,
+        kv_bits, salt):
+    """Random arrivals x lengths x budgets x tiny pools x kv_bits x
+    prefix-heavy prompts: every final stream equals the sequential
+    single-request oracle, dense == paged16 bitwise, the pool invariants
+    hold after every step, and nothing leaks at drain."""
+    cfg, _, _ = _setup()
+    groups, lengths = groups[:n_req], lengths[:n_req]
+    arrivals = arrivals[:n_req]
+    # clamp each budget so (a) the request's lifetime footprint fits the
+    # pool (submit would reject it otherwise — such requests can never
+    # finish) and (b) the stream stays under the scheduler's cache cap
+    # (both batchers truncate at position s_max-1; the sequential oracle
+    # has no scheduler to do so)
+    budgets = [max(1, min(b, pool_blocks * BLOCK - ln + 1, S_MAX - ln))
+               for b, ln in zip(budgets[:n_req], lengths)]
+    prompts = [_prompt(g, ln, salt * N_REQ + i, cfg.vocab)
+               for i, (g, ln) in enumerate(zip(groups, lengths))]
+    want = {i: _oracle(0 if kv_bits == 16 else kv_bits, p, budgets[i])
+            for i, p in enumerate(prompts)}
+
+    streamed = {i: [] for i in range(n_req)}
+
+    def cb(req, tok, fin):
+        streamed[req.rid].append((tok, bool(fin)))
+
+    paged = _batcher("paged", kv_bits, n_slots, pool_blocks)
+    reqs = [Request(rid=i, tokens=p, max_new=budgets[i], on_token=cb)
+            for i, p in enumerate(prompts)]
+    got = _drive(paged, reqs, arrivals)
+
+    assert got == want, (groups, lengths, budgets, arrivals, n_slots,
+                         pool_blocks, kv_bits)
+    for i in range(n_req):
+        toks = [t for t, _ in streamed[i]]
+        fins = [f for _, f in streamed[i]]
+        # preemption must never replay a token through the stream callback
+        assert toks == want[i], (i, "stream diverged/replayed")
+        assert fins[-1] and not any(fins[:-1])
+    _assert_drained(paged)
+
+    if kv_bits == 16:
+        dense = _batcher("dense", 0, n_slots, pool_blocks)
+        dreqs = [Request(rid=i, tokens=p, max_new=budgets[i])
+                 for i, p in enumerate(prompts)]
+        dgot = _drive(dense, dreqs, arrivals)
+        assert dgot == got, "dense != paged16 under identical arrivals"
+
+
+# ---------------------------------------------------------------------------
+# deterministic companions: pin what randomness only probably reaches
+# ---------------------------------------------------------------------------
+def _flat_prompt(length, salt, vocab):
+    rng = np.random.default_rng(1009 * length + salt)
+    return rng.integers(0, vocab, (1, length)).astype(np.int32)
+
+
+def test_preemption_fires_under_overcommit_and_streams_survive():
+    """2 slots x lifetime footprints of 4 blocks each on a 5-block pool:
+    preemption is forced, streams stay bit-identical to the dense batcher,
+    callbacks never replay, and the drained pool leaks nothing."""
+    cfg, model, params = _setup()
+    prompts = [_flat_prompt(4, 60 + i, cfg.vocab) for i in range(4)]
+    dense = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
+                              chunk_size=CHUNK)
+    for i, p in enumerate(prompts):
+        dense.submit(Request(rid=i, tokens=p, max_new=12))
+    want = {r.rid: r.output for r in dense.run()}
+
+    streamed = {i: [] for i in range(4)}
+    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX,
+                         chunk_size=CHUNK, kv_bits=16, block_size=BLOCK,
+                         num_blocks=1 + 5)
+    reqs = [Request(rid=i, tokens=p, max_new=12,
+                    on_token=lambda r, t, f: streamed[r.rid].append(t))
+            for i, p in enumerate(prompts)]
+    got = _drive(paged, reqs, [0] * 4)
+    assert got == want
+    assert streamed == want                       # no replay, no divergence
+    assert paged.metrics.preemptions > 0          # pressure actually bit
+    assert paged.metrics.recomputed_tokens > 0
+    assert paged.metrics.blocks_evicted > 0
+    _assert_drained(paged)
+
+
+def test_recompute_rides_the_suffix_cache():
+    """Deterministic near-free recompute: A (admitted first) takes the last
+    free block at the same boundary B needs one, so B self-preempts with
+    every one of its blocks registered; A finishes without evicting them;
+    B's re-admission radix-hits its own prompt AND generated suffix —
+    recomputed_tokens stays ZERO."""
+    cfg, model, params = _setup()
+    pa, pb = _flat_prompt(4, 50, cfg.vocab), _flat_prompt(4, 51, cfg.vocab)
+    dense = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
+                              chunk_size=CHUNK)
+    dense.submit(Request(rid=0, tokens=pa, max_new=11))
+    dense.submit(Request(rid=1, tokens=pb, max_new=12))
+    want = {r.rid: r.output for r in dense.run()}
+
+    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX,
+                         chunk_size=CHUNK, kv_bits=16, block_size=BLOCK,
+                         num_blocks=1 + 7)
+    reqs = [Request(rid=0, tokens=pa, max_new=11),
+            Request(rid=1, tokens=pb, max_new=12)]
+    got = _drive(paged, reqs, [0, 0])
+    assert got == want
+    m = paged.metrics
+    assert m.preemptions == 1
+    assert m.suffix_hit_tokens > 0                # generated KV was reused
+    assert m.recomputed_tokens == 0               # ...making recompute free
+    _assert_drained(paged)
+
+
+def test_stall_mode_completes_when_pool_fits_and_detects_deadlock():
+    """preemption='off': starved slots stall (write deflected to the null
+    block, token re-fed later) and streams still match the dense batcher
+    when the pool can eventually serve everyone; a pool that can never
+    satisfy the stalled slots raises a deadlock error instead of hanging."""
+    cfg, model, params = _setup()
+    prompts = [_flat_prompt(4, 60 + i, cfg.vocab) for i in range(4)]
+    dense = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
+                              chunk_size=CHUNK)
+    for i, p in enumerate(prompts):
+        dense.submit(Request(rid=i, tokens=p, max_new=12))
+    want = {r.rid: r.output for r in dense.run()}
+
+    ok = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=CHUNK,
+                      kv_bits=16, block_size=BLOCK, num_blocks=1 + 8,
+                      preemption="off")
+    got = _drive(ok, [Request(rid=i, tokens=p, max_new=12)
+                      for i, p in enumerate(prompts)], [0] * 4)
+    assert got == want
+    assert ok.metrics.preemptions == 0
+    _assert_drained(ok)
+
+    dead = PagedBatcher(model, params, n_slots=2, s_max=S_MAX,
+                        chunk_size=CHUNK, kv_bits=16, block_size=BLOCK,
+                        num_blocks=1 + 5, preemption="off")
+    for i, p in enumerate(prompts[:2]):
+        dead.submit(Request(rid=i, tokens=p, max_new=12))
+    with pytest.raises(RuntimeError, match="deadlock"):
+        for _ in range(200):
+            dead.step()
+
+
+def test_pool_check_catches_seeded_corruption():
+    """The invariant checker is not a tautology: hand-corrupt each invariant
+    and assert ``BlockPool.check`` flags it."""
+    from repro.runtime.kvcache import BlockPool
+    p = BlockPool(6)
+    blocks = p.alloc(2)
+    p.check([blocks], ())                          # clean state passes
+
+    with pytest.raises(RuntimeError, match="holders"):
+        p.check([], ())                            # leaked: refs, no holder
+    with pytest.raises(RuntimeError, match="holders"):
+        p.check([blocks, blocks], ())              # dangling double-holder
+    p._free.append(blocks[0])                      # free ∩ allocated
+    with pytest.raises(RuntimeError, match="refcount|allocated"):
+        p.check([blocks], ())
+    p._free.pop()
+    p._ref[0] = 0                                  # null block unpinned
+    with pytest.raises(RuntimeError, match="pin"):
+        p.check([blocks], ())
