@@ -39,7 +39,8 @@ from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke
 from repro.runtime.kvcache import (PagedBatcher, paged_block_bytes,
                                    paged_capacity_blocks)
-from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig)
 
 S_MAX = 32
 CHUNK = 8
@@ -68,7 +69,8 @@ def _shared_prefix_requests(cfg, rng):
         for _ in range(PER_GROUP):
             suffix = rng.integers(0, cfg.vocab, (int(rng.integers(3, 8)),))
             toks = np.concatenate([prefix, suffix])[None].astype(np.int32)
-            reqs.append(Request(rid=rid, tokens=toks, max_new=MAX_NEW))
+            reqs.append(Request(rid=rid, tokens=toks,
+        options=RequestOptions(max_new=MAX_NEW)))
             rid += 1
     return reqs
 
@@ -80,7 +82,7 @@ def _run_workload(batcher, cfg, *, warmup=True):
     if warmup:
         w = Request(rid=10_000, tokens=rng.integers(
             0, cfg.vocab, (1, PREFIX_LEN + 3)).astype(np.int32),
-            max_new=MAX_NEW)
+        options=RequestOptions(max_new=MAX_NEW))
         batcher.submit(w)
         batcher.run()
     m0_chunks = batcher.metrics.prefill_chunks
@@ -128,13 +130,13 @@ def overcommit_bench(cfg, model, params):
     def workload(mn=max_new):
         rng = np.random.default_rng(23)
         return [Request(rid=i, tokens=rng.integers(
-            0, cfg.vocab, (1, 6)).astype(np.int32), max_new=mn)
+            0, cfg.vocab, (1, 6)).astype(np.int32),
+        options=RequestOptions(max_new=mn))
             for i in range(n_req)]
 
     def serve(reserve, pb, mn=max_new, preemption="recompute"):
-        b = PagedBatcher(model, params, n_slots=n_slots, s_max=S_MAX,
-                         chunk_size=CHUNK, kv_bits=16, block_size=BLOCK,
-                         pool_bytes=pb, reserve=reserve, preemption=preemption)
+        b = PagedBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=CHUNK, kv_bits=16, block_size=BLOCK, pool_bytes=pb, reserve=reserve, preemption=preemption))
         warm = workload(mn)[:2]                              # compile shapes
         for r in warm:
             b.submit(r)
@@ -233,11 +235,10 @@ def capacity_sweep(cfg):
 
 def main(out=None):
     cfg, model, params = _setup()
-    mk_dense = lambda: ContinuousBatcher(model, params, n_slots=4,
-                                         s_max=S_MAX, chunk_size=CHUNK)
-    mk_paged = lambda kv_bits, prefix: PagedBatcher(
-        model, params, n_slots=4, s_max=S_MAX, chunk_size=CHUNK,
-        kv_bits=kv_bits, block_size=BLOCK, prefix_cache=prefix)
+    mk_dense = lambda: ContinuousBatcher(model, params,
+        ServingConfig(n_slots=4, s_max=S_MAX, chunk_size=CHUNK))
+    mk_paged = lambda kv_bits, prefix: PagedBatcher(model, params,
+        ServingConfig(n_slots=4, s_max=S_MAX, chunk_size=CHUNK, kv_bits=kv_bits, block_size=BLOCK, prefix_cache=prefix))
 
     dense_out, dense_m = _run_workload(mk_dense(), cfg)
     print(f"kvcache_dense,{dense_m['tok_per_s']:.1f},"

@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke
-from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig)
 
 
 def _setup():
@@ -63,19 +64,18 @@ def _setup_spmd():
 
 
 def _mk_requests(cfg, n, rng, *, lo=6, hi=20, max_new=8):
-    return [Request(rid=i,
-                    tokens=rng.integers(0, cfg.vocab,
+    return [Request(rid=i, tokens=rng.integers(0, cfg.vocab,
                                         (1, int(rng.integers(lo, hi + 1)))
                                         ).astype(np.int32),
-                    max_new=max_new)
+        options=RequestOptions(max_new=max_new))
             for i in range(n)]
 
 
 def load_sweep(cfg, model, params, loads=(2, 4, 8), n_slots=4):
     rows = []
     for n_req in loads:
-        batcher = ContinuousBatcher(model, params, n_slots=n_slots,
-                                    s_max=32, chunk_size=8)
+        batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=32, chunk_size=8))
         rng = np.random.default_rng(n_req)
         t0 = time.time()
         for r in _mk_requests(cfg, n_req, rng):
@@ -104,17 +104,19 @@ def load_sweep(cfg, model, params, loads=(2, 4, 8), n_slots=4):
 def stall_check(cfg, model, params, chunk_size):
     """Decode tokens produced by a running request while a long prompt is
     admitted.  Returns (decode_tokens_during_admission, admission_steps)."""
-    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=48,
-                                chunk_size=chunk_size)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=48, chunk_size=chunk_size))
     rng = np.random.default_rng(0)
     short = Request(rid=0, tokens=rng.integers(0, cfg.vocab, (1, 4))
-                    .astype(np.int32), max_new=40)
+                    .astype(np.int32),
+        options=RequestOptions(max_new=40))
     batcher.submit(short)
     while len(short.output) < 2:           # short request decoding steadily
         batcher.step()
 
     long_req = Request(rid=1, tokens=rng.integers(0, cfg.vocab, (1, 32))
-                       .astype(np.int32), max_new=2)
+                       .astype(np.int32),
+        options=RequestOptions(max_new=2))
     before = len(short.output)
     batcher.submit(long_req)
     steps = 0
@@ -130,9 +132,8 @@ def _run_one_mesh(cfg, model, params, mesh, *, n_slots, decode_iters=16,
     decode steps (the phase the dp speedup claim is about).  Admission —
     which includes the per-slot compiles — happens before the window."""
     max_new = n_slots + decode_iters + 8   # nobody finishes mid-window
-    batcher = ContinuousBatcher(model, params, n_slots=n_slots,
-                                s_max=chunk + max_new + 1, chunk_size=chunk,
-                                mesh=mesh)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=chunk + max_new + 1, chunk_size=chunk, mesh=mesh))
     rng = np.random.default_rng(7)
     t_start = time.perf_counter()
     for r in _mk_requests(cfg, n_slots, rng, lo=4, hi=chunk, max_new=max_new):

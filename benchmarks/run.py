@@ -14,9 +14,9 @@ import argparse
 import json
 import traceback
 
-from benchmarks import (bench_engine_autotune, bench_fig6_widening,
-                        bench_kernels, bench_kvcache, bench_serving,
-                        bench_table2_pe, bench_table3_alexnet,
+from benchmarks import (bench_adaptive, bench_engine_autotune,
+                        bench_fig6_widening, bench_kernels, bench_kvcache,
+                        bench_serving, bench_table2_pe, bench_table3_alexnet,
                         bench_table4_resnet, bench_table5_device_compare,
                         roofline)
 
@@ -30,6 +30,7 @@ BENCHES = [
     ("engine_autotune", bench_engine_autotune.main),
     ("serving", bench_serving.main),
     ("kvcache", bench_kvcache.main),
+    ("adaptive", bench_adaptive.main),
     ("roofline", roofline.main),
 ]
 

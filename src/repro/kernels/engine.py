@@ -700,8 +700,66 @@ def _tunable_k(pcfg: PrecisionConfig, k: int) -> bool:
     return packable and k % (32 // bits) == 0
 
 
+# ---------------------------------------------------------------------------
+# precision-variant registry (adaptive serving)
+# ---------------------------------------------------------------------------
+class PrecisionVariant(NamedTuple):
+    """One precision variant of a model's weights, held for runtime
+    precision switching: the serving-packed params pytree plus the
+    PrecisionConfig its matmuls dispatch under.  The adaptive batcher
+    registers its variants here so tuning plans, benchmarks and tests can
+    enumerate what a server is holding."""
+    name: str                  # variant key, e.g. "fp32", "2xT"
+    pcfg: PrecisionConfig
+    params: object             # packed serving param pytree
+
+
+# model-name -> variant-name -> PrecisionVariant
+_VARIANTS: Dict[str, Dict[str, PrecisionVariant]] = {}
+
+
+def register_variant(model_name: str, name: str, pcfg: PrecisionConfig,
+                     params) -> PrecisionVariant:
+    """Register (or replace) a named precision variant of one model's
+    weights.  Idempotent per (model_name, name): re-registration overwrites,
+    so rebuilding a batcher does not accumulate stale param pytrees."""
+    var = PrecisionVariant(name, pcfg, params)
+    _VARIANTS.setdefault(model_name, {})[name] = var
+    return var
+
+
+def registered_variants(model_name: str) -> Dict[str, PrecisionVariant]:
+    """The variants currently registered for ``model_name`` (possibly {})."""
+    return dict(_VARIANTS.get(model_name, {}))
+
+
+def clear_variants(model_name: Optional[str] = None) -> None:
+    """Drop registered variants (all models when ``model_name`` is None) —
+    releases the param pytrees they pin."""
+    if model_name is None:
+        _VARIANTS.clear()
+    else:
+        _VARIANTS.pop(model_name, None)
+
+
+def variant_tune_plans(model_cfg, *, n_slots: int, chunk_size: int,
+                       draft_window: int = 0, mesh=None) -> dict:
+    """Per-variant serving tune plans for every variant registered under
+    ``model_cfg.name``.  ``draft_window`` > 0 adds the self-speculative
+    verify dispatch's row bucket (``n_slots * (draft_window + 1)`` rows —
+    the (B, W) window flattens into the matmul M axis) to every variant's
+    plan, so a tuned adaptive server never sweeps mid-request."""
+    extra = (int(n_slots) * (int(draft_window) + 1),) if draft_window else ()
+    return {
+        name: serving_tune_plan(model_cfg, var.pcfg, n_slots=n_slots,
+                                chunk_size=chunk_size, mesh=mesh,
+                                extra_m=extra)
+        for name, var in registered_variants(model_cfg.name).items()
+    }
+
+
 def serving_tune_plan(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
-                      chunk_size: int, mesh=None) -> list:
+                      chunk_size: int, mesh=None, extra_m=()) -> list:
     """The (M, N, K) shape classes the continuous batcher will dispatch —
     what :func:`tune_serving_shapes` sweeps.
 
@@ -716,30 +774,34 @@ def serving_tune_plan(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
     the local keys are what a shard_map'd Pallas dispatch looks up
     (ROADMAP open item)."""
     plan = set()
+    m_rows = (int(chunk_size), int(n_slots)) + tuple(int(m) for m in extra_m)
     for (n, k) in model_matmul_shapes(model_cfg):
-        for m in (int(chunk_size), int(n_slots)):
+        for m in m_rows:
             plan.add((m, n, k))            # global: today's pjit dispatch
     if mesh is not None:
         from repro.parallel.sharding import serving_shard_factors
         dp, tp = serving_shard_factors(model_cfg, mesh, n_slots)
         for (n, k) in model_matmul_shapes(model_cfg, tp=tp):
-            for m in (int(chunk_size), max(1, int(n_slots) // dp)):
+            for m in (int(chunk_size), max(1, int(n_slots) // dp)) \
+                    + tuple(int(m) for m in extra_m):
                 plan.add((m, n, k))        # per-device: shard_map dispatch
     return sorted(plan)
 
 
 def tune_serving_shapes(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
-                        chunk_size: int, mesh=None,
+                        chunk_size: int, mesh=None, extra_m=(),
                         backend: Optional[str] = None,
                         candidates=None, iters: int = 2) -> list:
     """Pre-tune the exact M-row buckets the continuous batcher dispatches
     (see :func:`serving_tune_plan` — with ``mesh``, per-device shard shapes
-    alongside the global ones).  With these entries warm, the serving loop
-    never sees a tuning-cache miss — the scheduler's shape bucketing and
-    this sweep share the same grid."""
+    alongside the global ones; ``extra_m`` adds rows such as the speculative
+    verify window's flattened batch).  With these entries warm, the serving
+    loop never sees a tuning-cache miss — the scheduler's shape bucketing
+    and this sweep share the same grid."""
     out = []
     for (m, n, k) in serving_tune_plan(model_cfg, pcfg, n_slots=n_slots,
-                                       chunk_size=chunk_size, mesh=mesh):
+                                       chunk_size=chunk_size, mesh=mesh,
+                                       extra_m=extra_m):
         if not _tunable_k(pcfg, k):
             continue                       # unpacked storage: nothing to tune
         out.append(autotune_matmul(pcfg, m, n, k, backend=backend,

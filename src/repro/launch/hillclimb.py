@@ -36,12 +36,35 @@ BATTERY = [
 ]
 
 
+def seed_brownout_policy(out_dir=OUT, iters: int = 64):
+    """Hillclimb the adaptive server's brownout thresholds on the bursty
+    synthetic trace (same coordinate-descent discipline as the perf
+    battery, host-side simulator instead of re-lowering).  The winning
+    :class:`repro.runtime.policy.BrownoutPolicy` is dumped to
+    ``brownout_policy.json`` — ``AdaptiveServer`` callers load it as the
+    ``ServingConfig.brownout_policy`` seed."""
+    import dataclasses
+    import json
+    from repro.runtime.policy import bursty_trace, search_policy
+    policy, out = search_policy(bursty_trace(), iters=iters)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "brownout_policy.json")
+    with open(path, "w") as f:
+        json.dump({"policy": dataclasses.asdict(policy), "sim": out}, f,
+                  indent=1)
+    print(f"brownout policy search: score={out['score']:.1f} "
+          f"completed={out['completed']:.0f} max_level={out['max_level']} "
+          f"-> {path}")
+    return policy, out
+
+
 def main():
     for arch, shape, kw in BATTERY:
         prec = kw.pop("precision", "fp32")
         kvb = kw.pop("kv_bits", 0)
         run_cell(arch, shape, multi_pod=False, precision=prec, kv_bits=kvb,
                  out_dir=OUT, skip_existing=True, **kw)
+    seed_brownout_policy()
 
 
 if __name__ == "__main__":

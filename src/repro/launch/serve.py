@@ -22,6 +22,7 @@ loop (their inputs are not token streams the scheduler can chunk).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -33,7 +34,8 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import build_model, make_batch, reduce_for_smoke, to_serving
 from repro.models.config import ShapeConfig
 from repro.models.convert import serving_param_bytes
-from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig)
 
 
 def _legacy_loop(model, params, cfg, args):
@@ -86,14 +88,23 @@ def _legacy_loop(model, params, cfg, args):
 def _batcher_loop(model, params, cfg, args, mesh=None):
     """Continuous batching through the scheduler v2 (SPMD when --mesh)."""
     s_max = args.prompt_len + args.gen
-    if args.paged:
+    sc = ServingConfig(
+        n_slots=args.slots or args.requests, s_max=s_max,
+        prompt_len=args.prompt_len, chunk_size=args.chunk_size,
+        autotune=args.autotune, mesh=mesh,
+        kv_bits=args.kv_bits, block_size=args.kv_block_size,
+        pool_bytes=args.pool_bytes or None,
+        prefix_cache=args.prefix_cache,
+        reserve=args.reserve, preemption=args.preemption,
+        brownout=args.brownout, speculative=args.speculative,
+        draft_precision=args.draft_precision, draft_k=args.draft_k)
+    adaptive = args.brownout
+    if args.paged or adaptive or args.speculative:
         from repro.runtime.kvcache import PagedBatcher, paged_block_bytes
-        block_size = args.kv_block_size
-        if not block_size:
+        if not sc.block_size:
             from repro.kernels import engine
-            n_slots = args.slots or args.requests
             attn_shape = dict(
-                b=n_slots, kv=cfg.n_kv_heads,
+                b=sc.n_slots, kv=cfg.n_kv_heads,
                 g=max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1), dh=cfg.dh,
                 s_max=s_max, kv_bits=args.kv_bits)
             if args.autotune:
@@ -101,28 +112,32 @@ def _batcher_loop(model, params, cfg, args, mesh=None):
                 # sequence tile) so the lookup below returns a measured
                 # recommendation instead of the cold-cache default
                 engine.autotune_kv_block_size(**attn_shape)
-            block_size = engine.preferred_kv_block_size(**attn_shape)
-            print(f"--kv-block-size 0 -> {block_size} "
+            sc = dataclasses.replace(
+                sc, block_size=engine.preferred_kv_block_size(**attn_shape))
+            print(f"--kv-block-size 0 -> {sc.block_size} "
                   f"({'tuned' if args.autotune else 'tuning-cache'} pick)")
-        batcher = PagedBatcher(
-            model, params, n_slots=args.slots or args.requests, s_max=s_max,
-            kv_bits=args.kv_bits, block_size=block_size,
-            prefix_cache=args.prefix_cache,
-            reserve=args.reserve, preemption=args.preemption,
-            pool_bytes=args.pool_bytes or None,
-            prompt_len=args.prompt_len, chunk_size=args.chunk_size,
-            autotune=args.autotune, mesh=mesh)
-        print(f"paged KV cache: {batcher.num_blocks - 1} blocks x "
-              f"{batcher.block_size} positions at kv_bits={args.kv_bits} "
-              f"({paged_block_bytes(cfg, batcher.block_size, args.kv_bits)} "
-              f"B/block), prefix cache "
-              f"{'on' if args.prefix_cache else 'off'}, "
-              f"reserve={args.reserve}, preemption={args.preemption}")
+        if adaptive:
+            from repro.runtime.adaptive import AdaptiveServer
+            batcher = AdaptiveServer(model, params, sc)
+            print(f"adaptive serving: {len(batcher.lanes)} precision lanes "
+                  f"(rung 0 {'speculative, ' if sc.speculative else ''}"
+                  f"kv ladder 16/8/4"
+                  + (f", rung 3 = {sc.draft_precision} weights"
+                     if len(batcher.lanes) > 3 else "")
+                  + f"); SLO classes: {sorted(batcher.classes)}")
+        else:
+            batcher = PagedBatcher(model, params, sc)
+            print(f"paged KV cache: {batcher.num_blocks - 1} blocks x "
+                  f"{batcher.block_size} positions at kv_bits={args.kv_bits} "
+                  f"({paged_block_bytes(cfg, batcher.block_size, args.kv_bits)} "
+                  f"B/block), prefix cache "
+                  f"{'on' if args.prefix_cache else 'off'}, "
+                  f"reserve={args.reserve}, preemption={args.preemption}")
+            if sc.speculative:
+                print(f"self-speculative decoding: {sc.draft_precision} "
+                      f"draft, k={sc.draft_k}, fp-verified (lossless)")
     else:
-        batcher = ContinuousBatcher(
-            model, params, n_slots=args.slots or args.requests, s_max=s_max,
-            prompt_len=args.prompt_len, chunk_size=args.chunk_size,
-            autotune=args.autotune, mesh=mesh)
+        batcher = ContinuousBatcher(model, params, sc)
     if mesh is not None:
         from repro.parallel.sharding import serving_shard_factors
         dp, tp = serving_shard_factors(cfg, mesh, batcher.n_slots)
@@ -130,13 +145,18 @@ def _batcher_loop(model, params, cfg, args, mesh=None):
               f"model={mesh.shape['model']}: decode batch sharded {dp}-way, "
               f"tensor-parallel {tp}-way "
               f"({'pure-DP (params replicated)' if tp == 1 else 'TP'})")
-    if batcher.chunk_size:
-        print(f"chunked prefill: chunk={batcher.chunk_size}, prompt buckets "
-              f"= multiples of {batcher.chunk_size} (1 compiled chunk shape)")
+    chunk = getattr(batcher, "chunk_size", None)
+    if chunk is None and adaptive:
+        chunk = batcher.lanes[0].chunk_size
+    if chunk:
+        print(f"chunked prefill: chunk={chunk}, prompt buckets "
+              f"= multiples of {chunk} (1 compiled chunk shape)")
     else:
         print("whole-prompt admission (chunked prefill disabled/unsupported)")
 
     rng = np.random.default_rng(1)
+    slo_cycle = (["premium", "standard", "batch"] if args.slo == "mixed"
+                 else [args.slo])
 
     def stream_cb(req, tok, finished):
         mark = "<eos>" if finished else ""
@@ -148,11 +168,13 @@ def _batcher_loop(model, params, cfg, args, mesh=None):
         batcher.submit(Request(
             rid=rid,
             tokens=rng.integers(0, cfg.vocab, (1, plen)).astype(np.int32),
-            max_new=args.gen,
-            temperature=args.temperature,
-            top_k=args.top_k,
-            seed=args.seed,
-            on_token=stream_cb if args.stream else None))
+            options=RequestOptions(
+                max_new=args.gen,
+                temperature=args.temperature,
+                top_k=args.top_k,
+                seed=args.seed,
+                slo=slo_cycle[rid % len(slo_cycle)],
+                on_token=stream_cb if args.stream else None)))
     done = batcher.run()
     assert len(done) == args.requests, (len(done), args.requests)
 
@@ -200,6 +222,34 @@ def main(argv=None):
                     help="--paged pool byte budget (0 -> size the pool to "
                          "n_slots+1 full sequences); lets you overcommit "
                          "the pool below the workload's aggregate budget")
+    ap.add_argument("--slo", default="standard",
+                    choices=["premium", "standard", "batch", "mixed"],
+                    help="SLO class tagged on the synthetic requests "
+                         "('mixed' cycles premium/standard/batch).  With "
+                         "--brownout the class picks the request's "
+                         "latency targets and how deep down the precision "
+                         "ladder it may be degraded; plain batchers ignore "
+                         "it")
+    ap.add_argument("--brownout", action="store_true",
+                    help="serve through the AdaptiveServer: SLO-routed "
+                         "multi-precision lanes (kv 16/8/4 rungs, then the "
+                         "--draft-precision weight variant) that degrade "
+                         "NEW admissions under pressure instead of "
+                         "queueing; active slots keep their exact streams. "
+                         "Needs a float --precision primary (the low-bit "
+                         "variants are packed from it at startup)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding: the --draft-precision "
+                         "variant drafts --draft-k tokens per slot, the "
+                         "full-precision weights verify them in ONE "
+                         "windowed decode step; output is bit-identical "
+                         "to fp-greedy (lossless).  Implies the paged "
+                         "cache; needs a float --precision primary")
+    ap.add_argument("--draft-precision", default="2xT",
+                    help="PAPER_CONFIGS precision of the low-bit weight "
+                         "variant (speculative drafts + brownout rung 3)")
+    ap.add_argument("--draft-k", type=int, default=3,
+                    help="draft tokens per speculative round")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (0 -> one per request)")
@@ -229,16 +279,27 @@ def main(argv=None):
     from repro.launch.mesh import parse_mesh
     mesh = parse_mesh(args.mesh)
 
-    if args.paged and args.kv_bits == 0:
+    paged = args.paged or args.brownout or args.speculative
+    if (args.brownout or args.speculative):
+        from repro.core.precision import (A_FLOAT, W_FLOAT, get_precision,
+                                          signed)
+        p = signed(get_precision(args.precision))
+        if p.w_mode != W_FLOAT or p.a_mode != A_FLOAT:
+            raise SystemExit(
+                f"--precision {args.precision}: --brownout/--speculative "
+                "need a float primary — the low-bit lanes and the draft "
+                "variant are packed down from the float weights at startup "
+                "(try --precision fp32)")
+    if paged and args.kv_bits == 0:
         args.kv_bits = 16                  # dense spelling of "unquantized"
-    if not args.paged and args.kv_bits not in (0, 4, 8):
+    if not paged and args.kv_bits not in (0, 4, 8):
         raise SystemExit(
             f"--kv-bits {args.kv_bits}: the dense cache stores int8/int4 "
             "codes (or model dtype with 0); 16 is a --paged storage width")
     # paged serving owns KV quantization in the block pool; the in-model
     # dense-cache quantizer stays off
     cfg = get_config(args.arch, precision=args.precision,
-                     kv_bits=0 if args.paged else args.kv_bits)
+                     kv_bits=0 if paged else args.kv_bits)
     if args.reduced:
         cfg = reduce_for_smoke(cfg)
     model = build_model(cfg)

@@ -41,6 +41,10 @@ class Model:
     # None for stacks the paged cache does not cover (SSM/hybrid, enc-dec).
     prefill_chunk_paged: Callable = None
     decode_step_paged: Callable = None
+    # multi-token decode window with per-slot start positions — the verify
+    # step of self-speculative decoding; (params, tokens (B,W), pool,
+    # page_table, pos (B,), kv_bits) -> (logits (B,W,V), pool)
+    decode_window_paged: Callable = None
 
     def loss(self, params, batch):
         logits, aux = self.forward(params, batch)
@@ -79,6 +83,10 @@ def build_model(cfg: ModelConfig) -> Model:
                 lambda p, tok, pool, pt, pos, kv_bits:
                 transformer.decode_step_paged(p, tok, pool, pt, pos, cfg,
                                               kv_bits)) if pageable else None,
+            decode_window_paged=(
+                lambda p, tok, pool, pt, pos, kv_bits:
+                transformer.decode_window_paged(p, tok, pool, pt, pos, cfg,
+                                                kv_bits)) if pageable else None,
         )
     if cfg.kind == "encdec":
         return Model(

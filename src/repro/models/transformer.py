@@ -246,6 +246,34 @@ def decode_step_paged(params, token, pool, page_table, pos,
     return _logits(params, x, cfg), new_pool
 
 
+def decode_window_paged(params, tokens, pool, page_table, pos,
+                        cfg: ModelConfig, kv_bits: int):
+    """Batched multi-token decode window with PER-SLOT start positions —
+    the verify step of self-speculative decoding (runtime.kvcache).
+
+    tokens: (B, W) — each slot's last accepted token followed by its W-1
+    draft tokens; pos: (B,) per-slot window starts.  Row j of slot i runs at
+    position ``pos[i] + j``: its KV is (re)written into the slot's blocks —
+    overwriting the draft model's approximate KV at the same positions
+    *before* any query in the window attends them (the paged write path
+    appends, then attends, per layer) — and its logits are the exact
+    full-precision next-token distribution given the window prefix.  The
+    scheduler accepts the longest draft prefix matching these logits'
+    greedy tokens, which makes speculative streams bit-identical to the
+    sequential fp-greedy stream.
+
+    Unlike :func:`prefill_chunk_paged` (scalar start, B=1 admission) the
+    position grid differs per batch row; the paged attention path handles
+    the general (B, W) grid natively.  Returns (logits (B, W, V), pool)."""
+    b, w = tokens.shape[0], tokens.shape[1]
+    x = _embed(params, tokens, cfg)
+    positions = (jnp.asarray(pos, jnp.int32).reshape(b, 1)
+                 + jnp.arange(w, dtype=jnp.int32)[None, :])
+    x, new_pool = _paged_scan(params, x, cfg, positions, pool, page_table,
+                              kv_bits)
+    return _logits(params, x, cfg), new_pool
+
+
 def prefill(params, inputs, cfg: ModelConfig, s_max: int):
     """Process a prompt, build the cache, return last-position logits."""
     b, s = inputs.shape[0], inputs.shape[1]

@@ -1,6 +1,18 @@
-"""Fault-tolerance runtime — preemption, stragglers, elastic restarts.
+"""Runtime package: the serving facade plus the fault-tolerance runtime.
 
-Pieces (all host-side; they wrap the pure step functions):
+**Serving facade** (``repro.runtime`` is the stable import surface for
+serving — the submodule layout underneath may move):
+
+  * :class:`ServingConfig` / :class:`RequestOptions` / :class:`Request` —
+    the typed front door (``runtime.serving``).
+  * :class:`ContinuousBatcher` (dense) / :class:`PagedBatcher` (paged,
+    quantized KV) / :class:`AdaptiveServer` (SLO-routed multi-precision
+    lanes with brownout + self-speculative decoding).
+  * :class:`Metrics`, the :mod:`repro.runtime.errors` admission-error
+    hierarchy, and the :mod:`repro.runtime.policy` brownout policy layer.
+
+**Fault-tolerance runtime** (all host-side; they wrap the pure step
+functions):
   * ``PreemptionGuard``  — SIGTERM/SIGINT handler that flips a flag; the
     train loop checkpoints and exits cleanly at the next step boundary
     (standard TPU-pod preemption contract).
@@ -20,6 +32,17 @@ import dataclasses
 import signal
 import time
 from typing import Callable, List, Optional
+
+from .adaptive import AdaptiveServer, ByteLedger  # noqa: F401
+from .errors import (AdmissionError, EmptyPromptError,  # noqa: F401
+                     InvalidBudgetError, PoolFootprintError,
+                     PromptTooLongError, UnknownSLOClassError)
+from .kvcache import PagedBatcher  # noqa: F401
+from .metrics import Metrics  # noqa: F401
+from .policy import (BrownoutController, BrownoutPolicy,  # noqa: F401
+                     SLOClass, default_slo_classes, search_policy)
+from .serving import (ContinuousBatcher, Request,  # noqa: F401
+                      RequestOptions, ServingConfig)
 
 
 class PreemptionGuard:

@@ -55,6 +55,7 @@ pool overcommitted far below the workload's aggregate budget.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from typing import List, Optional, Tuple
@@ -63,8 +64,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.serving import (ContinuousBatcher, Request, _Admission,
-                                   bucket_length)
+from repro.runtime.errors import PoolFootprintError
+from repro.runtime.serving import (ContinuousBatcher, Request, ServingConfig,
+                                   _Admission, _coerce_config, bucket_length)
 
 from .pool import BlockPool
 from .radix import RadixPrefixCache
@@ -115,25 +117,19 @@ class PagedBatcher(ContinuousBatcher):
                      until blocks free up
     """
 
-    def __init__(self, model, params, *, n_slots: int, s_max: int,
-                 kv_bits: int = 16, block_size: int = 16,
-                 num_blocks: Optional[int] = None,
-                 pool_bytes: Optional[int] = None,
-                 prefix_cache: bool = True,
-                 reserve: str = "prompt",
-                 preemption: str = "recompute",
-                 prompt_len: Optional[int] = None,
-                 chunk_size: Optional[int] = None,
-                 autotune: bool = False, metrics=None, mesh=None):
-        if kv_bits not in KV_BITS_CHOICES:
+    def __init__(self, model, params,
+                 config: Optional[ServingConfig] = None, *,
+                 metrics=None, **legacy):
+        config = _coerce_config(config, legacy, type(self).__name__)
+        if config.kv_bits not in KV_BITS_CHOICES:
             raise ValueError(f"kv_bits must be one of {KV_BITS_CHOICES}, "
-                             f"got {kv_bits}")
-        if reserve not in RESERVE_CHOICES:
+                             f"got {config.kv_bits}")
+        if config.reserve not in RESERVE_CHOICES:
             raise ValueError(f"reserve must be one of {RESERVE_CHOICES}, "
-                             f"got {reserve!r}")
-        if preemption not in PREEMPTION_CHOICES:
+                             f"got {config.reserve!r}")
+        if config.preemption not in PREEMPTION_CHOICES:
             raise ValueError(f"preemption must be one of "
-                             f"{PREEMPTION_CHOICES}, got {preemption!r}")
+                             f"{PREEMPTION_CHOICES}, got {config.preemption!r}")
         if model.decode_step_paged is None:
             raise ValueError(
                 f"{model.cfg.name}: the paged KV cache needs an "
@@ -143,13 +139,16 @@ class PagedBatcher(ContinuousBatcher):
             raise ValueError(
                 "paged serving owns KV quantization (kv_bits=...); build the "
                 "model with cfg.kv_bits=0")
-        self.kv_bits = int(kv_bits)
-        self.block_size = int(block_size)
-        self.prefix_cache = bool(prefix_cache)
-        self.reserve = reserve
-        self.preemption = preemption
-        self._num_blocks_arg = num_blocks
-        self._pool_bytes_arg = pool_bytes
+        self.kv_bits = int(config.kv_bits)
+        self.block_size = int(config.block_size)
+        self.prefix_cache = bool(config.prefix_cache)
+        self.reserve = config.reserve
+        self.preemption = config.preemption
+        self._num_blocks_arg = config.num_blocks
+        self._pool_bytes_arg = config.pool_bytes
+        # cross-lane byte budget (runtime.adaptive wires one in; None = the
+        # lane's own pool is the only limit)
+        self._ledger = None
         # generated-suffix blocks are registrable only when decode KV is a
         # per-position function of the token stream: float weights or float
         # activations (quantized-act decode KV sees batch-shaped dynamic act
@@ -159,9 +158,32 @@ class PagedBatcher(ContinuousBatcher):
         pcfg = signed(get_precision(model.cfg.precision))
         self._share_suffix = (pcfg.w_mode == W_FLOAT
                               or pcfg.a_mode == A_FLOAT)
-        super().__init__(model, params, n_slots=n_slots, s_max=s_max,
-                         prompt_len=prompt_len, chunk_size=chunk_size,
-                         autotune=autotune, metrics=metrics, mesh=mesh)
+        # ---- self-speculative decoding (draft with a low-bit weight
+        # variant, verify with the full-precision weights in ONE windowed
+        # decode step; bit-identical to the sequential fp stream) ----------
+        self.spec = bool(config.speculative)
+        self.spec_k = int(config.draft_k)
+        self.draft_precision = config.draft_precision
+        if self.spec:
+            if config.mesh is not None:
+                raise ValueError(
+                    "speculative decoding is single-host for now (the "
+                    "windowed verify step has no sharded dispatch)")
+            if self.spec_k < 1:
+                raise ValueError(f"draft_k must be >= 1, got {self.spec_k}")
+            if model.decode_window_paged is None:
+                raise ValueError(
+                    f"{model.cfg.name}: speculative decoding needs the "
+                    "windowed paged decode path (attention-only token LM)")
+            if pcfg.w_mode != W_FLOAT or pcfg.a_mode != A_FLOAT:
+                raise ValueError(
+                    f"{model.cfg.precision}: self-speculative serving needs "
+                    "a float-weight, float-act primary — float weights are "
+                    "what the draft variant packs down from, and dynamic "
+                    "act quantization is batch/chunk-shaped, which would "
+                    "break the verify window's bit-exactness")
+            get_precision(self.draft_precision)   # unknown name raises here
+        super().__init__(model, params, config, metrics=metrics)
 
     # ------------------------------------------------------------- runtime
     def _build_runtime(self, model, cfg, mesh):
@@ -248,6 +270,53 @@ class PagedBatcher(ContinuousBatcher):
                 in_shardings=(self._psh, rep, pool_sh, rep, rep),
                 out_shardings=(logits_sh, pool_sh))
 
+        if self.spec:
+            self._build_speculative(model, cfg, kv_bits)
+
+    def _build_speculative(self, model, cfg, kv_bits):
+        """Draft-variant wiring: pack the fp weights down to the draft
+        precision, register both variants with the kernel engine (so tuning
+        and introspection see every precision the server can dispatch), and
+        jit the draft decode + windowed fp verify step."""
+        from repro.core.precision import get_precision, signed
+        from repro.kernels import engine
+        from repro.models import build_model, to_serving
+        draft_cfg = dataclasses.replace(cfg, precision=self.draft_precision)
+        self._draft_model = build_model(draft_cfg)
+        self._draft_params = to_serving(self.params, draft_cfg)
+        engine.register_variant(cfg.name, "primary",
+                                signed(get_precision(cfg.precision)),
+                                self.params)
+        engine.register_variant(cfg.name, self.draft_precision,
+                                signed(get_precision(self.draft_precision)),
+                                self._draft_params)
+        if self.config.autotune:
+            # the verify window flattens (n_slots, k+1) rows into the matmul
+            # M axis — pre-tune that bucket plus the draft variant's grid so
+            # the speculative loop never sweeps mid-request
+            extra = (self.n_slots * (self.spec_k + 1),)
+            engine.tune_serving_shapes(
+                cfg, signed(get_precision(cfg.precision)),
+                n_slots=self.n_slots, chunk_size=self.chunk_size,
+                extra_m=extra)
+            engine.tune_serving_shapes(
+                draft_cfg, signed(get_precision(self.draft_precision)),
+                n_slots=self.n_slots, chunk_size=self.chunk_size)
+        draft_model = self._draft_model
+
+        def _draft_fn(p, t, pool, pt, pos_vec):
+            logits, new_pool = draft_model.decode_step_paged(
+                p, t, pool, pt, pos_vec, kv_bits)
+            return jnp.argmax(logits[:, 0], axis=-1), new_pool
+
+        def _verify_fn(p, t, pool, pt, pos_vec):
+            logits, new_pool = model.decode_window_paged(
+                p, t, pool, pt, pos_vec, kv_bits)
+            return logits, jnp.argmax(logits, axis=-1), new_pool
+
+        self._draft_decode = jax.jit(_draft_fn, donate_argnums=(2,))
+        self._verify = jax.jit(_verify_fn, donate_argnums=(2,))
+
     # -------------------------------------------------------------- submit
     def _blocks_needed(self, length: int, max_new: int) -> int:
         """Blocks covering every position the request can ever write.
@@ -264,23 +333,24 @@ class PagedBatcher(ContinuousBatcher):
         n_pos = min(length + max_new - 1, max(length + 1, self.s_max - 1))
         return -(-n_pos // self.block_size)
 
-    def submit(self, req: Request):
-        length = req.tokens.shape[-1] if req.tokens.size else 0
-        if length and req.max_new >= 1:
-            # lifetime capacity check — it applies under BOTH reserve
-            # policies: even with dynamic allocation + preemption, a sole
-            # resident request must eventually hold its whole footprint at
-            # once (recompute re-admission prefills prompt + generated), so
-            # a request needing more blocks than the pool holds could never
-            # finish and would livelock the scheduler
-            need = self._blocks_needed(length, req.max_new)
-            if need > self.num_blocks - 1:
-                raise ValueError(
-                    f"request {req.rid}: needs {need} KV blocks "
-                    f"(prompt {length} + max_new {req.max_new} at "
-                    f"block_size {self.block_size}) but the pool holds only "
-                    f"{self.num_blocks - 1} allocatable blocks")
-        super().submit(req)
+    def _validate(self, req: Request):
+        super()._validate(req)
+        # lifetime capacity check — it applies under BOTH reserve
+        # policies: even with dynamic allocation + preemption, a sole
+        # resident request must eventually hold its whole footprint at
+        # once (recompute re-admission prefills prompt + generated), so
+        # a request needing more blocks than the pool holds could never
+        # finish and would livelock the scheduler
+        length = req.tokens.shape[-1]
+        need = self._blocks_needed(length, req.max_new)
+        if need > self.num_blocks - 1:
+            raise PoolFootprintError(
+                f"request {req.rid}: needs {need} KV blocks "
+                f"(prompt {length} + max_new {req.max_new} at "
+                f"block_size {self.block_size}) but the pool holds only "
+                f"{self.num_blocks - 1} allocatable blocks",
+                rid=req.rid, required_blocks=need,
+                available_blocks=self.num_blocks - 1)
 
     # ----------------------------------------------------------- admission
     def _resume_prompt(self, req: Request) -> np.ndarray:
@@ -397,6 +467,15 @@ class PagedBatcher(ContinuousBatcher):
         just strip-mine the cache on an allocation that cannot succeed."""
         if n <= 0:
             return []
+        if self._ledger is not None and not self._ledger.affords(self, n):
+            # the cross-lane byte budget is exhausted even though this
+            # lane's own pool has room: reclaim freeable radix blocks from
+            # EVERY lane (cheapest bytes first), then re-check.  A refusal
+            # here behaves exactly like pool exhaustion — admission stays
+            # queued, decode falls back to preemption within this lane.
+            self._ledger.reclaim(self, n)
+            if not self._ledger.affords(self, n):
+                return None
         blocks = self.pool_meta.alloc(n)
         if blocks is None and self.radix is not None and len(self.radix):
             # feasibility first: an infeasible allocation (queue head
@@ -553,6 +632,128 @@ class PagedBatcher(ContinuousBatcher):
             self.params, jnp.asarray(self.tokens), self.pool,
             jnp.asarray(self._pt), jnp.asarray(self.pos))
         return logits, np.asarray(greedy_dev, np.int32)
+
+    def _tick(self):
+        if not self.tick:
+            return
+        active = sum(1 for i in range(self.n_slots)
+                     if self.slots[i] is not None and not self.done[i])
+        self.metrics.on_step(
+            len(self.queue) + (1 if self._adm is not None else 0),
+            pool_in_use=self.pool_meta.used_blocks,
+            pool_total=self.num_blocks - 1, active=active)
+
+    # -------------------------------------------- self-speculative decode
+    def _extend_windows(self) -> np.ndarray:
+        """Opportunistically back each active slot's draft window: positions
+        ``pos .. pos + draft_k`` need their blocks resident for the window's
+        KV writes to land (an unbacked position's write deflects to the null
+        block and its verify row is garbage).  Allocation here NEVER
+        preempts — a short window this round just means fewer drafts, not a
+        lost slot.  Returns the per-slot usable draft count (0 = plain
+        decode for that slot: row 0 of the verify window is exactly the
+        sequential decode step)."""
+        limits = np.zeros(self.n_slots, np.int32)
+        for i in range(self.n_slots):
+            req = self.slots[i]
+            if req is None or self.done[i] or self.stalled[i]:
+                continue
+            p = int(self.pos[i])
+            # cap by the sequence budget (decode retires at s_max-1) and by
+            # the request's remaining token budget (drafting past the last
+            # token it can emit is pure waste)
+            lim = min(self.spec_k, self.s_max - 1 - p,
+                      req.max_new - len(req.output) - 1)
+            if lim <= 0:
+                continue
+            b0, b_last = p // self.block_size, (p + lim) // self.block_size
+            for b in range(b0 + 1, min(b_last, self.blocks_per_seq - 1) + 1):
+                if self._pt[i, b] != 0:
+                    continue
+                blk = self._alloc(1)
+                if blk is None:
+                    break
+                self._slot_blocks[i].append(blk[0])
+                self._pt[i, b] = blk[0]
+            bb = b0
+            while bb < b_last and bb + 1 < self.blocks_per_seq \
+                    and self._pt[i, bb + 1] != 0:
+                bb += 1
+            backed_end = (bb + 1) * self.block_size - 1
+            limits[i] = min(lim, backed_end - p)
+        if limits.any():
+            self._gauge()
+        return limits
+
+    def _spec_round(self, limits: np.ndarray):
+        """One draft/verify round replacing the plain batched decode step.
+
+        The draft variant decodes ``k`` tokens per slot sequentially (its
+        approximate KV lands in the SAME pool the fp path uses), then ONE
+        windowed fp decode over (last_token, d_1..d_k) recomputes exact KV
+        at every window position — overwriting the draft's — and yields the
+        exact greedy token after each prefix.  Emission accepts the longest
+        draft prefix the fp greedies confirm, so every emitted token is the
+        token the sequential fp stream would have produced (losslessness);
+        stale KV past the acceptance point is either overwritten before
+        anything attends it (next round's window) or causally masked."""
+        w = self.spec_k + 1
+        base_pos = self.pos.copy()
+        window = np.zeros((self.n_slots, w), np.int32)
+        window[:, 0] = self.tokens[:, 0]
+        toks = self.tokens
+        for j in range(int(limits.max(initial=0))):
+            nxt, self.pool = self._draft_decode(
+                self._draft_params, jnp.asarray(toks), self.pool,
+                jnp.asarray(self._pt), jnp.asarray(base_pos + j))
+            toks = np.asarray(nxt, np.int32).reshape(self.n_slots, 1)
+            window[:, j + 1] = toks[:, 0]
+        logits, greedy, self.pool = self._verify(
+            self.params, jnp.asarray(window), self.pool,
+            jnp.asarray(self._pt), jnp.asarray(base_pos))
+        greedy = np.asarray(greedy, np.int32)
+        self.metrics.decode_steps += 1
+        drafted = accepted = 0
+        for i, req in enumerate(self.slots):
+            if req is None or self.done[i] or self.stalled[i]:
+                continue
+            lim = int(limits[i])
+            drafted += lim
+            j = 0
+            while True:
+                tok = int(greedy[i, j]) if req.temperature <= 0.0 \
+                    else self._sample(req, logits[i, j])
+                self.metrics.decode_slot_tokens += 1
+                self.pos[i] += 1
+                hit_eos = req.eos_id is not None and tok == req.eos_id
+                full = (len(req.output) + 1 >= req.max_new or hit_eos
+                        or self.pos[i] >= self.s_max - 1)
+                self._emit(req, tok, full)
+                if full:
+                    self._finish(req, i)
+                    accepted += j
+                    break
+                if j < lim and int(window[i, j + 1]) == tok:
+                    # the draft predicted this very token: its successor row
+                    # in the window already holds the exact fp continuation
+                    j += 1
+                    continue
+                self.tokens[i, 0] = tok
+                accepted += j
+                break
+        self.metrics.on_spec_round(drafted, accepted)
+
+    def step(self):
+        if not self.spec:
+            return super().step()
+        self._tick()
+        self._advance_admission()
+        if not all(self.done):
+            self._pre_decode()
+        if not all(self.done):
+            self._spec_round(self._extend_windows())
+        finished, self._just_finished = self._just_finished, []
+        return finished
 
     # -------------------------------------------------------------- finish
     def _release_slot(self, req: Request, slot: int):

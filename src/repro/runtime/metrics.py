@@ -12,9 +12,13 @@ only on demand.
 from __future__ import annotations
 
 import time
+from collections import deque
 from typing import Dict, List, Optional
 
 PERCENTILES = (50, 90, 99)
+
+# per-step gauge history kept for the brownout controller (scheduler steps)
+SIGNAL_WINDOW = 64
 
 
 def _pcts(samples: List[float]) -> Dict[str, float]:
@@ -96,6 +100,28 @@ class Metrics:
         self.kv_blocks_in_use = 0
         self.kv_blocks_peak = 0
         self.kv_blocks_total = 0
+        # ---- adaptive serving -------------------------------------------
+        # per-step controller gauges (window-anchored: one sample per
+        # SCHEDULER STEP via on_step, never per admission — see
+        # controller_signals); deques so an idle tail pushes the burst out
+        # of the window and the brownout controller can recover
+        self.scheduler_steps = 0
+        self._step_queue: deque = deque(maxlen=SIGNAL_WINDOW)
+        self._step_util: deque = deque(maxlen=SIGNAL_WINDOW)
+        self._step_active: deque = deque(maxlen=SIGNAL_WINDOW)
+        # per-SLO-class latency samples + attainment targets
+        self.slo_targets: Dict[str, Dict[str, float]] = {}
+        self._slo_ttft: Dict[str, List[float]] = {}
+        self._slo_itl: Dict[str, List[float]] = {}
+        self._slo_finished: Dict[str, int] = {}
+        self._slo_attained: Dict[str, int] = {}
+        self.brownout_level = 0
+        self.brownout_raises = 0
+        self.degraded_admissions = 0
+        # self-speculative decode counters
+        self.spec_verify_steps = 0
+        self.spec_draft_tokens = 0
+        self.spec_accepted_tokens = 0
         self._t0: Optional[float] = None           # first ADMISSION (compute)
         self._t0_submit: Optional[float] = None    # first submit (queue open)
         self._t1: Optional[float] = None
@@ -147,6 +173,7 @@ class Metrics:
     def on_finish(self, req) -> None:
         self.requests_finished += 1
         self.requests_active = max(self.requests_active - 1, 0)
+        self.on_slo_finish(req)
         self._touch()
 
     # ------------------------------------------------------ paged-KV counters
@@ -183,6 +210,97 @@ class Metrics:
         self.kv_blocks_in_use = int(in_use)
         self.kv_blocks_total = int(total)
         self.kv_blocks_peak = max(self.kv_blocks_peak, int(in_use))
+
+    # ------------------------------------------------- adaptive serving
+    def register_slo(self, name: str, ttft_ms: float, itl_ms: float) -> None:
+        """Declare an SLO class's attainment targets (adaptive serving)."""
+        self.slo_targets[name] = {"ttft_ms": float(ttft_ms),
+                                  "itl_ms": float(itl_ms)}
+        self._slo_ttft.setdefault(name, [])
+        self._slo_itl.setdefault(name, [])
+        self._slo_finished.setdefault(name, 0)
+        self._slo_attained.setdefault(name, 0)
+
+    def on_step(self, queue_depth: int, pool_in_use: Optional[int] = None,
+                pool_total: Optional[int] = None, active: int = 0,
+                util: Optional[float] = None) -> None:
+        """One SCHEDULER STEP tick — the controller-signal sample point.
+
+        This is deliberately per-step, not per-admission: an admission-driven
+        gauge freezes at whatever the last admission wave saw, so a burst
+        followed by an idle queue would pin the brownout controller at its
+        burst reading forever (nothing admits, nothing re-samples, the
+        ladder never recovers).  Stepping the scheduler IS the clock.
+
+        ``util`` overrides the utilization sample directly (the adaptive
+        server's byte ledger spans lanes whose blocks cost different byte
+        amounts, so a block-count ratio would be meaningless there)."""
+        self.scheduler_steps += 1
+        self._step_queue.append(int(queue_depth))
+        if pool_in_use is not None and pool_total:
+            self.kv_blocks_in_use = int(pool_in_use)
+            self.kv_blocks_total = int(pool_total)
+            self.kv_blocks_peak = max(self.kv_blocks_peak, int(pool_in_use))
+        if util is None:
+            util = (self.kv_blocks_in_use / self.kv_blocks_total
+                    if self.kv_blocks_total else 0.0)
+        self._step_util.append(float(util))
+        self._step_active.append(int(active))
+
+    def controller_signals(self, tail: int = 32) -> dict:
+        """The brownout controller's per-step view: CURRENT queue depth and
+        pool utilization (latest scheduler-step sample, not an admission-time
+        snapshot) plus windowed means and the recent TTFT/ITL tail
+        percentiles (last ``tail`` samples)."""
+        q_now = self._step_queue[-1] if self._step_queue else 0
+        u_now = self._step_util[-1] if self._step_util else 0.0
+        n = max(len(self._step_queue), 1)
+        slots = max(self.n_slots, 1)
+        return {
+            "queue_depth": q_now,
+            "queue_per_slot": q_now / slots,
+            "queue_depth_mean": sum(self._step_queue) / n,
+            "pool_utilization": u_now,
+            "pool_utilization_mean": sum(self._step_util) / n,
+            "active": self._step_active[-1] if self._step_active else 0,
+            "ttft_p90_ms": _pcts(self.ttft_ms[-tail:])["p90"],
+            "itl_p90_ms": _pcts(self.itl_ms[-tail:])["p90"],
+            "steps": self.scheduler_steps,
+        }
+
+    def on_brownout(self, level: int, degraded_admission: bool = False
+                    ) -> None:
+        """Controller tick outcome: current rung, and whether an admission
+        this tick was routed below full fidelity."""
+        if level > self.brownout_level:
+            self.brownout_raises += 1
+        self.brownout_level = int(level)
+        if degraded_admission:
+            self.degraded_admissions += 1
+
+    def on_spec_round(self, drafted: int, accepted: int) -> None:
+        """One draft/verify round: ``drafted`` tokens proposed across the
+        batch, ``accepted`` tokens emitted from the single verify step."""
+        self.spec_verify_steps += 1
+        self.spec_draft_tokens += int(drafted)
+        self.spec_accepted_tokens += int(accepted)
+
+    def on_slo_finish(self, req) -> None:
+        """Fold a finished request into its SLO class's attainment: TTFT
+        under target AND the request's mean ITL under target."""
+        name = getattr(req, "slo", None)
+        if name not in self.slo_targets:
+            return
+        tgt = self.slo_targets[name]
+        ttft = (req.first_token_at - req.submitted_at) * 1e3
+        n_gap = max(len(req.output) - 1, 0)
+        itl = ((req.last_token_at - req.first_token_at) * 1e3 / n_gap
+               if n_gap else 0.0)
+        self._slo_ttft[name].append(ttft)
+        self._slo_itl[name].append(itl)
+        self._slo_finished[name] += 1
+        if ttft <= tgt["ttft_ms"] and itl <= tgt["itl_ms"]:
+            self._slo_attained[name] += 1
 
     # --------------------------------------------------------------- summary
     @property
@@ -262,7 +380,46 @@ class Metrics:
                 },
                 "evicted_blocks": self.blocks_evicted,
             },
-        }
+        } | self._adaptive_summary()
+
+    def _adaptive_summary(self) -> dict:
+        """The adaptive-serving sections (empty when the features are off,
+        so pre-redesign summary consumers see an unchanged dict)."""
+        out = {}
+        if self.slo_targets:
+            out["slo"] = {
+                name: {
+                    "target": dict(tgt),
+                    "finished": self._slo_finished[name],
+                    "attained": self._slo_attained[name],
+                    "attainment": (self._slo_attained[name]
+                                   / max(self._slo_finished[name], 1)),
+                    "ttft_ms": _pcts(self._slo_ttft[name]),
+                    "itl_ms": _pcts(self._slo_itl[name]),
+                }
+                for name, tgt in self.slo_targets.items()
+            }
+        if self.brownout_level or self.brownout_raises \
+                or self.degraded_admissions:
+            out["brownout"] = {
+                "level": self.brownout_level,
+                "raises": self.brownout_raises,
+                "degraded_admissions": self.degraded_admissions,
+            }
+        if self.spec_verify_steps:
+            out["speculative"] = {
+                "verify_steps": self.spec_verify_steps,
+                "draft_tokens": self.spec_draft_tokens,
+                "accepted_tokens": self.spec_accepted_tokens,
+                # emitted tokens per fp verify dispatch: > 1.0 means the
+                # low-bit drafts bought real batched-decode work
+                "accepted_per_verify": (self.spec_accepted_tokens
+                                        / max(self.spec_verify_steps, 1)),
+                "accept_rate": (self.spec_accepted_tokens
+                                / max(self.spec_draft_tokens
+                                      + self.spec_verify_steps, 1)),
+            }
+        return out
 
     def format(self) -> str:
         s = self.summary()

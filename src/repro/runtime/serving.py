@@ -40,35 +40,171 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .errors import (EmptyPromptError, InvalidBudgetError,
+                     PromptTooLongError)
 from .metrics import Metrics
 
 
+# ---------------------------------------------------------------------------
+# serving front door: typed configs (the API redesign)
+# ---------------------------------------------------------------------------
 @dataclasses.dataclass
-class Request:
-    rid: int
-    tokens: np.ndarray                 # prompt (1, S_prompt)
+class RequestOptions:
+    """Per-request options.  Everything that used to be a loose ``Request``
+    kwarg lives here; the scheduler-filled timing fields stay on the request
+    itself.  ``slo`` names the service tier the adaptive server routes by
+    (ignored by the plain batchers)."""
     max_new: int = 16
     eos_id: Optional[int] = None
     # sampling: temperature <= 0 -> greedy; top_k 0 -> full distribution
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    # service tier for SLO-routed adaptive serving (runtime.adaptive)
+    slo: str = "standard"
     # per-token streaming: called as on_token(req, token, finished)
     on_token: Optional[Callable[["Request", int, bool], None]] = None
-    # filled by the scheduler:
-    submitted_at: float = 0.0
-    started_at: float = 0.0
-    first_token_at: float = 0.0
-    last_token_at: float = 0.0
-    finished_at: float = 0.0
-    output: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    """Typed batcher configuration — one front door for the dense batcher,
+    the paged batcher, and the adaptive server, replacing the old sprawl of
+    constructor kwargs.  ``launch/serve.py`` maps its CLI flags 1:1 onto
+    these fields.
+
+    Paged-only fields (``kv_bits`` .. ``preemption``) are ignored by
+    :class:`ContinuousBatcher`; adaptive-only fields (``slo_classes`` ..
+    ``draft_k``) are read by :class:`repro.runtime.adaptive.AdaptiveServer`
+    and by :class:`repro.runtime.kvcache.PagedBatcher` (speculative
+    decoding)."""
+    # ---- scheduler shape ------------------------------------------------
+    n_slots: int = 8
+    s_max: int = 128
+    prompt_len: Optional[int] = None
+    chunk_size: Optional[int] = None
+    autotune: bool = False
+    mesh: Any = None
+    # ---- paged KV cache (PagedBatcher) ----------------------------------
+    kv_bits: int = 16
+    block_size: int = 16
+    num_blocks: Optional[int] = None
+    pool_bytes: Optional[int] = None
+    prefix_cache: bool = True
+    reserve: str = "prompt"
+    preemption: str = "recompute"
+    # ---- adaptive precision serving (AdaptiveServer / speculative) ------
+    slo_classes: Optional[Dict[str, Any]] = None   # name -> policy.SLOClass
+    brownout: bool = False
+    brownout_policy: Any = None                    # policy.BrownoutPolicy
+    speculative: bool = False
+    draft_precision: Optional[str] = "2xT"         # PAPER_CONFIGS key
+    draft_k: int = 3
+
+
+# legacy constructor kwargs the back-compat shim still accepts (everything
+# the pre-redesign ContinuousBatcher/PagedBatcher signatures took)
+_LEGACY_BATCHER_KWARGS = (
+    "n_slots", "s_max", "prompt_len", "chunk_size", "autotune", "mesh",
+    "kv_bits", "block_size", "num_blocks", "pool_bytes", "prefix_cache",
+    "reserve", "preemption")
+_LEGACY_REQUEST_KWARGS = (
+    "max_new", "eos_id", "temperature", "top_k", "seed", "on_token")
+
+
+def _coerce_config(config, legacy: dict, cls_name: str) -> ServingConfig:
+    """Build the ServingConfig a batcher runs on: the passed config, with
+    any legacy kwargs folded in under a DeprecationWarning (the back-compat
+    shim — new call sites pass a ServingConfig and no kwargs)."""
+    unknown = set(legacy) - set(_LEGACY_BATCHER_KWARGS)
+    if unknown:
+        raise TypeError(f"{cls_name}: unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    if config is not None and not isinstance(config, ServingConfig):
+        raise TypeError(f"{cls_name}: config must be a ServingConfig, got "
+                        f"{type(config).__name__}")
+    if legacy:
+        warnings.warn(
+            f"{cls_name}(n_slots=..., s_max=..., ...) constructor kwargs are "
+            "deprecated; pass a ServingConfig instead: "
+            f"{cls_name}(model, params, ServingConfig(...))",
+            DeprecationWarning, stacklevel=3)
+        config = dataclasses.replace(config or ServingConfig(), **legacy)
+    if config is None:
+        raise TypeError(f"{cls_name}: pass a ServingConfig "
+                        f"({cls_name}(model, params, ServingConfig(...)))")
+    return config
+
+
+class Request:
+    """One generation request: prompt tokens + :class:`RequestOptions`.
+
+    The pre-redesign loose kwargs (``max_new=...``, ``on_token=...``, ...)
+    are still accepted through a deprecation shim and fold into ``options``;
+    the option values are readable both ways (``req.max_new`` delegates to
+    ``req.options.max_new``).  Scheduler-filled timing fields live directly
+    on the request."""
+
+    def __init__(self, rid: int, tokens: np.ndarray,
+                 options: Optional[RequestOptions] = None, **legacy):
+        unknown = set(legacy) - set(_LEGACY_REQUEST_KWARGS)
+        if unknown:
+            raise TypeError(f"Request: unexpected keyword arguments "
+                            f"{sorted(unknown)}")
+        if legacy:
+            warnings.warn(
+                "Request(max_new=..., eos_id=..., ...) kwargs are "
+                "deprecated; pass options=RequestOptions(...)",
+                DeprecationWarning, stacklevel=2)
+            options = dataclasses.replace(options or RequestOptions(),
+                                          **legacy)
+        self.rid = rid
+        self.tokens = tokens               # prompt (1, S_prompt)
+        self.options = options if options is not None else RequestOptions()
+        # filled by the scheduler:
+        self.submitted_at = 0.0
+        self.started_at = 0.0
+        self.first_token_at = 0.0
+        self.last_token_at = 0.0
+        self.finished_at = 0.0
+        self.output: List[int] = []
+
+    # option views (read-only: mutate req.options, not the request)
+    @property
+    def max_new(self) -> int:
+        return self.options.max_new
+
+    @property
+    def eos_id(self) -> Optional[int]:
+        return self.options.eos_id
+
+    @property
+    def temperature(self) -> float:
+        return self.options.temperature
+
+    @property
+    def top_k(self) -> int:
+        return self.options.top_k
+
+    @property
+    def seed(self) -> int:
+        return self.options.seed
+
+    @property
+    def slo(self) -> str:
+        return self.options.slo
+
+    @property
+    def on_token(self):
+        return self.options.on_token
 
     @property
     def queue_ms(self):
@@ -81,6 +217,11 @@ class Request:
     @property
     def total_ms(self):
         return (self.finished_at - self.submitted_at) * 1e3
+
+    def __repr__(self):
+        return (f"Request(rid={self.rid}, "
+                f"prompt={self.tokens.shape[-1] if self.tokens.size else 0}, "
+                f"slo={self.options.slo!r}, out={len(self.output)})")
 
 
 @dataclasses.dataclass
@@ -112,17 +253,19 @@ class ContinuousBatcher:
     """Slot-based continuous batching: chunked (or whole-prompt) prefill
     interleaved with batched decode."""
 
-    def __init__(self, model, params, *, n_slots: int, s_max: int,
-                 prompt_len: Optional[int] = None,
-                 chunk_size: Optional[int] = None,
-                 autotune: bool = False, metrics: Optional[Metrics] = None,
-                 mesh=None):
+    def __init__(self, model, params, config: Optional[ServingConfig] = None,
+                 *, metrics: Optional[Metrics] = None, **legacy):
+        config = _coerce_config(config, legacy, type(self).__name__)
+        self.config = config
         self.model = model
         self.params = params
-        self.n_slots = n_slots
-        self.s_max = s_max
-        self.prompt_len = prompt_len or s_max
-        self.mesh = mesh
+        self.n_slots = config.n_slots
+        self.s_max = config.s_max
+        self.prompt_len = config.prompt_len or config.s_max
+        self.mesh = mesh = config.mesh
+        n_slots, s_max = self.n_slots, self.s_max
+        prompt_len, chunk_size = config.prompt_len, config.chunk_size
+        autotune = config.autotune
         cfg = model.cfg
         if mesh is not None:
             from repro.parallel import sharding as shd
@@ -161,6 +304,9 @@ class ContinuousBatcher:
                 mesh=mesh)
 
         self.metrics = metrics if metrics is not None else Metrics(n_slots)
+        # per-step controller-signal sampling (the adaptive server turns
+        # this off per lane and emits one consolidated tick itself)
+        self.tick = True
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)
@@ -302,31 +448,42 @@ class ContinuousBatcher:
         pcfg = signed(get_precision(cfg.precision))
         return pcfg.w_mode == W_FLOAT or pcfg.a_mode == A_FLOAT
 
-    def submit(self, req: Request):
+    def _validate(self, req: Request):
+        """Admission validation; raises a typed AdmissionError subclass
+        (each still a ValueError for pre-redesign except-clauses)."""
         if req.tokens.size == 0 or req.tokens.shape[-1] < 1:
             # bucket_length(0, chunk) == 0 would produce a zero-length
             # admission (no chunks, no first token) — reject up front
-            raise ValueError(
+            raise EmptyPromptError(
                 f"request {req.rid}: empty prompt (0 tokens); prompts must "
-                "contain at least one token")
+                "contain at least one token", rid=req.rid)
         if req.max_new < 1:
             # max_new=0 used to fall through the `max_new <= 1` finish check
             # in _activate and still emit one token — reject instead of
             # silently producing output against a zero budget
-            raise ValueError(
+            raise InvalidBudgetError(
                 f"request {req.rid}: max_new={req.max_new} must be >= 1 "
                 "(the first token is sampled from the prefill logits, so "
-                "every admitted request emits at least one token)")
+                "every admitted request emits at least one token)",
+                rid=req.rid, max_new=req.max_new)
         length = req.tokens.shape[-1]
         if length >= self.s_max:
-            raise ValueError(
+            raise PromptTooLongError(
                 f"request {req.rid}: prompt length {length} needs s_max > "
                 f"{length} (got {self.s_max}); the cache budget admits "
                 f"prompts up to {self.s_max - 1} tokens, so this prompt is "
                 f"{length - (self.s_max - 1)} tokens over the remaining "
-                "budget")
-        req.submitted_at = time.time()
-        self.metrics.on_submit(req)
+                "budget", rid=req.rid, length=length, s_max=self.s_max)
+
+    def submit(self, req: Request):
+        self._validate(req)
+        if req.submitted_at == 0.0:
+            # idempotent on re-submission: the adaptive server stamps and
+            # counts the request when it enters the CENTRAL queue, and this
+            # routing hop into a lane must not re-count it (queue_ms spans
+            # the whole wait, not just the post-routing tail)
+            req.submitted_at = time.time()
+            self.metrics.on_submit(req)
         self.queue.append(req)
 
     # ---------------------------------------------------------- token stream
@@ -480,10 +637,25 @@ class ContinuousBatcher:
         slots (preemption re-queues them), so the caller re-checks
         ``done``."""
 
+    def _tick(self):
+        """Per-scheduler-step controller-signal sample (queue depth, pool
+        utilization).  Runs every step — never only on admission — so the
+        brownout controller's window keeps moving while the queue idles.
+        The adaptive server disables per-lane ticks (``tick = False``) and
+        emits one consolidated sample itself."""
+        if not self.tick:
+            return
+        active = sum(1 for i in range(self.n_slots)
+                     if self.slots[i] is not None and not self.done[i])
+        self.metrics.on_step(
+            len(self.queue) + (1 if self._adm is not None else 0),
+            active=active)
+
     def step(self):
         """One scheduler iteration: a prefill chunk (if a request is being
         admitted) plus one decode step for every active slot.  Returns the
         requests finished this step."""
+        self._tick()
         if self.chunk_size:
             self._advance_admission()
         else:

@@ -1,0 +1,380 @@
+"""Adaptive precision serving: policy layer, controller-signal sampling,
+self-speculative losslessness, and brownout isolation.
+
+Golden contracts pinned here (ISSUE 6):
+  * **Self-speculative greedy is lossless** — a speculative PagedBatcher's
+    streams are bit-identical to the sequential fp-greedy oracle (and to the
+    non-speculative paged batcher) for every draft precision: the draft
+    variant only *proposes*, the single windowed fp verify step *decides*.
+  * **Brownout never touches active slots** — raising the precision ladder
+    mid-stream changes only where NEW admissions land; an already-active
+    request's token stream is byte-for-byte the same as in an unloaded run.
+  * **Controller signals are window-anchored per-step gauges** — sampled at
+    every scheduler step, never per admission, so a burst followed by idle
+    steps decays out of the controller's window (the bug this replaces:
+    admission-driven gauges froze at the last burst reading forever).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model, reduce_for_smoke
+from repro.runtime.adaptive import AdaptiveServer, ByteLedger
+from repro.runtime.errors import UnknownSLOClassError
+from repro.runtime.kvcache import PagedBatcher
+from repro.runtime.metrics import SIGNAL_WINDOW, Metrics
+from repro.runtime.policy import (BrownoutController, BrownoutPolicy,
+                                  SLOClass, bursty_trace,
+                                  default_slo_classes, search_policy,
+                                  simulate_policy)
+from repro.runtime.serving import Request, RequestOptions, ServingConfig
+
+S_MAX = 24
+CHUNK = 4
+BLOCK = 4
+
+_STATE = {}
+
+
+def _setup():
+    if not _STATE:
+        cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                                  dtype="float32")
+        model = build_model(cfg)
+        _STATE.update(cfg=cfg, model=model,
+                      params=model.init(jax.random.PRNGKey(0)), memo={})
+    return _STATE["cfg"], _STATE["model"], _STATE["params"]
+
+
+def _prompt(length, salt, vocab):
+    rng = np.random.default_rng(1009 * length + salt)
+    return rng.integers(0, vocab, (1, length)).astype(np.int32)
+
+
+def _oracle(prompt, max_new):
+    """Sequential single-request fp-greedy stream (memoized)."""
+    cfg, model, params = _setup()
+    key = (prompt.tobytes(), prompt.shape[1], max_new)
+    if key not in _STATE["memo"]:
+        batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+        logits, cache = model.prefill(params, batch, S_MAX)
+        tok = int(jnp.argmax(logits[0, -1]))
+        out, pos = [tok], prompt.shape[1]
+        for _ in range(max_new - 1):
+            logits, cache = model.decode_step(
+                params, jnp.asarray([[tok]], jnp.int32), cache,
+                jnp.int32(pos))
+            tok = int(jnp.argmax(logits[0, 0]))
+            out.append(tok)
+            pos += 1
+        _STATE["memo"][key] = out
+    return _STATE["memo"][key]
+
+
+# ---------------------------------------------------------------------------
+# policy layer (pure host-side, no jax)
+# ---------------------------------------------------------------------------
+def test_controller_raises_immediately_lowers_with_hysteresis():
+    ctl = BrownoutController(BrownoutPolicy(cool_steps=3, max_level=3))
+    hot = {"pool_utilization": 0.99, "queue_per_slot": 0.0}
+    calm = {"pool_utilization": 0.0, "queue_per_slot": 0.0}
+    mid = {"pool_utilization": 0.7, "queue_per_slot": 1.0}   # neither
+    assert ctl.observe(hot) == 1          # pressure raises one rung per tick
+    assert ctl.observe(hot) == 2
+    assert ctl.observe(calm) == 2         # calm tick 1 of 3: holds
+    assert ctl.observe(calm) == 2
+    assert ctl.observe(calm) == 1         # 3 consecutive calm: one rung down
+    assert ctl.observe(mid) == 1          # neither hot nor calm: holds,
+    assert ctl.observe(calm) == 1         # and resets the calm streak
+    assert ctl.observe(calm) == 1
+    assert ctl.observe(calm) == 0
+    assert ctl.raises == 2 and ctl.lowers == 2
+
+
+def test_controller_clamps_at_max_level_and_class_cap():
+    ctl = BrownoutController(BrownoutPolicy(max_level=2))
+    hot = {"pool_utilization": 1.0, "queue_per_slot": 9.0}
+    for _ in range(5):
+        ctl.observe(hot)
+    assert ctl.level == 2
+    classes = default_slo_classes()
+    assert ctl.route_level(classes["premium"]) == 0
+    assert ctl.route_level(classes["standard"]) == 2
+    assert ctl.route_level(SLOClass("x", 1, 1, max_brownout=1)) == 1
+
+
+def test_policy_search_is_deterministic_and_not_worse():
+    trace = bursty_trace()
+    seed = BrownoutPolicy()
+    base = simulate_policy(seed, trace)
+    p1, out1 = search_policy(trace, iters=16)
+    p2, out2 = search_policy(trace, iters=16)
+    assert (p1, out1) == (p2, out2)              # no RNG anywhere
+    assert out1["score"] >= base["score"]        # hillclimb never regresses
+    # the searched policy stays valid
+    assert p1.pool_low < p1.pool_high and p1.queue_low < p1.queue_high
+
+
+def test_simulated_brownout_beats_pinned_fp_on_burst():
+    """On the bursty trace, a controller allowed to degrade completes at
+    least as much work as one pinned at rung 0 — the brownout thesis in
+    simulator form (the jax-level version is benchmarks/bench_adaptive)."""
+    trace = bursty_trace(n_steps=96, burst_every=16, burst=10)
+    free = simulate_policy(BrownoutPolicy(), trace)
+    pinned = simulate_policy(BrownoutPolicy(max_level=0), trace)
+    assert free["completed"] >= pinned["completed"]
+    assert free["left_queued"] <= pinned["left_queued"]
+    assert free["max_level"] > 0                 # it actually browned out
+
+
+# ---------------------------------------------------------------------------
+# controller signals: per-step window-anchored gauges (the bugfix)
+# ---------------------------------------------------------------------------
+def test_signals_sampled_per_step_not_per_admission():
+    """A burst seen only at admission time must NOT pin the gauges: idle
+    scheduler steps keep sampling, pushing the burst out of the window."""
+    m = Metrics(n_slots=4)
+    for _ in range(4):                    # burst: deep queue, hot pool
+        m.on_step(12, pool_in_use=9, pool_total=10)
+    sig = m.controller_signals()
+    assert sig["queue_depth"] == 12 and sig["pool_utilization"] == 0.9
+    for _ in range(SIGNAL_WINDOW):        # idle tail: queue drained
+        m.on_step(0, pool_in_use=0, pool_total=10)
+    sig = m.controller_signals()
+    assert sig["queue_depth"] == 0        # gauge = CURRENT step, not burst
+    assert sig["pool_utilization"] == 0.0
+    assert sig["queue_depth_mean"] == 0.0  # burst aged out of the window
+    assert m.scheduler_steps == 4 + SIGNAL_WINDOW
+
+
+def test_batcher_ticks_every_step_on_bursty_trace():
+    """Integration regression: drive a paged batcher with a bursty arrival
+    trace; the scheduler's own stepping must keep the signal window moving
+    (scheduler_steps == steps driven) and the queue gauge must read 0 once
+    the burst drained — even though no admission happened since."""
+    cfg, model, params = _setup()
+    b = PagedBatcher(model, params, ServingConfig(
+        n_slots=2, s_max=S_MAX, chunk_size=CHUNK, block_size=BLOCK,
+        num_blocks=1 + 12))
+    for i in range(4):                    # burst arrives at step 0
+        b.submit(Request(rid=i, tokens=_prompt(4 + i % 3, i, cfg.vocab),
+                         options=RequestOptions(max_new=4)))
+    steps = 0
+    while not b.idle:
+        b.step()
+        steps += 1
+    for _ in range(8):                    # idle tail still ticks
+        b.step()
+        steps += 1
+    assert b.metrics.scheduler_steps == steps
+    sig = b.metrics.controller_signals()
+    assert sig["queue_depth"] == 0 and sig["active"] == 0
+    assert max(b.metrics._step_queue) >= 1   # the burst WAS observed
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decoding: lossless for every draft precision
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("draft", ["8x8", "8xT", "2xT", "1x1"])
+def test_selfspec_bit_identical_to_sequential_fp(draft):
+    """Draft/verify pairs across the paper's precision table: whatever the
+    draft variant proposes, the windowed fp verify emits exactly the
+    sequential fp-greedy stream.  Also pins speculative == non-speculative
+    paged scheduling (same pool discipline, same streams)."""
+    cfg, model, params = _setup()
+    sc = ServingConfig(n_slots=3, s_max=S_MAX, chunk_size=CHUNK,
+                       block_size=BLOCK, speculative=True,
+                       draft_precision=draft, draft_k=3)
+    spec = PagedBatcher(model, params, sc)
+    plain = PagedBatcher(model, params, dataclasses.replace(
+        sc, speculative=False))
+    prompts = [_prompt(3 + i * 2, 17 + i, cfg.vocab) for i in range(4)]
+    budgets = [9, 6, 12, 4]
+    outs = {}
+    for b in (spec, plain):
+        for i, p in enumerate(prompts):
+            b.submit(Request(rid=i, tokens=p,
+                             options=RequestOptions(max_new=budgets[i])))
+        outs[b is spec] = {r.rid: r.output for r in b.run()}
+        b.check_pool()
+    want = {i: _oracle(p, budgets[i]) for i, p in enumerate(prompts)}
+    assert outs[True] == want, f"speculative ({draft}) diverged from fp"
+    assert outs[False] == want
+    s = spec.metrics.summary()["speculative"]
+    assert s["verify_steps"] > 0
+    assert s["draft_tokens"] >= s["accepted_tokens"] >= 0
+
+
+def test_selfspec_rejects_quantized_primary():
+    cfg, _, _ = _setup()
+    qcfg = dataclasses.replace(cfg, precision="8x8")
+    qmodel = build_model(qcfg)
+    qparams = qmodel.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="float-weight, float-act"):
+        PagedBatcher(qmodel, qparams, ServingConfig(
+            n_slots=2, s_max=S_MAX, chunk_size=CHUNK, block_size=BLOCK,
+            speculative=True))
+
+
+def test_selfspec_survives_tiny_pool_preemption():
+    """Speculation composes with dynamic allocation: an overcommitted pool
+    preempts mid-flight, windows shrink to whatever backing remains — and
+    the streams still match the fp oracle exactly."""
+    cfg, model, params = _setup()
+    b = PagedBatcher(model, params, ServingConfig(
+        n_slots=2, s_max=S_MAX, chunk_size=CHUNK, block_size=BLOCK,
+        num_blocks=1 + 6, speculative=True, draft_precision="8x8",
+        draft_k=3))
+    prompts = [_prompt(5, 3, cfg.vocab), _prompt(7, 4, cfg.vocab),
+               _prompt(4, 5, cfg.vocab)]
+    budgets = [10, 8, 10]
+    for i, p in enumerate(prompts):
+        b.submit(Request(rid=i, tokens=p,
+                         options=RequestOptions(max_new=budgets[i])))
+    done, steps = [], 0
+    while not b.idle:
+        done.extend(b.step())
+        b.check_pool()
+        steps += 1
+        assert steps < 2000
+    got = {r.rid: r.output for r in done}
+    assert got == {i: _oracle(p, budgets[i])
+                   for i, p in enumerate(prompts)}
+
+
+# ---------------------------------------------------------------------------
+# adaptive server: routing, brownout isolation, ledger
+# ---------------------------------------------------------------------------
+def _classes_no_spec():
+    return {
+        "premium": SLOClass("premium", 500.0, 100.0, max_brownout=0),
+        "standard": SLOClass("standard", 2000.0, 250.0, max_brownout=2),
+        "batch": SLOClass("batch", 10000.0, 1000.0, max_brownout=2),
+    }
+
+
+def _server(pool_blocks=None, pool_bytes=None, policy=None, spec=False):
+    cfg, model, params = _setup()
+    return AdaptiveServer(model, params, ServingConfig(
+        n_slots=2, s_max=S_MAX, chunk_size=CHUNK, block_size=BLOCK,
+        num_blocks=None if pool_blocks is None else 1 + pool_blocks,
+        pool_bytes=pool_bytes, brownout=True,
+        slo_classes=_classes_no_spec(),
+        brownout_policy=policy or BrownoutPolicy(
+            queue_high=1.0, queue_low=0.25, cool_steps=4, max_level=2),
+        speculative=spec, draft_precision="8x8"))
+
+
+def test_unknown_slo_class_error_fields():
+    srv = _server(pool_blocks=12)
+    cfg = _STATE["cfg"]
+    with pytest.raises(UnknownSLOClassError) as ei:
+        srv.submit(Request(rid=7, tokens=_prompt(4, 0, cfg.vocab),
+                           options=RequestOptions(slo="platinum")))
+    assert ei.value.rid == 7
+    assert ei.value.slo == "platinum"
+    assert ei.value.classes == ("batch", "premium", "standard")
+
+
+def test_brownout_routes_overflow_down_and_completes():
+    """A spike against a 2-slot server must raise the ladder and route
+    standard/batch admissions to cheaper rungs while premium stays at
+    rung 0 — and everything still completes."""
+    srv = _server(pool_blocks=12)
+    cfg = _STATE["cfg"]
+    rids_by_slo = {"premium": [], "standard": [], "batch": []}
+    for i in range(9):
+        slo = ["premium", "standard", "batch"][i % 3]
+        rids_by_slo[slo].append(i)
+        srv.submit(Request(rid=i, tokens=_prompt(3 + i % 4, i, cfg.vocab),
+                           options=RequestOptions(max_new=6, slo=slo)))
+    done = srv.run()
+    assert sorted(r.rid for r in done) == list(range(9))
+    rungs = {r.rid: r.routed_rung for r in done}
+    assert all(rungs[i] == 0 for i in rids_by_slo["premium"])
+    assert any(rungs[i] > 0 for i in
+               rids_by_slo["standard"] + rids_by_slo["batch"]), \
+        "spike never browned out"
+    assert srv.metrics.degraded_admissions > 0
+    assert srv.metrics.brownout_raises > 0
+    srv.check_pool()
+
+
+def test_brownout_never_changes_active_streams():
+    """GOLDEN: a mid-stream brownout may reroute new admissions but must
+    not perturb tokens of already-active slots — their outputs are
+    byte-identical to an unloaded (no-spike) run of the same requests."""
+    cfg, _, _ = _setup()
+    prem = [(_prompt(5, 100 + i, cfg.vocab), 12) for i in range(2)]
+
+    # unloaded run: premium only
+    srv0 = _server(pool_blocks=14)
+    for i, (p, gen) in enumerate(prem):
+        srv0.submit(Request(rid=i, tokens=p,
+                            options=RequestOptions(max_new=gen,
+                                                   slo="premium")))
+    base = {r.rid: r.output for r in srv0.run()}
+    assert base == {i: _oracle(p, gen) for i, (p, gen) in enumerate(prem)}
+
+    # loaded run: same premium requests, then a mid-stream spike
+    srv1 = _server(pool_blocks=14)
+    reqs = [Request(rid=i, tokens=p,
+                    options=RequestOptions(max_new=gen, slo="premium"))
+            for i, (p, gen) in enumerate(prem)]
+    for r in reqs:
+        srv1.submit(r)
+    for _ in range(4):                       # premium slots go active
+        srv1.step()
+    assert any(len(r.output) for r in reqs), "not active yet"
+    for j in range(8):                       # the spike arrives mid-stream
+        srv1.submit(Request(
+            rid=100 + j, tokens=_prompt(3 + j % 3, 200 + j, cfg.vocab),
+            options=RequestOptions(max_new=4, slo="batch")))
+    done = srv1.run()
+    assert srv1.controller.raises > 0, "spike never raised the ladder"
+    got = {r.rid: r.output for r in done if r.rid < 100}
+    assert got == base, "brownout perturbed an active premium stream"
+
+
+def test_byte_ledger_enforces_shared_budget():
+    """Lanes sharing a byte budget: the ledger's bound holds after every
+    step (kv16 blocks cost ~4x kv4 blocks — block counts alone cannot
+    express the budget), and the workload still drains."""
+    cfg, model, params = _setup()
+    from repro.runtime.kvcache import paged_block_bytes
+    b16 = paged_block_bytes(cfg, BLOCK, 16)
+    srv = _server(pool_bytes=10 * b16)
+    assert isinstance(srv.ledger, ByteLedger)
+    assert srv.ledger.block_bytes(srv.lanes[0]) > \
+        srv.ledger.block_bytes(srv.lanes[2])
+    for i in range(6):
+        slo = ["premium", "standard", "batch"][i % 3]
+        srv.submit(Request(rid=i, tokens=_prompt(3 + i % 3, 50 + i, cfg.vocab),
+                           options=RequestOptions(max_new=5, slo=slo)))
+    done, steps = [], 0
+    while not srv.idle:
+        done.extend(srv.step())
+        srv.check_pool()                 # asserts the budget bound
+        steps += 1
+        assert steps < 3000
+    assert sorted(r.rid for r in done) == list(range(6))
+
+
+def test_slo_attainment_reported_per_class():
+    srv = _server(pool_blocks=12)
+    cfg = _STATE["cfg"]
+    for i, slo in enumerate(["premium", "batch"]):
+        srv.submit(Request(rid=i, tokens=_prompt(4, 60 + i, cfg.vocab),
+                           options=RequestOptions(max_new=3, slo=slo)))
+    srv.run()
+    s = srv.summary()["slo"]
+    assert set(s) == {"premium", "standard", "batch"}
+    assert s["premium"]["finished"] == 1 and s["batch"]["finished"] == 1
+    assert s["standard"]["finished"] == 0
+    for cls in s.values():
+        assert 0.0 <= cls["attainment"] <= 1.0

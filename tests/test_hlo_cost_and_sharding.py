@@ -269,7 +269,7 @@ import dataclasses
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke
-from repro.runtime.serving import ContinuousBatcher
+from repro.runtime.serving import ContinuousBatcher, ServingConfig
 from repro.launch.mesh import make_mesh
 
 cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
@@ -277,8 +277,8 @@ cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 for spec in [(8, 1), (2, 4)]:
-    b = ContinuousBatcher(model, params, n_slots=8, s_max=24, chunk_size=4,
-                          mesh=make_mesh(*spec))
+    b = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=8, s_max=24, chunk_size=4, mesh=make_mesh(*spec)))
     txt = b._decode.lower(b.params, jnp.asarray(b.tokens), b.cache,
                           jnp.asarray(b.pos)).compile().as_text()
     for coll in ("all-gather", "all-reduce", "all-to-all",

@@ -16,7 +16,8 @@ from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke
 from repro.runtime.kvcache import (BlockPool, PagedBatcher, RadixPrefixCache,
                                    paged_block_bytes, paged_capacity_blocks)
-from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig)
 
 S_MAX = 24
 _STATE = {}
@@ -43,7 +44,8 @@ def _prompt(length, salt, vocab):
 
 def _run(batcher, prompts, max_new=5, eos=None):
     for i, p in enumerate(prompts):
-        batcher.submit(Request(rid=i, tokens=p, max_new=max_new, eos_id=eos))
+        batcher.submit(Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=max_new, eos_id=eos)))
     done = batcher.run()
     assert sorted(r.rid for r in done) == list(range(len(prompts)))
     return {r.rid: r.output for r in done}
@@ -56,8 +58,8 @@ def _dense_memo(kv_bits, prompts, max_new, n_slots, chunk):
     memo = _STATE["memo"]
     if key not in memo:
         cfg, model, params = _setup(kv_bits)
-        b = ContinuousBatcher(model, params, n_slots=n_slots, s_max=S_MAX,
-                              chunk_size=chunk)
+        b = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=chunk))
         memo[key] = _run(b, prompts, max_new=max_new)
     return memo[key]
 
@@ -171,11 +173,11 @@ def test_quantized_blocks_at_least_double_capacity():
 def test_pool_bytes_constructor_sizes_the_pool():
     cfg, model, params = _setup()
     budget = 64 * paged_block_bytes(cfg, 8, 16)
-    b = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                     kv_bits=16, block_size=8, pool_bytes=budget)
+    b = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=8, pool_bytes=budget))
     assert b.num_blocks == 64
-    b8 = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                      kv_bits=8, block_size=8, pool_bytes=budget)
+    b8 = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=8, block_size=8, pool_bytes=budget))
     assert b8.num_blocks - 1 >= 2 * (b.num_blocks - 1)
 
 
@@ -195,8 +197,8 @@ def test_property_paged16_bit_identical_to_dense(lengths, max_new, chunk,
     cfg, model, params = _setup()
     prompts = [_prompt(ln, i, cfg.vocab) for i, ln in enumerate(lengths)]
     want = _dense_memo(0, prompts, max_new, n_slots, chunk)
-    paged = PagedBatcher(model, params, n_slots=n_slots, s_max=S_MAX,
-                         chunk_size=chunk, kv_bits=16, block_size=block_size)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=chunk, kv_bits=16, block_size=block_size))
     got = _run(paged, prompts, max_new=max_new)
     assert got == want, (lengths, max_new, chunk, block_size, n_slots)
     # every slot drained, all blocks released (radix may keep cached refs)
@@ -211,8 +213,8 @@ def test_paged_quantized_matches_dense_quantized(kv_bits, block_size):
     cfg, model, params = _setup()
     prompts = [_prompt(5 + i, i, cfg.vocab) for i in range(4)]
     want = _dense_memo(kv_bits, prompts, 5, 2, 4)
-    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                         kv_bits=kv_bits, block_size=block_size)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=kv_bits, block_size=block_size))
     got = _run(paged, prompts, max_new=5)
     assert got == want
 
@@ -224,12 +226,13 @@ def test_prefix_hits_never_change_outputs():
     prompts = [_prompt(9 + i, i, cfg.vocab) for i in range(3)]
     want = _dense_memo(0, prompts, 5, 2, 4)
 
-    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=4)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4))
     first = _run(paged, prompts, max_new=5)
     chunks_cold = paged.metrics.prefill_chunks
     for i, p in enumerate(prompts):
-        paged.submit(Request(rid=i, tokens=p, max_new=5))
+        paged.submit(Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=5)))
     second = {r.rid: r.output for r in paged.run()}
     chunks_warm = paged.metrics.prefill_chunks - chunks_cold
     assert first == second == want
@@ -237,8 +240,8 @@ def test_prefix_hits_never_change_outputs():
     assert paged.metrics.prefix_hits == 3
     assert chunks_warm < chunks_cold            # prefill actually skipped
 
-    off = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                       kv_bits=16, block_size=4, prefix_cache=False)
+    off = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4, prefix_cache=False))
     assert _run(off, prompts, max_new=5) == want
     assert off.metrics.prefix_lookups == 0
 
@@ -250,14 +253,16 @@ def test_generated_suffix_shared_with_followup_turns():
     bit-identical to a cold dense run of the same turn-2 prompt."""
     cfg, model, params = _setup()
     p = _prompt(8, 3, cfg.vocab)
-    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=4)
-    r0 = Request(rid=0, tokens=p, max_new=8)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4))
+    r0 = Request(rid=0, tokens=p,
+        options=RequestOptions(max_new=8))
     paged.submit(r0)
     paged.run()
     turn2 = np.concatenate([p, np.asarray(r0.output, np.int32)[None]], axis=1)
     want = _dense_memo(0, [turn2], 4, 1, 4)
-    r1 = Request(rid=1, tokens=turn2, max_new=4)
+    r1 = Request(rid=1, tokens=turn2,
+        options=RequestOptions(max_new=4))
     paged.submit(r1)
     paged.run()
     assert r1.output == want[0]
@@ -273,8 +278,8 @@ def test_quantized_act_configs_register_prompt_blocks_only():
                               dtype="float32", precision="2xT")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    paged = PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=4)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4))
     assert not paged._share_suffix
     _run(paged, [_prompt(8, 9, cfg.vocab)], max_new=8)
     # 8-token prompt -> 2 full prompt blocks; the 7 decode-written
@@ -282,8 +287,8 @@ def test_quantized_act_configs_register_prompt_blocks_only():
     assert len(paged.radix) == 2
 
     _, model0, params0 = _setup()
-    fp = PagedBatcher(model0, params0, n_slots=1, s_max=S_MAX, chunk_size=4,
-                      kv_bits=16, block_size=4)
+    fp = PagedBatcher(model0, params0,
+        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4))
     assert fp._share_suffix
 
 
@@ -293,13 +298,15 @@ def test_prefix_sharing_between_concurrent_requests():
     cfg, model, params = _setup()
     p = _prompt(8, 3, cfg.vocab)
     want = _dense_memo(0, [p, p], 8, 2, 4)
-    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=4)
-    r0 = Request(rid=0, tokens=p, max_new=8)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4))
+    r0 = Request(rid=0, tokens=p,
+        options=RequestOptions(max_new=8))
     paged.submit(r0)
     while not r0.output:                        # r0 active, still decoding
         paged.step()
-    r1 = Request(rid=1, tokens=p, max_new=8)
+    r1 = Request(rid=1, tokens=p,
+        options=RequestOptions(max_new=8))
     paged.submit(r1)
     done = {r0.rid: r0, r1.rid: r1}
     paged.run()
@@ -315,9 +322,8 @@ def test_eviction_under_pool_pressure_keeps_streams_exact():
     prompts = [_prompt(7 + i, 20 + i, cfg.vocab) for i in range(5)]
     want = _dense_memo(0, prompts, 4, 1, 4)
     blocks_per_seq = -(-S_MAX // 4)
-    paged = PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=4,
-                         num_blocks=1 + blocks_per_seq + 2)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4, num_blocks=1 + blocks_per_seq + 2))
     got = _run(paged, prompts, max_new=4)
     assert got == want
     assert paged.metrics.blocks_evicted > 0
@@ -334,9 +340,8 @@ def test_pool_exhaustion_queues_instead_of_deadlocking():
     blocks_per_seq = -(-S_MAX // 8)
     prompts = [_prompt(6, 40 + i, cfg.vocab) for i in range(3)]
 
-    budget = PagedBatcher(model, params, n_slots=4, s_max=S_MAX, chunk_size=4,
-                          kv_bits=16, block_size=8, reserve="budget",
-                          num_blocks=1 + blocks_per_seq)
+    budget = PagedBatcher(model, params,
+        ServingConfig(n_slots=4, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=8, reserve="budget", num_blocks=1 + blocks_per_seq))
     got = _run(budget, prompts, max_new=10)
     assert all(len(v) == 10 for v in got.values())
     # the 3-block pool fits one 2-block request at a time plus no slack:
@@ -350,9 +355,8 @@ def test_pool_exhaustion_queues_instead_of_deadlocking():
     s = budget.metrics.summary()["kv_cache"]["prefix"]
     assert 0.0 <= s["hit_rate"] <= 1.0
 
-    paged = PagedBatcher(model, params, n_slots=4, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=8,
-                         num_blocks=1 + blocks_per_seq)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=4, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=8, num_blocks=1 + blocks_per_seq))
     got2 = _run(paged, prompts, max_new=10)
     assert got2 == got                    # preemption timing never changes streams
     assert paged.metrics.kv_blocks_peak <= 3
@@ -376,23 +380,23 @@ def test_paged_submit_validation():
     # budget reservation: a pool smaller than one full sequence could never
     # admit anything — rejected at construction
     with pytest.raises(ValueError, match="blocks"):
-        PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
-                     kv_bits=16, block_size=8, num_blocks=3, reserve="budget")
-    paged = PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=8)
+        PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=8, num_blocks=3, reserve="budget"))
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=8))
     with pytest.raises(ValueError, match="max_new"):
         paged.submit(Request(rid=1, tokens=_prompt(4, 0, cfg.vocab),
-                             max_new=0))
+        options=RequestOptions(max_new=0)))
     with pytest.raises(ValueError, match="budget"):
         paged.submit(Request(rid=2, tokens=_prompt(S_MAX, 0, cfg.vocab)))
     # prompt reservation accepts the small pool and serves any request
     # whose LIFETIME footprint fits; one that could never hold all its
     # blocks at once is still rejected up front (it could never finish)
-    small = PagedBatcher(model, params, n_slots=1, s_max=S_MAX, chunk_size=4,
-                         kv_bits=16, block_size=8, num_blocks=3)
+    small = PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=8, num_blocks=3))
     with pytest.raises(ValueError, match="KV blocks"):
         small.submit(Request(rid=3, tokens=_prompt(6, 0, cfg.vocab),
-                             max_new=S_MAX))
+        options=RequestOptions(max_new=S_MAX)))
     got = _run(small, [_prompt(6, 77, cfg.vocab)], max_new=4)
     assert len(got[0]) == 4
 
@@ -409,13 +413,13 @@ def test_submit_capacity_check_counts_writable_positions():
     cfg, model, params = _setup()
     s_max, bs = 25, 8                     # s_max % bs == 1: the phantom case
     blocks = -(-(s_max - 1) // bs)        # 3 blocks suffice for small L
-    paged = PagedBatcher(model, params, n_slots=1, s_max=s_max,
-                         chunk_size=4, kv_bits=16, block_size=bs,
-                         num_blocks=1 + blocks)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=s_max, chunk_size=4, kv_bits=16, block_size=bs, num_blocks=1 + blocks))
     assert paged._blocks_needed(4, s_max) == blocks          # phantom fixed
     assert paged._blocks_needed(s_max - 1, 2) == blocks + 1  # edge kept
     # lifetime footprint 3 blocks == pool: admits and finishes
-    req = Request(rid=0, tokens=_prompt(4, 5, cfg.vocab), max_new=s_max)
+    req = Request(rid=0, tokens=_prompt(4, 5, cfg.vocab),
+        options=RequestOptions(max_new=s_max))
     paged.submit(req)
     done = paged.run()
     assert len(done) == 1
@@ -424,7 +428,7 @@ def test_submit_capacity_check_counts_writable_positions():
     # the s_max-1-token prompt needs the 4th block this pool lacks
     with pytest.raises(ValueError, match="KV blocks"):
         paged.submit(Request(rid=1, tokens=_prompt(s_max - 1, 5, cfg.vocab),
-                             max_new=2))
+        options=RequestOptions(max_new=2)))
 
 
 def test_full_length_prompt_writes_last_position_exactly():
@@ -436,17 +440,18 @@ def test_full_length_prompt_writes_last_position_exactly():
     cfg, model, params = _setup()
     s_max, bs = 25, 8
     p = _prompt(s_max - 1, 13, cfg.vocab)
-    dense = ContinuousBatcher(model, params, n_slots=1, s_max=s_max,
-                              chunk_size=4)
-    d = Request(rid=0, tokens=p, max_new=4)
+    dense = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=s_max, chunk_size=4))
+    d = Request(rid=0, tokens=p,
+        options=RequestOptions(max_new=4))
     dense.submit(d)
     dense.run()
     assert len(d.output) == 2             # pos cap truncates after one step
     for reserve in ("prompt", "budget"):
-        paged = PagedBatcher(model, params, n_slots=1, s_max=s_max,
-                             chunk_size=4, kv_bits=16, block_size=bs,
-                             num_blocks=1 + 4, reserve=reserve)
-        r = Request(rid=0, tokens=p, max_new=4)
+        paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=s_max, chunk_size=4, kv_bits=16, block_size=bs, num_blocks=1 + 4, reserve=reserve))
+        r = Request(rid=0, tokens=p,
+        options=RequestOptions(max_new=4))
         paged.submit(r)
         paged.run()
         assert r.output == d.output, reserve
@@ -459,10 +464,12 @@ def test_paged_rejects_unsupported_stacks():
     params = model.init(jax.random.PRNGKey(0))
     assert model.decode_step_paged is None
     with pytest.raises(ValueError, match="attention-only"):
-        PagedBatcher(model, params, n_slots=1, s_max=16)
+        PagedBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=16))
     cfg8, model8, params8 = _setup(8)
     with pytest.raises(ValueError, match="kv_bits"):
-        PagedBatcher(model8, params8, n_slots=1, s_max=16, chunk_size=4)
+        PagedBatcher(model8, params8,
+        ServingConfig(n_slots=1, s_max=16, chunk_size=4))
 
 
 _PAGED_TP_SCRIPT = r"""
@@ -472,7 +479,7 @@ import jax, numpy as np
 from repro.models import build_model, to_serving
 from repro.models.config import ModelConfig
 from repro.runtime.kvcache import PagedBatcher
-from repro.runtime.serving import Request
+from repro.runtime.serving import Request, RequestOptions, ServingConfig
 from repro.launch.mesh import make_mesh
 
 cfg = ModelConfig(name="tp-paged", n_layers=2, d_model=1024, n_heads=8,
@@ -484,11 +491,12 @@ params = to_serving(model.init(jax.random.PRNGKey(1)), cfg, tp=8)
 
 def serve(mesh):
     rng = np.random.default_rng(1)
-    b = PagedBatcher(model, params, n_slots=2, s_max=16, chunk_size=4,
-                     kv_bits=8, block_size=4, mesh=mesh)
+    b = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=16, chunk_size=4, kv_bits=8, block_size=4, mesh=mesh))
     for i in range(2):
         b.submit(Request(rid=i, tokens=rng.integers(
-            0, cfg.vocab, (1, 5 + i)).astype(np.int32), max_new=3))
+            0, cfg.vocab, (1, 5 + i)).astype(np.int32),
+        options=RequestOptions(max_new=3)))
     return b, {r.rid: r.output for r in b.run()}
 
 _, base = serve(None)
@@ -520,8 +528,8 @@ def test_paged_tp_mesh_golden_8dev():
 
 def test_paged_metrics_surface():
     cfg, model, params = _setup()
-    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=4,
-                         kv_bits=8, block_size=8)
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4, kv_bits=8, block_size=8))
     _run(paged, [_prompt(6, 60, cfg.vocab)], max_new=3)
     s = paged.metrics.summary()["kv_cache"]
     assert s["blocks"]["total"] == paged.num_blocks - 1

@@ -19,8 +19,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke
-from repro.runtime.serving import (ContinuousBatcher, Request, bucket_length,
-                                   supports_chunked_prefill)
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig,
+                                   bucket_length, supports_chunked_prefill)
 
 EXAMPLES = int(os.environ.get("REPRO_SERVING_EXAMPLES", "4"))
 S_MAX = 24
@@ -87,10 +88,11 @@ def test_continuous_batching_matches_sequential():
                for i in range(5)]          # different lengths -> staggered pos
     want = [_sequential_generate(model, params, p, 6, S_MAX) for p in prompts]
 
-    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
-                                prompt_len=8)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, prompt_len=8))
     for i, p in enumerate(prompts):
-        batcher.submit(Request(rid=i, tokens=p, max_new=6))
+        batcher.submit(Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=6)))
     done = batcher.run()
     assert len(done) == 5
     got = {r.rid: r.output for r in done}
@@ -105,11 +107,12 @@ def test_slot_recycling_more_requests_than_slots():
     cfg, model, params = _setup()
     rng = np.random.default_rng(1)
     n_req = 7
-    batcher = ContinuousBatcher(model, params, n_slots=3, s_max=16,
-                                prompt_len=4)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=3, s_max=16, prompt_len=4))
     for i in range(n_req):
         batcher.submit(Request(rid=i, tokens=rng.integers(
-            0, cfg.vocab, (1, 4)).astype(np.int32), max_new=4))
+            0, cfg.vocab, (1, 4)).astype(np.int32),
+        options=RequestOptions(max_new=4)))
     done = batcher.run()
     assert sorted(r.rid for r in done) == list(range(n_req))
     assert all(len(r.output) == 4 for r in done)
@@ -133,13 +136,14 @@ def test_property_chunked_matches_sequential(lengths, max_new, chunk,
     prompts = [_prompt(L, i, cfg.vocab) for i, L in enumerate(lengths)]
     want = [_sequential_memo(model, params, p, max_new) for p in prompts]
 
-    batcher = ContinuousBatcher(model, params, n_slots=n_slots, s_max=S_MAX,
-                                chunk_size=chunk)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=chunk))
     expected = {}
     for i, p in enumerate(prompts):
         eos = want[i][eos_pick] if 0 <= eos_pick < len(want[i]) else None
         expected[i] = _truncate_at_eos(want[i], eos)
-        batcher.submit(Request(rid=i, tokens=p, max_new=max_new, eos_id=eos))
+        batcher.submit(Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=max_new, eos_id=eos)))
     done = batcher.run()
 
     assert sorted(r.rid for r in done) == list(range(len(prompts)))
@@ -164,12 +168,11 @@ def test_property_sampling_deterministic(temp, top_k, seed, chunk):
     cfg, model, params = _setup()
 
     def run_once():
-        batcher = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
-                                    chunk_size=chunk)
+        batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=chunk))
         for i in range(3):
             batcher.submit(Request(rid=i, tokens=_prompt(5 + i, i, cfg.vocab),
-                                   max_new=4, temperature=temp, top_k=top_k,
-                                   seed=seed))
+        options=RequestOptions(max_new=4, temperature=temp, top_k=top_k, seed=seed)))
         return {r.rid: r.output for r in batcher.run()}
 
     a, b = run_once(), run_once()
@@ -207,14 +210,16 @@ def test_decode_continues_during_chunked_admission():
     """The acceptance criterion: while a long prompt is admitted chunk by
     chunk, already-running slots keep producing decode tokens every step."""
     cfg, model, params = _setup()
-    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=48,
-                                chunk_size=4)
-    short = Request(rid=0, tokens=_prompt(4, 0, cfg.vocab), max_new=40)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=48, chunk_size=4))
+    short = Request(rid=0, tokens=_prompt(4, 0, cfg.vocab),
+        options=RequestOptions(max_new=40))
     batcher.submit(short)
     while len(short.output) < 2:
         batcher.step()
 
-    long_req = Request(rid=1, tokens=_prompt(20, 1, cfg.vocab), max_new=2)
+    long_req = Request(rid=1, tokens=_prompt(20, 1, cfg.vocab),
+        options=RequestOptions(max_new=2))
     before = len(short.output)
     batcher.submit(long_req)
     steps = 0
@@ -236,10 +241,13 @@ def test_chunked_prefill_rejected_for_recurrent_stacks():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     with pytest.raises(ValueError):
-        ContinuousBatcher(model, params, n_slots=1, s_max=16, chunk_size=4)
-    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=16)
+        ContinuousBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=16, chunk_size=4))
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=16))
     assert batcher.chunk_size == 0
-    batcher.submit(Request(rid=0, tokens=_prompt(5, 0, cfg.vocab), max_new=3))
+    batcher.submit(Request(rid=0, tokens=_prompt(5, 0, cfg.vocab),
+        options=RequestOptions(max_new=3)))
     done = batcher.run()
     assert len(done) == 1 and len(done[0].output) == 3
     assert batcher.metrics.prefill_full == 1
@@ -247,7 +255,8 @@ def test_chunked_prefill_rejected_for_recurrent_stacks():
 
 def test_submit_rejects_overlong_prompt():
     cfg, model, params = _setup()
-    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=8)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=8))
     with pytest.raises(ValueError):
         batcher.submit(Request(rid=0, tokens=_prompt(8, 0, cfg.vocab)))
 
@@ -256,7 +265,8 @@ def test_submit_overlong_prompt_reports_cache_budget():
     """The too-long-prompt error states the remaining cache budget, not just
     the raw s_max comparison."""
     cfg, model, params = _setup()
-    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=8)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=8))
     with pytest.raises(ValueError, match=r"up to 7 tokens.*3 tokens over"):
         batcher.submit(Request(rid=0, tokens=_prompt(10, 0, cfg.vocab)))
 
@@ -266,15 +276,16 @@ def test_submit_rejects_nonpositive_max_new():
     still emit a token; now it (and negatives) are rejected up front and the
     scheduler stays serviceable."""
     cfg, model, params = _setup()
-    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=12,
-                                chunk_size=4)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=12, chunk_size=4))
     for bad in (0, -3):
         with pytest.raises(ValueError, match="max_new"):
             batcher.submit(Request(rid=0, tokens=_prompt(4, 0, cfg.vocab),
-                                   max_new=bad))
+        options=RequestOptions(max_new=bad)))
     assert batcher.metrics.requests_submitted == 0
     # the boundary budget still emits exactly one token
-    batcher.submit(Request(rid=1, tokens=_prompt(4, 0, cfg.vocab), max_new=1))
+    batcher.submit(Request(rid=1, tokens=_prompt(4, 0, cfg.vocab),
+        options=RequestOptions(max_new=1)))
     done = batcher.run()
     assert len(done) == 1 and len(done[0].output) == 1
 
@@ -284,12 +295,13 @@ def test_submit_rejects_empty_prompt():
     chunks, never a first token): empty prompts must be rejected up front,
     and the scheduler must stay serviceable afterwards."""
     cfg, model, params = _setup()
-    batcher = ContinuousBatcher(model, params, n_slots=1, s_max=8,
-                                chunk_size=4)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=1, s_max=8, chunk_size=4))
     with pytest.raises(ValueError, match="empty prompt"):
         batcher.submit(Request(rid=0, tokens=np.zeros((1, 0), np.int32)))
     assert batcher.metrics.requests_submitted == 0      # rejected pre-count
-    batcher.submit(Request(rid=1, tokens=_prompt(3, 0, cfg.vocab), max_new=2))
+    batcher.submit(Request(rid=1, tokens=_prompt(3, 0, cfg.vocab),
+        options=RequestOptions(max_new=2)))
     done = batcher.run()
     assert len(done) == 1 and len(done[0].output) == 2
 
@@ -299,13 +311,16 @@ def test_submit_rejects_empty_prompt():
 # ---------------------------------------------------------------------------
 def test_streaming_callbacks_and_metrics():
     cfg, model, params = _setup()
-    batcher = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
-                                chunk_size=4)
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=4))
     streamed = {i: [] for i in range(3)}
     for i in range(3):
         batcher.submit(Request(
-            rid=i, tokens=_prompt(6 + i, i, cfg.vocab), max_new=4,
-            on_token=lambda r, t, fin: streamed[r.rid].append((t, bool(fin)))))
+            rid=i, tokens=_prompt(6 + i, i, cfg.vocab),
+            options=RequestOptions(
+                max_new=4,
+                on_token=lambda r, t, fin:
+                    streamed[r.rid].append((t, bool(fin))))))
     done = batcher.run()
     for r in done:
         toks = [t for t, _ in streamed[r.rid]]

@@ -1,0 +1,287 @@
+"""Serving API redesign: typed configs, the deprecation shim, structured
+admission errors, and the no-legacy-call-sites sweep.
+
+The contract pinned here: ``ServingConfig`` / ``RequestOptions`` are the
+one front door (``launch/serve.py`` flags map 1:1 onto them), the old loose
+constructor kwargs still work behind a ``DeprecationWarning`` with identical
+behavior, and every rejection carries structured FIELDS — these tests
+assert attributes, never message substrings.
+"""
+import dataclasses
+import io
+import os
+import re
+import warnings
+from contextlib import redirect_stdout
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model, reduce_for_smoke
+from repro.runtime.errors import (AdmissionError, EmptyPromptError,
+                                  InvalidBudgetError, PoolFootprintError,
+                                  PromptTooLongError, UnknownSLOClassError)
+from repro.runtime.kvcache import PagedBatcher
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig)
+
+S_MAX = 24
+_STATE = {}
+
+
+def _setup():
+    if not _STATE:
+        cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                                  dtype="float32")
+        model = build_model(cfg)
+        _STATE.update(cfg=cfg, model=model,
+                      params=model.init(jax.random.PRNGKey(0)))
+    return _STATE["cfg"], _STATE["model"], _STATE["params"]
+
+
+def _prompt(length, salt=0):
+    cfg, _, _ = _setup()
+    rng = np.random.default_rng(1009 * length + salt)
+    return rng.integers(0, cfg.vocab, (1, length)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# typed front door
+# ---------------------------------------------------------------------------
+def test_config_is_required_and_typed():
+    _, model, params = _setup()
+    with pytest.raises(TypeError, match="ServingConfig"):
+        ContinuousBatcher(model, params)
+    with pytest.raises(TypeError, match="ServingConfig"):
+        ContinuousBatcher(model, params, {"n_slots": 2})
+
+
+def test_request_options_readable_both_ways():
+    opts = RequestOptions(max_new=7, eos_id=3, temperature=0.5, top_k=4,
+                          seed=11, slo="batch")
+    req = Request(rid=1, tokens=_prompt(4), options=opts)
+    assert (req.max_new, req.eos_id, req.temperature, req.top_k, req.seed,
+            req.slo) == (7, 3, 0.5, 4, 11, "batch")
+    assert req.options is opts
+    # no options at all -> defaults
+    bare = Request(rid=2, tokens=_prompt(4))
+    assert bare.max_new == RequestOptions().max_new
+    assert bare.slo == "standard"
+
+
+def test_legacy_batcher_kwargs_warn_but_behave_identically():
+    cfg, model, params = _setup()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
+                                   prompt_len=8)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    new = ContinuousBatcher(model, params, ServingConfig(
+        n_slots=2, s_max=S_MAX, prompt_len=8))
+    assert legacy.config == new.config
+    prompts = [_prompt(5, 1), _prompt(6, 2)]
+    outs = []
+    for b in (legacy, new):
+        for i, p in enumerate(prompts):
+            b.submit(Request(rid=i, tokens=p,
+                             options=RequestOptions(max_new=4)))
+        outs.append({r.rid: r.output for r in b.run()})
+    assert outs[0] == outs[1]
+
+
+def test_legacy_request_kwargs_warn_and_fold_into_options():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        req = Request(rid=0, tokens=_prompt(4), max_new=5, eos_id=2)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert req.options.max_new == 5 and req.options.eos_id == 2
+    # explicit options + legacy kwargs: the kwargs override on top
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        req = Request(rid=0, tokens=_prompt(4),
+                      options=RequestOptions(temperature=0.7), max_new=9)
+    assert req.temperature == 0.7 and req.max_new == 9
+
+
+def test_unknown_kwargs_are_typeerrors_not_warnings():
+    _, model, params = _setup()
+    with pytest.raises(TypeError, match="n_slotz"):
+        ContinuousBatcher(model, params, ServingConfig(), n_slotz=2)
+    with pytest.raises(TypeError, match="max_old"):
+        Request(rid=0, tokens=_prompt(4), max_old=5)
+
+
+# ---------------------------------------------------------------------------
+# structured admission errors: assert FIELDS, never message substrings
+# ---------------------------------------------------------------------------
+def _dense():
+    if "dense" not in _STATE:
+        _, model, params = _setup()
+        _STATE["dense"] = ContinuousBatcher(model, params, ServingConfig(
+            n_slots=2, s_max=S_MAX, prompt_len=8))
+    return _STATE["dense"]
+
+
+def test_empty_prompt_error_fields():
+    with pytest.raises(EmptyPromptError) as ei:
+        _dense().submit(Request(rid=41, tokens=np.zeros((1, 0), np.int32)))
+    assert ei.value.rid == 41
+    assert isinstance(ei.value, AdmissionError)
+    assert isinstance(ei.value, ValueError)     # pre-redesign excepts work
+
+
+def test_invalid_budget_error_fields():
+    with pytest.raises(InvalidBudgetError) as ei:
+        _dense().submit(Request(rid=42, tokens=_prompt(4),
+                                options=RequestOptions(max_new=0)))
+    assert ei.value.rid == 42
+    assert ei.value.max_new == 0
+
+
+def test_prompt_too_long_error_fields():
+    with pytest.raises(PromptTooLongError) as ei:
+        _dense().submit(Request(rid=43, tokens=_prompt(S_MAX + 3)))
+    e = ei.value
+    assert e.rid == 43
+    assert e.length == S_MAX + 3
+    assert e.s_max == S_MAX
+    assert e.remaining == S_MAX - 1
+    assert e.overflow == (S_MAX + 3) - (S_MAX - 1)
+
+
+def test_pool_footprint_error_fields():
+    _, model, params = _setup()
+    b = PagedBatcher(model, params, ServingConfig(
+        n_slots=1, s_max=S_MAX, chunk_size=4, block_size=4, num_blocks=3))
+    with pytest.raises(PoolFootprintError) as ei:
+        b.submit(Request(rid=44, tokens=_prompt(8),
+                         options=RequestOptions(max_new=8)))
+    e = ei.value
+    assert e.rid == 44
+    assert e.required_blocks == 4        # ceil((8 + 8) / block_size=4)
+    assert e.available_blocks == 2       # num_blocks=3 minus the null block
+    assert e.deficit == 2
+
+
+def test_unknown_slo_error_is_admission_error():
+    e = UnknownSLOClassError("nope", rid=9, slo="gold",
+                             classes=("premium", "standard"))
+    assert isinstance(e, AdmissionError)
+    assert (e.rid, e.slo, e.classes) == (9, "gold", ("premium", "standard"))
+
+
+# ---------------------------------------------------------------------------
+# no call site outside the shim still uses deprecated kwargs
+# ---------------------------------------------------------------------------
+_LEGACY_BATCHER_KW = {"n_slots", "s_max", "prompt_len", "chunk_size",
+                      "autotune", "mesh", "kv_bits", "block_size",
+                      "num_blocks", "pool_bytes", "prefix_cache", "reserve",
+                      "preemption"}
+_LEGACY_REQUEST_KW = {"max_new", "eos_id", "temperature", "top_k", "seed",
+                      "on_token"}
+# the shim itself and this file's deprecation tests legitimately use them
+_EXEMPT = {os.path.join("src", "repro", "runtime", "serving.py"),
+           os.path.join("tests", "test_serving_api.py")}
+
+
+def _split_top_level(s):
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return [a.strip() for a in out]
+
+
+def _find_calls(text, name):
+    for m in re.finditer(r"\b" + name + r"\(", text):
+        i, depth = m.end(), 1
+        while depth and i < len(text):
+            if text[i] in "([{":
+                depth += 1
+            elif text[i] in ")]}":
+                depth -= 1
+            i += 1
+        if depth == 0:
+            yield text[m.end():i - 1]
+
+
+def _kw_names(args):
+    for a in _split_top_level(args):
+        m = re.match(r"([A-Za-z_][A-Za-z_0-9]*)\s*=[^=]", a)
+        if m:
+            yield m.group(1)
+
+
+def test_no_legacy_kwargs_outside_the_shim():
+    """Grep-style sweep: every batcher/Request call site in src/, tests/ and
+    benchmarks/ goes through the typed config — top-level legacy kwargs only
+    survive inside the shim module and this file's deprecation tests."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    offenders = []
+    for sub in ("src", "tests", "benchmarks"):
+        for dirpath, _, files in os.walk(os.path.join(root, sub)):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root)
+                if rel in _EXEMPT:
+                    continue
+                with open(path) as f:
+                    text = f.read()
+                for ctor in ("ContinuousBatcher", "PagedBatcher",
+                             "AdaptiveServer"):
+                    for args in _find_calls(text, ctor):
+                        bad = set(_kw_names(args)) & _LEGACY_BATCHER_KW
+                        if bad:
+                            offenders.append((rel, ctor, sorted(bad)))
+                for args in _find_calls(text, "Request"):
+                    bad = set(_kw_names(args)) & _LEGACY_REQUEST_KW
+                    if bad:
+                        offenders.append((rel, "Request", sorted(bad)))
+    assert not offenders, (
+        "legacy constructor kwargs outside the shim:\n"
+        + "\n".join(f"  {rel}: {ctor}({', '.join(kw)}=...)"
+                    for rel, ctor, kw in offenders))
+
+
+# ---------------------------------------------------------------------------
+# facade + CLI surface
+# ---------------------------------------------------------------------------
+def test_runtime_facade_exports_serving_api():
+    import repro.runtime as rt
+    for name in ("ServingConfig", "RequestOptions", "Request",
+                 "ContinuousBatcher", "PagedBatcher", "AdaptiveServer",
+                 "ByteLedger", "Metrics", "AdmissionError",
+                 "EmptyPromptError", "InvalidBudgetError",
+                 "PromptTooLongError", "PoolFootprintError",
+                 "UnknownSLOClassError", "SLOClass", "BrownoutPolicy",
+                 "BrownoutController", "default_slo_classes",
+                 "search_policy"):
+        assert hasattr(rt, name), f"repro.runtime.{name} missing"
+    assert rt.ServingConfig is ServingConfig
+    assert rt.Request is Request
+
+
+def test_serve_cli_documents_slo_and_brownout():
+    from repro.launch import serve
+    buf = io.StringIO()
+    with pytest.raises(SystemExit) as ei, redirect_stdout(buf):
+        serve.main(["--help"])
+    assert ei.value.code == 0
+    text = buf.getvalue()
+    assert "--slo" in text and "--brownout" in text
+    assert "--speculative" in text and "--draft-precision" in text
+    for tier in ("premium", "standard", "batch"):
+        assert tier in text

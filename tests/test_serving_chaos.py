@@ -41,7 +41,8 @@ import jax
 from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke
 from repro.runtime.kvcache import PagedBatcher
-from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig)
 
 EXAMPLES = int(os.environ.get("REPRO_SERVING_EXAMPLES", "4"))
 S_MAX = 24
@@ -106,7 +107,8 @@ def _oracle(kv_bits, prompt, max_new):
         _, model, params = _setup(kv_bits)
         if kv_bits:
             solo = _batcher("dense", kv_bits, 1, 0)   # memoized one-slot run
-            req = Request(rid=0, tokens=prompt, max_new=max_new)
+            req = Request(rid=0, tokens=prompt,
+        options=RequestOptions(max_new=max_new))
             solo.submit(req)
             solo.run()
             memo[key] = req.output
@@ -135,13 +137,11 @@ def _batcher(kind, kv_bits, n_slots, pool_blocks):
     if key not in cache:
         _, model, params = _setup(0 if kind != "dense" else kv_bits)
         if kind == "dense":
-            cache[key] = ContinuousBatcher(model, params, n_slots=n_slots,
-                                           s_max=S_MAX, chunk_size=CHUNK)
+            cache[key] = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=CHUNK))
         else:
-            cache[key] = PagedBatcher(
-                model, params, n_slots=n_slots, s_max=S_MAX, chunk_size=CHUNK,
-                kv_bits=kv_bits, block_size=BLOCK,
-                num_blocks=1 + pool_blocks)
+            cache[key] = PagedBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=CHUNK, kv_bits=kv_bits, block_size=BLOCK, num_blocks=1 + pool_blocks))
     return cache[key]
 
 
@@ -211,7 +211,8 @@ def test_chaos_streams_survive_eviction_and_preemption(
         streamed[req.rid].append((tok, bool(fin)))
 
     paged = _batcher("paged", kv_bits, n_slots, pool_blocks)
-    reqs = [Request(rid=i, tokens=p, max_new=budgets[i], on_token=cb)
+    reqs = [Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=budgets[i], on_token=cb))
             for i, p in enumerate(prompts)]
     got = _drive(paged, reqs, arrivals)
 
@@ -227,7 +228,8 @@ def test_chaos_streams_survive_eviction_and_preemption(
 
     if kv_bits == 16:
         dense = _batcher("dense", 0, n_slots, pool_blocks)
-        dreqs = [Request(rid=i, tokens=p, max_new=budgets[i])
+        dreqs = [Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=budgets[i]))
                  for i, p in enumerate(prompts)]
         dgot = _drive(dense, dreqs, arrivals)
         assert dgot == got, "dense != paged16 under identical arrivals"
@@ -247,18 +249,20 @@ def test_preemption_fires_under_overcommit_and_streams_survive():
     callbacks never replay, and the drained pool leaks nothing."""
     cfg, model, params = _setup()
     prompts = [_flat_prompt(4, 60 + i, cfg.vocab) for i in range(4)]
-    dense = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
-                              chunk_size=CHUNK)
+    dense = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=CHUNK))
     for i, p in enumerate(prompts):
-        dense.submit(Request(rid=i, tokens=p, max_new=12))
+        dense.submit(Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=12)))
     want = {r.rid: r.output for r in dense.run()}
 
     streamed = {i: [] for i in range(4)}
-    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX,
-                         chunk_size=CHUNK, kv_bits=16, block_size=BLOCK,
-                         num_blocks=1 + 5)
-    reqs = [Request(rid=i, tokens=p, max_new=12,
-                    on_token=lambda r, t, f: streamed[r.rid].append(t))
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=CHUNK, kv_bits=16, block_size=BLOCK, num_blocks=1 + 5))
+    reqs = [Request(rid=i, tokens=p,
+                    options=RequestOptions(
+                        max_new=12,
+                        on_token=lambda r, t, f: streamed[r.rid].append(t)))
             for i, p in enumerate(prompts)]
     got = _drive(paged, reqs, [0] * 4)
     assert got == want
@@ -277,17 +281,20 @@ def test_recompute_rides_the_suffix_cache():
     recomputed_tokens stays ZERO."""
     cfg, model, params = _setup()
     pa, pb = _flat_prompt(4, 50, cfg.vocab), _flat_prompt(4, 51, cfg.vocab)
-    dense = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
-                              chunk_size=CHUNK)
-    dense.submit(Request(rid=0, tokens=pa, max_new=11))
-    dense.submit(Request(rid=1, tokens=pb, max_new=12))
+    dense = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=CHUNK))
+    dense.submit(Request(rid=0, tokens=pa,
+        options=RequestOptions(max_new=11)))
+    dense.submit(Request(rid=1, tokens=pb,
+        options=RequestOptions(max_new=12)))
     want = {r.rid: r.output for r in dense.run()}
 
-    paged = PagedBatcher(model, params, n_slots=2, s_max=S_MAX,
-                         chunk_size=CHUNK, kv_bits=16, block_size=BLOCK,
-                         num_blocks=1 + 7)
-    reqs = [Request(rid=0, tokens=pa, max_new=11),
-            Request(rid=1, tokens=pb, max_new=12)]
+    paged = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=CHUNK, kv_bits=16, block_size=BLOCK, num_blocks=1 + 7))
+    reqs = [Request(rid=0, tokens=pa,
+        options=RequestOptions(max_new=11)),
+            Request(rid=1, tokens=pb,
+        options=RequestOptions(max_new=12))]
     got = _drive(paged, reqs, [0, 0])
     assert got == want
     m = paged.metrics
@@ -304,26 +311,27 @@ def test_stall_mode_completes_when_pool_fits_and_detects_deadlock():
     satisfy the stalled slots raises a deadlock error instead of hanging."""
     cfg, model, params = _setup()
     prompts = [_flat_prompt(4, 60 + i, cfg.vocab) for i in range(4)]
-    dense = ContinuousBatcher(model, params, n_slots=2, s_max=S_MAX,
-                              chunk_size=CHUNK)
+    dense = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=CHUNK))
     for i, p in enumerate(prompts):
-        dense.submit(Request(rid=i, tokens=p, max_new=12))
+        dense.submit(Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=12)))
     want = {r.rid: r.output for r in dense.run()}
 
-    ok = PagedBatcher(model, params, n_slots=2, s_max=S_MAX, chunk_size=CHUNK,
-                      kv_bits=16, block_size=BLOCK, num_blocks=1 + 8,
-                      preemption="off")
-    got = _drive(ok, [Request(rid=i, tokens=p, max_new=12)
+    ok = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=CHUNK, kv_bits=16, block_size=BLOCK, num_blocks=1 + 8, preemption="off"))
+    got = _drive(ok, [Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=12))
                       for i, p in enumerate(prompts)], [0] * 4)
     assert got == want
     assert ok.metrics.preemptions == 0
     _assert_drained(ok)
 
-    dead = PagedBatcher(model, params, n_slots=2, s_max=S_MAX,
-                        chunk_size=CHUNK, kv_bits=16, block_size=BLOCK,
-                        num_blocks=1 + 5, preemption="off")
+    dead = PagedBatcher(model, params,
+        ServingConfig(n_slots=2, s_max=S_MAX, chunk_size=CHUNK, kv_bits=16, block_size=BLOCK, num_blocks=1 + 5, preemption="off"))
     for i, p in enumerate(prompts[:2]):
-        dead.submit(Request(rid=i, tokens=p, max_new=12))
+        dead.submit(Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=12)))
     with pytest.raises(RuntimeError, match="deadlock"):
         for _ in range(200):
             dead.step()
@@ -348,3 +356,70 @@ def test_pool_check_catches_seeded_corruption():
     p._ref[0] = 0                                  # null block unpinned
     with pytest.raises(RuntimeError, match="pin"):
         p.check([blocks], ())
+
+
+# ---------------------------------------------------------------------------
+# adaptive serving: SLO routing is deterministic under chaos
+# ---------------------------------------------------------------------------
+def _adaptive_server():
+    """Fresh 2-rung adaptive server (fresh controller state — routing
+    determinism is about server state, so the servers must not be shared
+    across runs the way _batcher memoizes)."""
+    from repro.runtime.adaptive import AdaptiveServer
+    from repro.runtime.policy import BrownoutPolicy, SLOClass
+    _, model, params = _setup()
+    return AdaptiveServer(model, params, ServingConfig(
+        n_slots=2, s_max=S_MAX, chunk_size=CHUNK, block_size=BLOCK,
+        num_blocks=1 + 8, brownout=True,
+        slo_classes={
+            "premium": SLOClass("premium", 500.0, 100.0, max_brownout=0),
+            "standard": SLOClass("standard", 2000.0, 250.0, max_brownout=1),
+            "batch": SLOClass("batch", 10000.0, 1000.0, max_brownout=1),
+        },
+        brownout_policy=BrownoutPolicy(queue_high=1.0, queue_low=0.25,
+                                       cool_steps=4, max_level=1)))
+
+
+def test_slo_routing_is_deterministic_under_chaos():
+    """The same bursty mixed-SLO schedule, driven twice through FRESH
+    adaptive servers, must make identical routing decisions (per-request
+    rung) and produce identical streams — brownout is a deterministic
+    function of the arrival schedule, never of wall-clock or hash order.
+    Pool invariants (and the rung-0 pin for premium) hold throughout."""
+    cfg, _, _ = _setup()
+    slos = ["premium", "standard", "batch", "batch", "standard",
+            "batch", "premium", "batch", "standard", "batch"]
+    arrivals = [0, 0, 0, 0, 1, 1, 3, 3, 3, 8]      # burst, trickle, burst
+    runs = []
+    for _ in range(2):
+        srv = _adaptive_server()
+        reqs = [Request(rid=i,
+                        tokens=_prompt(i % 3, 3 + (i * 2) % 5, 90 + i,
+                                       cfg.vocab),
+                        options=RequestOptions(max_new=3 + i % 4,
+                                               slo=slos[i]))
+                for i in range(len(slos))]
+        order = sorted(range(len(reqs)), key=lambda i: (arrivals[i], i))
+        done, k, step = [], 0, 0
+        while k < len(order) or not srv.idle:
+            while k < len(order) and arrivals[order[k]] <= step:
+                srv.submit(reqs[order[k]])
+                k += 1
+            done.extend(srv.step())
+            srv.check_pool()
+            step += 1
+            assert step < 4000, "adaptive server failed to drain"
+        runs.append({
+            "rungs": {r.rid: r.routed_rung for r in done},
+            "outputs": {r.rid: r.output for r in done},
+            "level_trace": (srv.controller.raises, srv.controller.lowers),
+        })
+        for lane in srv.lanes:
+            _assert_drained(lane)
+    assert runs[0]["rungs"] == runs[1]["rungs"]
+    assert runs[0]["outputs"] == runs[1]["outputs"]
+    assert runs[0]["level_trace"] == runs[1]["level_trace"]
+    rungs = runs[0]["rungs"]
+    assert sorted(rungs) == list(range(len(slos)))
+    assert all(rungs[i] == 0 for i, s in enumerate(slos) if s == "premium")
+    assert any(r > 0 for r in rungs.values()), "burst never browned out"

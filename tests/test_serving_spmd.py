@@ -28,7 +28,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke, to_serving
 from repro.models.config import ModelConfig
-from repro.runtime.serving import ContinuousBatcher, Request
+from repro.runtime.serving import (ContinuousBatcher, Request,
+                                   RequestOptions, ServingConfig)
 from repro.launch.mesh import make_mesh
 
 assert len(jax.devices()) == 8
@@ -36,11 +37,12 @@ assert len(jax.devices()) == 8
 def serve(model, cfg, params, mesh, n_reqs=3, n_slots=8, max_new=4,
           chunk=4, s_max=24):
     rng = np.random.default_rng(0)
-    b = ContinuousBatcher(model, params, n_slots=n_slots, s_max=s_max,
-                          chunk_size=chunk, mesh=mesh)
+    b = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=s_max, chunk_size=chunk, mesh=mesh))
     for i in range(n_reqs):
         b.submit(Request(rid=i, tokens=rng.integers(
-            0, cfg.vocab, (1, 5 + i)).astype(np.int32), max_new=max_new))
+            0, cfg.vocab, (1, 5 + i)).astype(np.int32),
+        options=RequestOptions(max_new=max_new)))
     done = b.run()
     assert len(done) == n_reqs, (len(done), n_reqs)
     return b, {r.rid: r.output for r in done}
@@ -60,8 +62,8 @@ print("DP_GOLDEN_OK")
 
 # ---- HLO inspection: dp mesh, batch-sharded slot cache --------------------
 mesh = make_mesh(8, 1)
-b = ContinuousBatcher(model, params, n_slots=8, s_max=24, chunk_size=4,
-                      mesh=mesh)
+b = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=8, s_max=24, chunk_size=4, mesh=mesh))
 dec = b._decode.lower(b.params, jnp.asarray(b.tokens), b.cache,
                       jnp.asarray(b.pos)).compile()
 s_max_dim = f"f32[8,{b.s_max},"           # a cache-shaped (B,S,...) tensor
@@ -90,7 +92,8 @@ got_sh = {k: jax.tree_util.tree_map(lambda x: x.sharding, v)
           for k, v in b._adm_cache.items()}
 assert got_sh == want_sh, (got_sh, want_sh)
 slot_before = jax.tree_util.tree_map(lambda x: x.sharding, b.cache)
-b.submit(Request(rid=0, tokens=np.ones((1, 5), np.int32), max_new=3))
+b.submit(Request(rid=0, tokens=np.ones((1, 5), np.int32),
+        options=RequestOptions(max_new=3)))
 for _ in range(8):
     b.step()
 slot_after = jax.tree_util.tree_map(lambda x: x.sharding, b.cache)
