@@ -63,6 +63,22 @@ def _setup_spmd():
     return cfg, model, params
 
 
+def _setup_spmd_quant():
+    """Quantized-act variant of the mesh-sweep model (2xT serving form,
+    ternary weights x 2-bit acts): per-row act scales let the pure-DP
+    shard_map dispatch invoke the tuned Pallas path per shard, so the
+    weak-scaling sweep now has a quantized-act row set next to fp32."""
+    from repro.models import to_serving
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="spmd-bench-2xT", n_layers=4, d_model=512,
+                      n_heads=8, n_kv_heads=8, head_dim=64, d_ff=2048,
+                      vocab=2048, dtype="float32", layer_pattern=("attn",),
+                      ffn_pattern=("dense",), precision="2xT")
+    model = build_model(cfg)
+    params = to_serving(model.init(jax.random.PRNGKey(0)), cfg)
+    return cfg, model, params
+
+
 def _mk_requests(cfg, n, rng, *, lo=6, hi=20, max_new=8):
     return [Request(rid=i, tokens=rng.integers(0, cfg.vocab,
                                         (1, int(rng.integers(lo, hi + 1)))
@@ -167,7 +183,8 @@ def _run_one_mesh(cfg, model, params, mesh, *, n_slots, decode_iters=16,
     }
 
 
-def mesh_sweep(cfg, model, params, mesh_specs, *, slots_per_dev=4):
+def mesh_sweep(cfg, model, params, mesh_specs, *, slots_per_dev=4,
+               tag="serving_spmd", precision="fp32"):
     """Weak-scaling sweep: per-device slots constant, mesh shapes vary."""
     from repro.launch.mesh import parse_mesh
     rows = []
@@ -175,10 +192,11 @@ def mesh_sweep(cfg, model, params, mesh_specs, *, slots_per_dev=4):
         mesh = parse_mesh(spec)
         dp, mp = mesh.shape["data"], mesh.shape["model"]
         n_slots = slots_per_dev * dp * mp
-        row = {"mesh": spec, "dp": dp, "mp": mp, "devices": dp * mp}
+        row = {"mesh": spec, "dp": dp, "mp": mp, "devices": dp * mp,
+               "precision": precision}
         row.update(_run_one_mesh(cfg, model, params, mesh, n_slots=n_slots))
         rows.append(row)
-        print(f"serving_spmd_{spec.replace(',', 'x')},"
+        print(f"{tag}_{spec.replace(',', 'x')},"
               f"{row['decode_tok_per_s']:.1f},"
               f"total={row['tok_per_s']:.1f}tok/s slots={n_slots}")
     by_mesh = {r["mesh"]: r for r in rows}
@@ -190,9 +208,9 @@ def mesh_sweep(cfg, model, params, mesh_specs, *, slots_per_dev=4):
                 speedups[f"decode_x_{spec.replace(',', 'x')}_vs_1x1"] = \
                     r["decode_tok_per_s"] / max(base, 1e-9)
     for name, v in speedups.items():
-        print(f"serving_spmd_speedup_{name},{v:.2f},weak_scaling")
-    return {"slots_per_device": slots_per_dev, "rows": rows,
-            "speedups": speedups}
+        print(f"{tag}_speedup_{name},{v:.2f},weak_scaling")
+    return {"slots_per_device": slots_per_dev, "precision": precision,
+            "rows": rows, "speedups": speedups}
 
 
 def main(out=None, loads=(2, 4, 8)):
@@ -231,6 +249,12 @@ def main_spmd(mesh_specs, out=None, slots_per_dev=4):
         mesh_specs = ["1,1"] + list(mesh_specs)    # scaling baseline
     result = {"mesh_sweep": mesh_sweep(cfg, model, params, mesh_specs,
                                        slots_per_dev=slots_per_dev)}
+    # quantized-act rows: the shard_map-dispatched Pallas path on the same
+    # weak-scaling schedule (per-row act scales make it mesh-invariant)
+    qcfg, qmodel, qparams = _setup_spmd_quant()
+    result["mesh_sweep_quant_2xT"] = mesh_sweep(
+        qcfg, qmodel, qparams, mesh_specs, slots_per_dev=slots_per_dev,
+        tag="serving_spmd_2xT", precision="2xT")
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)

@@ -18,7 +18,8 @@ shapes/dtypes in interpret mode and assert_allclose (integer paths match
 exactly).
 """
 from . import tuning  # noqa: F401
-from .act_quant import act_quant, act_quant_signed  # noqa: F401
+from .act_quant import (act_quant, act_quant_signed,  # noqa: F401
+                        act_quant_signed_grouped)
 from .decode_attention import decode_attention  # noqa: F401
 from .engine import (  # noqa: F401
     PackedWeight,

@@ -6,10 +6,19 @@ integer codes that feed the next layer's packed matmul; the /(2^k-1) dequant
 is folded into the next BNS gamma (core.bns.fuse_act_quant_levels), so no
 extra op is spent on it — the paper's "hide the scalar" trick.
 
-Two variants:
+Three variants:
   * unsigned (post-ReLU, eq. 4): codes 0..2^k-1
   * signed symmetric (transformer activations): codes -(2^{k-1}-1)..2^{k-1}-1
     with a precomputed per-tensor scale
+  * signed grouped: scale is (M, G) with G dividing F — per-row when G=1,
+    per-group otherwise.  Batch-free scale *shapes* per row make the codes
+    row-independent, which is what lets serving quantize activations inside
+    shard_map on shard-local batches (Mellempudi et al.'s fine-grained
+    scale groups, applied to activations).
+
+Every entry point pads M up to a block multiple and slices the result back,
+so ragged serving buckets (e.g. M=384 with bm=256) never trip a divisibility
+assertion.
 """
 from __future__ import annotations
 
@@ -32,13 +41,28 @@ def _kernel_signed(x_ref, scale_ref, out_ref, *, bits: int):
     out_ref[...] = jnp.clip(jnp.round(x), -qmax, qmax).astype(jnp.int8)
 
 
+def _kernel_signed_grouped(x_ref, scale_ref, out_ref, *, bits: int, rep: int):
+    qmax = float((1 << (bits - 1)) - 1)
+    scale = jnp.repeat(scale_ref[...].astype(jnp.float32), rep, axis=1)
+    x = x_ref[...].astype(jnp.float32) / scale
+    out_ref[...] = jnp.clip(jnp.round(x), -qmax, qmax).astype(jnp.int8)
+
+
+def _pad_rows(x, bm: int):
+    m = x.shape[0]
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x, m + pad
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
 def act_quant(x, *, bits: int, bm: int = 256, interpret: bool = False):
     """Unsigned eq.(4) codes.  x: (M, F) float -> (M, F) int8."""
-    m, f = x.shape
-    bm = min(bm, m)
-    assert m % bm == 0
-    return pl.pallas_call(
+    m0, f = x.shape
+    bm = min(bm, m0)
+    x, m = _pad_rows(x, bm)
+    out = pl.pallas_call(
         functools.partial(_kernel_unsigned, bits=bits),
         grid=(m // bm,),
         in_specs=[pl.BlockSpec((bm, f), lambda i: (i, 0))],
@@ -46,16 +70,17 @@ def act_quant(x, *, bits: int, bm: int = 256, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((m, f), jnp.int8),
         interpret=interpret,
     )(x)
+    return out[:m0]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
 def act_quant_signed(x, scale, *, bits: int, bm: int = 256,
                      interpret: bool = False):
     """Signed symmetric codes with per-tensor scale.  scale: scalar array."""
-    m, f = x.shape
-    bm = min(bm, m)
-    assert m % bm == 0
-    return pl.pallas_call(
+    m0, f = x.shape
+    bm = min(bm, m0)
+    x, m = _pad_rows(x, bm)
+    out = pl.pallas_call(
         functools.partial(_kernel_signed, bits=bits),
         grid=(m // bm,),
         in_specs=[
@@ -66,3 +91,37 @@ def act_quant_signed(x, scale, *, bits: int, bm: int = 256,
         out_shape=jax.ShapeDtypeStruct((m, f), jnp.int8),
         interpret=interpret,
     )(x, scale.reshape(1, 1).astype(jnp.float32))
+    return out[:m0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
+def act_quant_signed_grouped(x, scale, *, bits: int, bm: int = 256,
+                             interpret: bool = False):
+    """Signed symmetric codes with fine-grained scales.
+
+    x: (M, F) float; scale: (M, G) float with G | F — scale[i, g] covers
+    columns [g*F/G, (g+1)*F/G).  G=1 is the per-row (per-token) case used by
+    dynamic activation quantization in serving.  Returns (M, F) int8.
+    """
+    m0, f = x.shape
+    g = scale.shape[1]
+    assert scale.shape[0] == m0 and f % g == 0, (x.shape, scale.shape)
+    bm = min(bm, m0)
+    x, m = _pad_rows(x, bm)
+    # Pad scale rows with ones so the padded rows never divide by zero.
+    pad = m - m0
+    if pad:
+        scale = jnp.concatenate(
+            [scale, jnp.ones((pad, g), scale.dtype)], axis=0)
+    out = pl.pallas_call(
+        functools.partial(_kernel_signed_grouped, bits=bits, rep=f // g),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((bm, g), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, f), jnp.int8),
+        interpret=interpret,
+    )(x, scale.astype(jnp.float32))
+    return out[:m0]

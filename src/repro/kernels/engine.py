@@ -28,6 +28,7 @@ this engine and their own tests.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -166,15 +167,38 @@ def available_kernels() -> Dict[KernelKey, str]:
     return {k: fn.__name__ for k, fn in sorted(_REGISTRY.items())}
 
 
+_BACKEND_OVERRIDE: Optional[str] = None
+
+
+def set_default_backend(backend: Optional[str]) -> None:
+    """Force the registry backend for every call that doesn't pass one
+    explicitly; ``None`` restores the platform default.  The ``REPRO_BACKEND``
+    environment variable does the same for subprocesses (e.g. HLO tests that
+    exercise the Pallas interpret path on CPU)."""
+    global _BACKEND_OVERRIDE
+    if backend is not None and backend not in (BACKEND_PALLAS, BACKEND_XLA):
+        raise ValueError(f"unknown backend {backend!r}")
+    _BACKEND_OVERRIDE = backend
+
+
 def default_backend() -> str:
+    if _BACKEND_OVERRIDE is not None:
+        return _BACKEND_OVERRIDE
+    env = os.environ.get("REPRO_BACKEND")
+    if env in (BACKEND_PALLAS, BACKEND_XLA):
+        return env
     return BACKEND_PALLAS if jax.default_backend() == "tpu" else BACKEND_XLA
 
 
 # ---------------------------------------------------------------------------
 # implementations.  Signature:
-#     fn(x, pw, scale, bias, *, block, out_dtype, interpret) -> (M, N)
+#     fn(x, pw, scale, bias, *, block, out_dtype, interpret,
+#        a_scale=None) -> (M, N)
 # ``x`` is pre-prepared by qmatmul (codes / float / packed pm1 bits);
-# ``scale`` already folds the dynamic activation scale.
+# ``scale`` is the (N,) weight dequant scale; ``a_scale`` is the (M, 1)
+# per-row dynamic activation scale (None for float/pre-quantized inputs).
+# Epilogue order everywhere: acc * w_scale * a_scale + bias -> out_dtype,
+# so Pallas and xla paths stay bit-identical for the integer kernels.
 # ---------------------------------------------------------------------------
 def _pad_rows(x, multiple):
     m = x.shape[0]
@@ -184,69 +208,101 @@ def _pad_rows(x, multiple):
     return x, m
 
 
+def _row_epilogue(out, a_scale, bias, out_dtype):
+    """Post-kernel per-row dequant: applied AFTER slicing padded rows, with
+    the bias held out of the kernel so the order matches the references."""
+    out = out.astype(jnp.float32) * a_scale
+    if bias is not None:
+        out = out + bias[None, :]
+    return out.astype(out_dtype)
+
+
 @register_kernel(W_INT, ACT_BITS_RANGE, (2, 4, 8), BACKEND_PALLAS)
-def _int_packed_pallas(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _int_packed_pallas(x, pw, scale, bias, *, block, out_dtype, interpret,
+                       a_scale=None):
     bm, bn, bk = block
     x_p, m0 = _pad_rows(x, bm)
-    out = packed_matmul(x_p, pw.wt_packed, scale, bias, bits=pw.bits,
-                        bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+    k_bias = bias if a_scale is None else None
+    k_dtype = out_dtype if a_scale is None else jnp.float32
+    out = packed_matmul(x_p, pw.wt_packed, scale, k_bias, bits=pw.bits,
+                        bm=bm, bn=bn, bk=bk, out_dtype=k_dtype,
                         interpret=interpret)
-    return out[:m0]
+    out = out[:m0]
+    if a_scale is not None:
+        out = _row_epilogue(out, a_scale, bias, out_dtype)
+    return out
 
 
 @register_kernel(W_INT, ACT_BITS_RANGE, tuple(range(1, 9)), BACKEND_XLA)
-def _int_packed_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _int_packed_xla(x, pw, scale, bias, *, block, out_dtype, interpret,
+                    a_scale=None):
     return ref.packed_matmul_ref(x, pw.wt_packed, scale, pw.bits,
-                                 bias=bias, out_dtype=out_dtype)
+                                 bias=bias, out_dtype=out_dtype,
+                                 row_scale=a_scale)
 
 
 @register_kernel(W_TERNARY, ACT_BITS_RANGE, 2, BACKEND_PALLAS)
-def _ternary_pallas(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _ternary_pallas(x, pw, scale, bias, *, block, out_dtype, interpret,
+                    a_scale=None):
     bm, bn, bk = block
     x_p, m0 = _pad_rows(x, bm)
-    out = ternary_matmul(x_p, pw.wt_packed, scale, bias=bias,
-                         bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+    k_bias = bias if a_scale is None else None
+    k_dtype = out_dtype if a_scale is None else jnp.float32
+    out = ternary_matmul(x_p, pw.wt_packed, scale, bias=k_bias,
+                         bm=bm, bn=bn, bk=bk, out_dtype=k_dtype,
                          interpret=interpret)
-    return out[:m0]
+    out = out[:m0]
+    if a_scale is not None:
+        out = _row_epilogue(out, a_scale, bias, out_dtype)
+    return out
 
 
 @register_kernel(W_TERNARY, ACT_BITS_RANGE, 2, BACKEND_XLA)
-def _ternary_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _ternary_xla(x, pw, scale, bias, *, block, out_dtype, interpret,
+                 a_scale=None):
     return ref.ternary_matmul_ref(x, pw.wt_packed, scale,
-                                  bias=bias, out_dtype=out_dtype)
+                                  bias=bias, out_dtype=out_dtype,
+                                  row_scale=a_scale)
 
 
 @register_kernel(W_BINARY, 1, 1, BACKEND_PALLAS)
-def _binary_xnor_pallas(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _binary_xnor_pallas(x, pw, scale, bias, *, block, out_dtype, interpret,
+                        a_scale=None):
     """x: (M, K/32) int32 pm1 bits.  XNOR + popcount PE."""
     bm, bn, bk = block
     bkw = max(bk // 32, 1)
     x_p, m0 = _pad_rows(x, bm)
+    k_dtype = out_dtype if a_scale is None else jnp.float32
     out = binary_matmul(x_p, pw.wt_packed, alpha=scale, k=pw.k,
-                        bm=bm, bn=bn, bkw=bkw, out_dtype=out_dtype,
+                        bm=bm, bn=bn, bkw=bkw, out_dtype=k_dtype,
                         interpret=interpret)
     out = out[:m0]
+    if a_scale is not None:
+        return _row_epilogue(out, a_scale, bias, out_dtype)
     if bias is not None:
         out = (out + bias[None, :]).astype(out_dtype)
     return out
 
 
 @register_kernel(W_BINARY, 1, 1, BACKEND_XLA)
-def _binary_xnor_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _binary_xnor_xla(x, pw, scale, bias, *, block, out_dtype, interpret,
+                     a_scale=None):
     out = ref.binary_matmul_ref(x, pw.wt_packed, pw.k, alpha=scale,
-                                out_dtype=out_dtype)
+                                out_dtype=jnp.float32, row_scale=a_scale)
     if bias is not None:
-        out = (out + bias[None, :]).astype(out_dtype)
-    return out
+        out = out + bias[None, :]
+    return out.astype(out_dtype)
 
 
 @register_kernel(W_BINARY, tuple(a for a in range(0, 9) if a != 1), 1, BACKEND_XLA)
-def _binary_dequant_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _binary_dequant_xla(x, pw, scale, bias, *, block, out_dtype, interpret,
+                        a_scale=None):
     """Binary weights with multi-bit/float activations (8xB): decode pm1
     codes and run the int/float dot — no XNOR trick applies."""
     if x.dtype == jnp.int32:                       # pre-packed pm1 activations
         return _binary_xnor_xla(x, pw, scale, bias, block=block,
-                                out_dtype=out_dtype, interpret=interpret)
+                                out_dtype=out_dtype, interpret=interpret,
+                                a_scale=a_scale)
     codes = packing.unpack_binary_pm1(pw.wt_packed)             # (N, K) int8
     if jnp.issubdtype(x.dtype, jnp.integer):
         acc = jax.lax.dot_general(x.astype(jnp.int8), codes,
@@ -256,13 +312,16 @@ def _binary_dequant_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
     else:
         out = jnp.dot(x.astype(jnp.float32),
                       codes.T.astype(jnp.float32)) * scale[None, :]
+    if a_scale is not None:
+        out = out * a_scale
     if bias is not None:
         out = out + bias[None, :]
     return out.astype(out_dtype)
 
 
 @register_kernel(K_CODES, ACT_BITS_RANGE, tuple(range(1, 9)), BACKEND_XLA)
-def _codes_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
+def _codes_xla(x, pw, scale, bias, *, block, out_dtype, interpret,
+               a_scale=None):
     """Unpacked int8 codes storage (3-bit / TP-misaligned K)."""
     wt = pw.wt_packed                                           # (N, K) int8
     if jnp.issubdtype(x.dtype, jnp.integer):
@@ -271,6 +330,8 @@ def _codes_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
     else:
         acc = jnp.dot(x.astype(jnp.float32), wt.T.astype(jnp.float32))
     out = acc * scale[None, :]
+    if a_scale is not None:
+        out = out * a_scale
     if bias is not None:
         out = out + bias[None, :]
     return out.astype(out_dtype)
@@ -282,8 +343,16 @@ def _codes_xla(x, pw, scale, bias, *, block, out_dtype, interpret):
 def _prep_activations(x2, pw: PackedWeight, a_bits: int):
     """Returns (x_prepped, a_scale or None).  Integer inputs are taken as
     ready-made codes (the caller owns their scale); float inputs are
-    dynamically quantized per the config (symmetric per-tensor — the decode
-    hot path can't afford a calibration pass).
+    dynamically quantized per the config (symmetric PER-ROW — the decode hot
+    path can't afford a calibration pass).
+
+    The per-row (per-token) scale is the fine-grained granularity that makes
+    the whole serving stack batch-shape-independent: each row's codes and
+    dequant depend only on that row, so shard_map over a local batch, a
+    different M bucket, or a batch-1 recompute all reproduce the same values
+    bit-exactly.  a_scale has shape (M, 1) — batch-SHAPED but never
+    batch-COUPLED, and it shards row-wise alongside the activations
+    (parallel.sharding.act_scale_specs).
 
     Activations are bit-packed for the XNOR kernel only when the weights are
     packed too (int32 storage): the unaligned-K binary fallback stores int8
@@ -296,13 +365,15 @@ def _prep_activations(x2, pw: PackedWeight, a_bits: int):
     if a_bits == 0:
         return x2, None
     if a_bits == 1:
-        a_scale = jnp.maximum(jnp.mean(jnp.abs(x2)), 1e-8)
+        a_scale = jnp.maximum(
+            jnp.mean(jnp.abs(x2), axis=1, keepdims=True), 1e-8)
         xq = jnp.where(x2 >= 0, 1, -1).astype(jnp.int8)
         if xnor:
             return packing.pack_binary_pm1(xq), a_scale
         return xq, a_scale
     qmax = (1 << (min(a_bits, 8) - 1)) - 1
-    a_scale = jnp.maximum(jnp.max(jnp.abs(x2)), 1e-8) / qmax
+    a_scale = jnp.maximum(
+        jnp.max(jnp.abs(x2), axis=1, keepdims=True), 1e-8) / qmax
     xq = jnp.clip(jnp.round(x2 / a_scale), -qmax, qmax).astype(jnp.int8)
     return xq, a_scale
 
@@ -336,20 +407,23 @@ def qmatmul(x, pw: PackedWeight, cfg: PrecisionConfig, *, bias=None,
     x2 = x.reshape(-1, x.shape[-1])
     xq, a_scale = _prep_activations(x2, pw, a_bits)
 
+    # weight scale (N,) and per-row act scale (M, 1) stay separate — folding
+    # the act scale into the weight scale would re-couple the epilogue to the
+    # batch; the kernels apply acc * scale * a_scale + bias per row.
     scale = pw.scale.reshape(-1).astype(jnp.float32)
-    if a_scale is not None:
-        scale = scale * a_scale
 
     kind = storage_kind(pw)
     fn = resolve(kind, a_bits, pw.bits, backend)
     if block is None and backend == BACKEND_PALLAS and kind != K_CODES:
+        # x2.shape[0] is the LOCAL row count when tracing inside shard_map,
+        # matching the per-device keys serving_tune_plan(…, mesh=…) pre-tunes.
         block = tuning.get_block_sizes(
             x2.shape[0], int(scale.shape[0]), pw.k,
             kind=kind, a_bits=a_bits, w_bits=pw.bits, backend=backend)
     elif block is None:
         block = tuning.DEFAULT_BLOCK       # xla impls ignore tile sizes
     out = fn(xq, pw, scale, bias, block=tuple(block), out_dtype=out_dtype,
-             interpret=interpret)
+             interpret=interpret, a_scale=a_scale)
     return out.reshape(*lead, out.shape[-1])
 
 
@@ -769,10 +843,11 @@ def serving_tune_plan(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
     over the data axes (local M = n_slots / dp; the batch-1 admission chunk
     stays M = chunk_size), and tensor-parallel layers hold local N or K
     divided by the model-axis size (pure-DP models keep tp = 1).  The
-    global-shape keys stay in the plan — today's pjit step functions trace
-    qmatmul with global shapes (the partitioner splits the XLA-backend ops);
-    the local keys are what a shard_map'd Pallas dispatch looks up
-    (ROADMAP open item)."""
+    per-device keys are what the serving hot path actually looks up — every
+    step function dispatches shard_map-first, so qmatmul traces with LOCAL
+    shapes (quantized-act configs included, now that act scales are per-row).
+    The global-shape keys stay in the plan for the no-mesh runtime and the
+    non-pure-DP pjit fallbacks."""
     plan = set()
     m_rows = (int(chunk_size), int(n_slots)) + tuple(int(m) for m in extra_m)
     for (n, k) in model_matmul_shapes(model_cfg):

@@ -13,13 +13,15 @@ from repro.core import packing
 # ---------------------------------------------------------------------------
 # packed_matmul: x @ unpack(Wt)^T * scale (+ bias)
 # ---------------------------------------------------------------------------
-def packed_matmul_ref(x, wt_packed, scale, bits: int, bias=None, out_dtype=jnp.float32):
+def packed_matmul_ref(x, wt_packed, scale, bits: int, bias=None, out_dtype=jnp.float32,
+                      row_scale=None):
     """Reference for the k-bit packed-weight matmul.
 
     x         : (M, K)  int8 activation codes OR float activations
     wt_packed : (N, K // (32/bits)) int32 — W^T packed along K (signed fields)
-    scale     : (N,) float32 per-output-channel dequant scale
-                (weight scale, already folded with act scale where applicable)
+    scale     : (N,) float32 per-output-channel dequant weight scale
+    row_scale : optional (M, 1) float32 per-row activation dequant scale,
+                applied after the weight scale and before the bias
     returns   : (M, N) float
     """
     wt = packing.unpack(wt_packed, bits, signed=True)          # (N, K) int8
@@ -30,6 +32,8 @@ def packed_matmul_ref(x, wt_packed, scale, bits: int, bias=None, out_dtype=jnp.f
     else:
         acc = jnp.dot(x.astype(jnp.float32), wt.T.astype(jnp.float32))
         out = acc * scale[None, :]
+    if row_scale is not None:
+        out = out * row_scale
     if bias is not None:
         out = out + bias[None, :]
     return out.astype(out_dtype)
@@ -38,7 +42,8 @@ def packed_matmul_ref(x, wt_packed, scale, bits: int, bias=None, out_dtype=jnp.f
 # ---------------------------------------------------------------------------
 # ternary_matmul: 2-bit {-1,0,+1} weights, the paper's sign-flip + mux PE
 # ---------------------------------------------------------------------------
-def ternary_matmul_ref(x, wt_packed, alpha, bias=None, out_dtype=jnp.float32):
+def ternary_matmul_ref(x, wt_packed, alpha, bias=None, out_dtype=jnp.float32,
+                       row_scale=None):
     """x: (M,K) int8/float; wt_packed: (N, K//16) int32 of 2-bit signed codes
     in {-1,0,+1}; alpha: (N,) per-feature TWN scale.
 
@@ -52,6 +57,8 @@ def ternary_matmul_ref(x, wt_packed, alpha, bias=None, out_dtype=jnp.float32):
     else:
         acc = jnp.dot(x.astype(jnp.float32), wt.T.astype(jnp.float32))
     out = acc * alpha[None, :]
+    if row_scale is not None:
+        out = out * row_scale
     if bias is not None:
         out = out + bias[None, :]
     return out.astype(out_dtype)
@@ -60,7 +67,8 @@ def ternary_matmul_ref(x, wt_packed, alpha, bias=None, out_dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 # binary_matmul: XNOR + popcount (paper Fig. 1 right)
 # ---------------------------------------------------------------------------
-def binary_matmul_ref(x_packed, wt_packed, k: int, alpha=None, out_dtype=jnp.float32):
+def binary_matmul_ref(x_packed, wt_packed, k: int, alpha=None, out_dtype=jnp.float32,
+                      row_scale=None):
     """1-bit x 1-bit dot products over +/-1 values stored as {1,0} bits.
 
     x_packed  : (M, K//32) int32
@@ -73,6 +81,8 @@ def binary_matmul_ref(x_packed, wt_packed, k: int, alpha=None, out_dtype=jnp.flo
     acc = jnp.dot(a, w.T).astype(jnp.float32)
     if alpha is not None:
         acc = acc * alpha[None, :]
+    if row_scale is not None:
+        acc = acc * row_scale
     return acc.astype(out_dtype)
 
 
@@ -87,6 +97,19 @@ def act_quant_ref(x, bits: int):
 
 
 def act_quant_signed_ref(x, bits: int, scale):
-    """Symmetric signed k-bit with a fixed (precomputed) scale."""
+    """Symmetric signed k-bit with a fixed (precomputed) scale.
+
+    ``scale`` broadcasts against x, so a scalar gives per-tensor codes and an
+    (M, 1) column gives per-row codes."""
     qmax = (1 << (bits - 1)) - 1
     return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+
+
+def act_quant_signed_grouped_ref(x, bits: int, scale):
+    """Fine-grained signed quantization: scale (M, G) with G | F, scale[i, g]
+    covering columns [g*F/G, (g+1)*F/G)."""
+    m, f = x.shape
+    g = scale.shape[1]
+    full = jnp.repeat(scale.astype(jnp.float32), f // g, axis=1)
+    qmax = (1 << (bits - 1)) - 1
+    return jnp.clip(jnp.round(x / full), -qmax, qmax).astype(jnp.int8)

@@ -50,8 +50,9 @@ def qlinear_init(key, k: int, n: int, cfg: ModelConfig, scale: float = None):
 def _serve_matmul(p, x, pcfg: PrecisionConfig):
     """Quantized-serving matmul via the precision-dispatch engine: the
     registry picks the kernel (jnp reference semantics on CPU, Pallas with
-    autotuned tiles on TPU) and handles the dynamic symmetric per-tensor
-    activation quantization for the integer MXU path."""
+    autotuned tiles on TPU) and handles the dynamic symmetric per-row
+    activation quantization for the integer MXU path (row-independent
+    numerics, so the same call is shard_map-safe on local batches)."""
     pw = engine.as_packed_weight(p, pcfg)
     return engine.qmatmul(x, pw, pcfg)
 

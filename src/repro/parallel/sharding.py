@@ -240,6 +240,17 @@ def pool_specs(pool, cfg: ModelConfig, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(spec, pool)
 
 
+def act_scale_specs(cfg: ModelConfig, mesh: Mesh, batch: int):
+    """Spec for fine-grained activation-scale tensors of shape (B, G) /
+    (B*T, G): the scale rows partition over the SAME data axes as the
+    activations they dequantize (kernels/act_quant grouped variants,
+    engine._prep_activations).  Per-row act scales are batch-shaped but not
+    batch-coupled, so they shard row-wise alongside their tensor instead of
+    forcing a replicated per-tensor scalar — the representation that lets
+    quantized-act step functions run under shard_map."""
+    return P(_batch_axes(cfg, mesh, batch), None)
+
+
 def logits_spec(cfg: ModelConfig, mesh: Mesh, batch: int):
     vspec = None if pure_dp(cfg, mesh) else _model_if(cfg.padded_vocab, mesh)
     return P(_batch_axes(cfg, mesh, batch), None, vspec)

@@ -27,10 +27,11 @@ slabs:
     scheduler raises if every active slot is stalled with no admission in
     flight, since no progress is then possible.
   * **Generated-suffix sharing**: ``_release_slot`` and preemption register
-    decode-written blocks in the radix tree (kind ``suffix``) for float-act
-    configs; quantized-act configs register prompt blocks only — their
-    decode KV is batch-shaped (per-tensor dynamic act scales over the whole
-    decode batch), so a B=1 recompute could not reproduce it bit-exactly.
+    decode-written blocks in the radix tree (kind ``suffix``) for EVERY
+    config — dynamic activation quantization is per-row
+    (engine._prep_activations), so decode KV is a per-position function of
+    the token stream and a B=1 recompute reproduces it bit-exactly,
+    quantized-act precisions included.
   * **Prefill chunks** write their KV directly into the owning blocks
     through the page table (no separate admission cache, no slot-join copy).
   * **kv_bits** ∈ {16, 8, 4}: blocks store raw model-dtype KV or int8/int4
@@ -42,9 +43,9 @@ Exactness: with greedy sampling and ``s_max`` aligned to
 lcm(chunk, block_size), paged generations are bit-identical to the dense
 batcher's REGARDLESS of preemption timing — the recompute prefill sees the
 identical token sequence chunk-aligned (matches align down to
-lcm(block, chunk) boundaries), per-position attention math is row-consistent
-across chunk and decode dispatch shapes for float-act stacks, and a
-prefix/suffix-cache hit never changes outputs: matched blocks hold exactly
+lcm(block, chunk) boundaries), per-position attention and per-row activation
+quantization are row-consistent across chunk and decode dispatch shapes, and
+a prefix/suffix-cache hit never changes outputs: matched blocks hold exactly
 the KV the skipped prefill would have recomputed.
 
 Progress: the earliest-admitted active request is never a preemption victim
@@ -149,15 +150,13 @@ class PagedBatcher(ContinuousBatcher):
         # cross-lane byte budget (runtime.adaptive wires one in; None = the
         # lane's own pool is the only limit)
         self._ledger = None
-        # generated-suffix blocks are registrable only when decode KV is a
-        # per-position function of the token stream: float weights or float
-        # activations (quantized-act decode KV sees batch-shaped dynamic act
-        # scales — a B=1 recompute would not reproduce it; ROADMAP note)
-        from repro.core.precision import (A_FLOAT, W_FLOAT, get_precision,
-                                          signed)
+        # generated-suffix blocks register for every precision: decode KV is
+        # a per-position function of the token stream because dynamic act
+        # quantization is per-row (batch-shape-free numerics), so a B=1
+        # recompute reproduces decode-written blocks bit-exactly
+        from repro.core.precision import W_FLOAT, get_precision, signed
         pcfg = signed(get_precision(model.cfg.precision))
-        self._share_suffix = (pcfg.w_mode == W_FLOAT
-                              or pcfg.a_mode == A_FLOAT)
+        self._share_suffix = True
         # ---- self-speculative decoding (draft with a low-bit weight
         # variant, verify with the full-precision weights in ONE windowed
         # decode step; bit-identical to the sequential fp stream) ----------
@@ -175,13 +174,13 @@ class PagedBatcher(ContinuousBatcher):
                 raise ValueError(
                     f"{model.cfg.name}: speculative decoding needs the "
                     "windowed paged decode path (attention-only token LM)")
-            if pcfg.w_mode != W_FLOAT or pcfg.a_mode != A_FLOAT:
+            if pcfg.w_mode != W_FLOAT:
                 raise ValueError(
                     f"{model.cfg.precision}: self-speculative serving needs "
-                    "a float-weight, float-act primary — float weights are "
-                    "what the draft variant packs down from, and dynamic "
-                    "act quantization is batch/chunk-shaped, which would "
-                    "break the verify window's bit-exactness")
+                    "a float-weight primary — float weights are what the "
+                    "draft variant packs down from.  (Quantized-act "
+                    "primaries are fine: per-row act scales keep the verify "
+                    "window's rows bit-identical to sequential decode.)")
             get_precision(self.draft_precision)   # unknown name raises here
         super().__init__(model, params, config, metrics=metrics)
 
@@ -248,25 +247,50 @@ class PagedBatcher(ContinuousBatcher):
             self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
             self._prefill_chunk = jax.jit(chunk_fn, donate_argnums=(2,))
         else:
-            # TP-sharded paged serving: the pool shards KV heads over
-            # 'model' (pool_specs — block/position dims stay shard-local per
-            # the append rule) and the decode batch replicates.  DP-sharding
-            # the pool needs per-shard pools + sharded page tables (open).
+            # Sharded paged serving.  Pure-DP models dispatch shard_map-FIRST
+            # with fully replicated specs: the pool cannot DP-shard (decode
+            # appends write every slot's block — per-device partial writes on
+            # a replicated pool would diverge; per-shard pools + sharded page
+            # tables are the multi-host open item), so each device computes
+            # the full step locally — same data layout as the replicated pjit
+            # it replaces, but qmatmul now traces INSIDE shard_map, so the
+            # tuned Pallas tiles fire for quantized-act configs instead of
+            # XLA partitioning the reference ops.  Non-pure-DP (TP) models
+            # keep pjit: the pool shards KV heads over 'model' (pool_specs —
+            # block/position dims stay shard-local per the append rule) and
+            # the step internals need the partitioner's collectives.
             from jax.sharding import NamedSharding, PartitionSpec as P
             shd = self._shd
             rep = NamedSharding(mesh, P())
             pool_tmpl = jax.eval_shape(
                 lambda: tfm.make_pool(cfg, num_blocks, bs, kv_bits))
-            pool_sh = shd.named_shardings(
-                mesh, shd.pool_specs(pool_tmpl, cfg, mesh))
+            pool_specs = shd.pool_specs(pool_tmpl, cfg, mesh)
+            pool_sh = shd.named_shardings(mesh, pool_specs)
             vspec = tuple(shd.logits_spec(cfg, mesh, 1))[-1]
             logits_sh = NamedSharding(mesh, P(None, None, vspec))
+            decode_fn, jit_chunk_fn = _decode_fn, chunk_fn
+            if shd.pure_dp(cfg, mesh):
+                from repro.parallel._compat import shard_map
+                rep_params = jax.tree_util.tree_map(
+                    lambda l: P(*(None,) * len(l.shape)), self.params)
+                decode_fn = shard_map(
+                    _decode_fn, mesh=mesh,
+                    in_specs=(rep_params, P(None, None), pool_specs,
+                              P(None, None), P(None)),
+                    out_specs=(P(None, None, None), P(None), pool_specs),
+                    check_vma=False)
+                jit_chunk_fn = shard_map(
+                    chunk_fn, mesh=mesh,
+                    in_specs=(rep_params, P(None, None), pool_specs,
+                              P(None, None), P()),
+                    out_specs=(P(None, None, None), pool_specs),
+                    check_vma=False)
             self._decode = jax.jit(
-                _decode_fn, donate_argnums=(2,),
+                decode_fn, donate_argnums=(2,),
                 in_shardings=(self._psh, rep, pool_sh, rep, rep),
                 out_shardings=(logits_sh, rep, pool_sh))
             self._prefill_chunk = jax.jit(
-                chunk_fn, donate_argnums=(2,),
+                jit_chunk_fn, donate_argnums=(2,),
                 in_shardings=(self._psh, rep, pool_sh, rep, rep),
                 out_shardings=(logits_sh, pool_sh))
 
@@ -514,14 +538,12 @@ class PagedBatcher(ContinuousBatcher):
         (so the recompute prefill radix-hits what the victim already
         computed), and at release (so agent-style follow-up prompts reuse
         generated suffixes).  Blocks past the original prompt register as
-        kind ``suffix``, and only for float-act configs."""
+        kind ``suffix``."""
         if self.radix is None:
             return
         toks = self._resume_prompt(req).reshape(-1)[:n_written]
         n_prompt = req.tokens.shape[1] // self.block_size
         full = n_written // self.block_size
-        if not self._share_suffix:
-            full = min(full, n_prompt)
         if full:
             self.radix.insert(toks, self._slot_blocks[slot][:full],
                               suffix_from=n_prompt)

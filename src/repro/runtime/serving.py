@@ -32,9 +32,11 @@ partitioner lowers it without gathering the sharded batch dim).
 Exactness contract: with greedy sampling, generations are bit-identical to
 isolated sequential runs for attention-only stacks (the property suite in
 tests/test_serving.py enforces this).  SSM/hybrid stacks fall back to
-whole-prompt admission (padding tokens would pollute the recurrent state),
-and per-tensor dynamic activation quantization is inherently batch-shaped —
-quantized-act configs are reproducible, not bit-identical across batsizes.
+whole-prompt admission (padding tokens would pollute the recurrent state).
+Dynamic activation quantization is PER-ROW (engine._prep_activations), so
+quantized-act configs share the full contract: each token's codes depend
+only on its own row, making streams identical across batch sizes, shape
+buckets, and shard-local (shard_map) vs global dispatch.
 """
 from __future__ import annotations
 
@@ -398,8 +400,31 @@ class ContinuousBatcher:
         dec_logits_sh = NamedSharding(mesh, shd.logits_spec(cfg, mesh, self.n_slots))
         one_logits_sh = NamedSharding(mesh, shd.logits_spec(cfg, mesh, 1))
 
+        # shard_map-FIRST dispatch (pure-DP): every step function runs
+        # shard-local so qmatmul traces with per-device shapes and the tuned
+        # Pallas tiles from serving_tune_plan(…, mesh=…) actually fire —
+        # quantized-act precisions included, since act scales are per-row
+        # (batch-shape-free numerics).  Decode shards the slot batch over the
+        # data axes; the batch-1 prefill/chunk steps run fully replicated
+        # (each device computes the admission chunk locally instead of
+        # letting the partitioner split the reference ops).  Non-pure-DP
+        # (TP) models keep the pjit path: their step internals need the
+        # partitioner's collectives.
+        pure = shd.pure_dp(cfg, mesh)
+        if pure:
+            from repro.parallel._compat import shard_map
+            rep_params = jax.tree_util.tree_map(
+                lambda l: P(*(None,) * len(l.shape)), self.params)
+            adm_specs = shd.cache_specs(adm_tmpl, cfg, mesh, 1, allow_sp=False)
+            prefill_fn = shard_map(
+                lambda p, b: model.prefill(p, b, self.s_adm), mesh=mesh,
+                in_specs=(rep_params, {"tokens": P(None, None)}),
+                out_specs=(shd.logits_spec(cfg, mesh, 1), adm_specs),
+                check_vma=False)
+        else:
+            prefill_fn = lambda p, b: model.prefill(p, b, self.s_adm)
         self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, self.s_adm),
+            prefill_fn,
             in_shardings=(self._psh, {"tokens": rep}),
             out_shardings=(one_logits_sh, self._adm_cache_sh))
 
@@ -407,10 +432,7 @@ class ContinuousBatcher:
         # nothing in a decode step crosses batch rows, so each device steps
         # its local slots (including the per-token KV row write, which pjit
         # lowered as a cross-device scatter-gather — ROADMAP leftover) and
-        # the compiled step is fully collective-free.  Gated on precisions
-        # without batch-shaped dynamic activation quantization: a per-tensor
-        # act scale computed over the LOCAL batch would change numerics vs
-        # the single-device stream (the exactness contract).
+        # the compiled step is fully collective-free.
         decode_fn = self._decode_fn
         if self._shard_local_decode(cfg, mesh, baxes):
             from repro.parallel._compat import shard_map
@@ -429,8 +451,19 @@ class ContinuousBatcher:
             in_shardings=(self._psh, tok_sh, self._slot_cache_sh, pos_sh),
             out_shardings=(dec_logits_sh, pos_sh, self._slot_cache_sh))
         if self.chunk_size:
+            if pure:
+                from repro.parallel._compat import shard_map
+                chunk_fn = shard_map(
+                    lambda p, t, c, pos: model.prefill_chunk(p, t, c, pos),
+                    mesh=mesh,
+                    in_specs=(rep_params, P(None, None), adm_specs, P()),
+                    out_specs=(shd.logits_spec(cfg, mesh, 1), adm_specs),
+                    check_vma=False)
+            else:
+                chunk_fn = lambda p, t, c, pos: model.prefill_chunk(
+                    p, t, c, pos)
             self._prefill_chunk = jax.jit(
-                lambda p, t, c, pos: model.prefill_chunk(p, t, c, pos),
+                chunk_fn,
                 donate_argnums=(2,),
                 in_shardings=(self._psh, rep, self._adm_cache_sh, rep),
                 out_shardings=(one_logits_sh, self._adm_cache_sh))
@@ -438,15 +471,11 @@ class ContinuousBatcher:
     # ---------------------------------------------------------------- submit
     def _shard_local_decode(self, cfg, mesh, baxes) -> bool:
         """Whether the batched decode step can run shard-local (shard_map):
-        pure-DP (params replicated, no TP collectives inside the step), the
-        slot batch actually sharded, and no batch-shaped numerics (dynamic
-        per-tensor activation quantization sees the whole batch under pjit
-        but only the local shard under shard_map)."""
-        from repro.core.precision import A_FLOAT, W_FLOAT, get_precision, signed
-        if baxes is None or not self._shd.pure_dp(cfg, mesh):
-            return False
-        pcfg = signed(get_precision(cfg.precision))
-        return pcfg.w_mode == W_FLOAT or pcfg.a_mode == A_FLOAT
+        pure-DP (params replicated, no TP collectives inside the step) and
+        the slot batch actually sharded.  No precision gate: dynamic
+        activation quantization is per-row, so local-batch numerics equal
+        global-batch numerics for every config."""
+        return baxes is not None and self._shd.pure_dp(cfg, mesh)
 
     def _validate(self, req: Request):
         """Admission validation; raises a typed AdmissionError subclass

@@ -164,11 +164,13 @@ def test_float_activation_dynamic_quant_path():
     pw = engine.pack_weight(w, cfg)
     x = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32))
     got = engine.qmatmul(x, pw, cfg, backend="xla")
-    # hand-rolled reference of the same dynamic per-tensor quantization
+    # hand-rolled reference of the same dynamic PER-ROW quantization
     qmax = 127.0
-    a_scale = max(float(jnp.max(jnp.abs(x))), 1e-8) / qmax
+    a_scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True),
+                          1e-8) / qmax                       # (M, 1)
     xq = jnp.clip(jnp.round(x / a_scale), -qmax, qmax).astype(jnp.int8)
-    want = ref.ternary_matmul_ref(xq, pw.wt_packed, pw.scale * a_scale)
+    want = ref.ternary_matmul_ref(xq, pw.wt_packed, pw.scale,
+                                  row_scale=a_scale)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
@@ -183,6 +185,50 @@ def test_leading_dims_flattened():
     flat = engine.qmatmul(x.reshape(-1, 128), pw, cfg, backend="xla")
     np.testing.assert_array_equal(np.asarray(out).reshape(-1, 128),
                                   np.asarray(flat))
+
+
+class _FakeMesh:
+    """Axis-shape stand-in: serving_tune_plan only reads mesh.shape /
+    mesh.axis_names, so per-shard key planning is testable without 8 real
+    devices."""
+
+    def __init__(self, **shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_serving_tune_keys_per_shard_quantized_act(tmp_cache):
+    """tune_serving_shapes(…, mesh=…) must key the cache on the per-shard
+    (LOCAL) M that the shard_map step functions dispatch for quantized-act
+    configs — a plan keyed only on global M would make every sharded decode
+    step a silent tuning-cache miss (regression: the pjit-era plan comment
+    called local keys an open item)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.precision import signed
+    from repro.models import reduce_for_smoke
+
+    cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                              precision="2xT")
+    pcfg = signed(get_precision("2xT"))
+    mesh = _FakeMesh(data=8, model=1)
+    plan = engine.serving_tune_plan(cfg, pcfg, n_slots=8, chunk_size=4,
+                                    mesh=mesh)
+    # dp=8 shards the 8-slot decode batch down to 1 local row per device
+    assert any(m == 1 for (m, _, _) in plan), plan
+
+    engine.tune_serving_shapes(cfg, pcfg, n_slots=8, chunk_size=4, mesh=mesh,
+                               candidates=[(8, 64, 16)], iters=1)
+    for (m, n, k) in plan:
+        assert tuning.lookup(m, n, k, kind=W_TERNARY, a_bits=2, w_bits=2,
+                             backend="pallas") is not None, (m, n, k)
+    # dispatch-time lookup at the local decode bucket is a HIT, not a miss
+    tuning.reset()
+    n, k = 128, 128      # wq shard shape of the reduced config at tp=1
+    tuning.get_block_sizes(1, n, k, kind=W_TERNARY, a_bits=2,
+                           w_bits=2, backend="pallas")
+    assert tuning.stats() == {"hits": 1, "misses": 0, "sweeps": 0}
 
 
 # ---------------------------------------------------------------------------

@@ -78,8 +78,9 @@ def test_qmatmul_golden_vs_oracle(name, shape, backend):
 
 @pytest.mark.parametrize("name", CONFIGS)
 def test_float_activations_golden(name):
-    """Float inputs route through the dynamic per-tensor quantizer; the
-    oracle replicates it, so the backends must agree with it exactly."""
+    """Float inputs route through the dynamic PER-ROW quantizer; the oracle
+    replicates it (an (M, 1) scale column broadcasting over the output rows),
+    so the backends must agree with it exactly."""
     m, n, k = 9, 128, 96
     pcfg = signed(get_precision(name))
     w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
@@ -87,10 +88,34 @@ def test_float_activations_golden(name):
     x = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32))
     a_bits = 0 if pcfg.a_bits > 8 else pcfg.a_bits
     xq, a_scale = engine._prep_activations(x, pw, a_bits)
-    scale = 1.0 if a_scale is None else a_scale
-    want = np.asarray(_oracle(xq, pw)) * np.float32(scale)
+    want = np.asarray(_oracle(xq, pw))
+    if a_scale is not None:
+        assert a_scale.shape == (m, 1)      # per-row, never batch-coupled
+        want = want * np.asarray(a_scale, np.float32)
     got = np.asarray(engine.qmatmul(x, pw, pcfg, backend="xla"))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", CONFIGS)
+def test_float_rows_dispatch_consistently(name):
+    """THE property that unlocks shard_map serving for quantized-act
+    configs: with per-row dynamic scales, a row's output is independent of
+    which batch it was computed in — float inputs included.  Sub-batches
+    (a shard's local rows, a smaller M bucket, a B=1 recompute) must be
+    bit-identical to the same rows inside the full batch, on both
+    backends."""
+    n, k = 128, 96
+    pcfg = signed(get_precision(name))
+    pw = engine.pack_weight(
+        jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32)), pcfg)
+    x = jnp.asarray(RNG.normal(size=(16, k)).astype(np.float32))
+    for backend in (engine.BACKEND_XLA, engine.BACKEND_PALLAS):
+        full = np.asarray(engine.qmatmul(x, pw, pcfg, backend=backend,
+                                         interpret=True))
+        for lo, hi in ((0, 2), (2, 16), (5, 6), (0, 16)):
+            part = np.asarray(engine.qmatmul(x[lo:hi], pw, pcfg,
+                                             backend=backend, interpret=True))
+            np.testing.assert_array_equal(part, full[lo:hi])
 
 
 @pytest.mark.parametrize("name", CONFIGS)

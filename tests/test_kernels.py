@@ -154,6 +154,42 @@ def test_act_quant_signed_matches_ref(bits):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# every serving M-bucket must quantize — including M not divisible by the
+# row block (regression: `assert m % bm == 0` rejected M=384 with bm=256)
+@pytest.mark.parametrize("m,bm", [(384, 256), (1, 32), (5, 4), (257, 256),
+                                  (33, 32), (96, 64)])
+def test_act_quant_non_divisible_m(m, bm):
+    x = jnp.asarray(RNG.uniform(-0.5, 1.5, size=(m, 64)).astype(np.float32))
+    got = act_quant(x, bits=4, bm=bm, interpret=True)
+    assert got.shape == (m, 64)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.act_quant_ref(x, 4)))
+    xn = jnp.asarray(RNG.normal(size=(m, 64)).astype(np.float32))
+    scale = jnp.asarray(np.float32(0.11))
+    got_s = act_quant_signed(xn, scale, bits=8, bm=bm, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got_s), np.asarray(ref.act_quant_signed_ref(xn, 8, scale)))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("m,g", [(32, 1), (32, 4), (13, 1), (384, 8)])
+def test_act_quant_signed_grouped_matches_ref(bits, m, g):
+    """Fine-grained (per-row / per-group) scales: batch-free scale SHAPE per
+    row means the codes of any row slice equal that slice of the full batch's
+    codes — the property the serving shard_map dispatch relies on."""
+    from repro.kernels import act_quant_signed_grouped
+    f = 64
+    x = jnp.asarray(RNG.normal(size=(m, f)).astype(np.float32))
+    scale = jnp.asarray(RNG.uniform(0.05, 0.5, (m, g)).astype(np.float32))
+    got = act_quant_signed_grouped(x, scale, bits=bits, bm=32, interpret=True)
+    want = ref.act_quant_signed_grouped_ref(x, bits, scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # row-slice consistency
+    got_rows = act_quant_signed_grouped(x[:3], scale[:3], bits=bits, bm=32,
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_rows), np.asarray(got)[:3])
+
+
 # ---------------------------------------------------------------------------
 # end-to-end dispatch: pack_weight + quantized_matmul across configs
 # ---------------------------------------------------------------------------

@@ -270,26 +270,35 @@ def test_generated_suffix_shared_with_followup_turns():
     assert paged.metrics.prefix_hit_tokens >= 8     # ...plus the old prompt
 
 
-def test_quantized_act_configs_register_prompt_blocks_only():
-    """ROADMAP gate: decode KV of quantized-act configs is batch-shaped
-    (per-tensor dynamic act scales over the decode batch), so generated
-    suffixes must NOT enter the radix tree — only prompt blocks do."""
+def test_quantized_act_configs_register_generated_suffixes():
+    """The old ROADMAP gate is GONE: per-row dynamic act scales make decode
+    KV a per-position function of the token stream, so quantized-act configs
+    register generated-suffix radix nodes like every other precision — and a
+    follow-up turn that radix-hits those decode-written blocks streams
+    bit-identically to a cold run of the same prompt."""
+    from repro.models import to_serving
     cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
                               dtype="float32", precision="2xT")
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    paged = PagedBatcher(model, params,
-        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4))
-    assert not paged._share_suffix
-    _run(paged, [_prompt(8, 9, cfg.vocab)], max_new=8)
-    # 8-token prompt -> 2 full prompt blocks; the 7 decode-written
-    # positions would add a suffix block if the gate were open
-    assert len(paged.radix) == 2
+    params = to_serving(model.init(jax.random.PRNGKey(0)), cfg)
+    mk = lambda **kw: PagedBatcher(model, params, ServingConfig(
+        n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4, **kw))
+    paged = mk()
+    assert paged._share_suffix
+    p = _prompt(8, 9, cfg.vocab)
+    r0 = Request(rid=0, tokens=p, options=RequestOptions(max_new=8))
+    paged.submit(r0)
+    paged.run()
+    # 8-token prompt -> 2 prompt blocks, plus decode-written suffix block(s)
+    assert len(paged.radix) > 2
 
-    _, model0, params0 = _setup()
-    fp = PagedBatcher(model0, params0,
-        ServingConfig(n_slots=1, s_max=S_MAX, chunk_size=4, kv_bits=16, block_size=4))
-    assert fp._share_suffix
+    turn2 = np.concatenate([p, np.asarray(r0.output, np.int32)[None]], axis=1)
+    r1 = Request(rid=1, tokens=turn2, options=RequestOptions(max_new=4))
+    paged.submit(r1)
+    paged.run()
+    assert paged.metrics.suffix_hit_tokens > 0      # generated KV reused
+    cold = mk(prefix_cache=False)
+    assert _run(cold, [turn2], max_new=4) == {0: r1.output}
 
 
 def test_prefix_sharing_between_concurrent_requests():

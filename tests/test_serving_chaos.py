@@ -25,6 +25,12 @@ preemption firing under overcommit, a recompute that rides the suffix cache
 end-to-end (zero recomputed tokens), and stall-mode completion vs detected
 deadlock.
 
+A quantized-act section (2xT: ternary weights, 2-bit activations) runs the
+same chaos against a serving-form quantized model — per-row dynamic act
+scales make those numerics row-independent, so suffix sharing and
+preemption-recompute are no longer carved out for quantized-act configs
+and must survive the identical fuzz.
+
 Runs with real ``hypothesis`` when installed (CI) and the deterministic
 fallback in conftest.py otherwise.  ``REPRO_SERVING_EXAMPLES`` scales the
 example count (CI's chaos-fuzz step raises it).
@@ -356,6 +362,120 @@ def test_pool_check_catches_seeded_corruption():
     p._ref[0] = 0                                  # null block unpinned
     with pytest.raises(RuntimeError, match="pin"):
         p.check([blocks], ())
+
+
+# ---------------------------------------------------------------------------
+# quantized-act chaos: the retired carve-out, fuzzed
+# ---------------------------------------------------------------------------
+def _setup_quant():
+    """2xT serving-form model (ternary weights, 2-bit activations): the
+    quantized-act precision whose tuned Pallas kernels fire under serving.
+    Packed serving params are built once and shared across examples."""
+    if "quant" not in _STATE:
+        _setup()
+        from repro.models import to_serving
+        cfg = dataclasses.replace(_STATE["cfg"], precision="2xT")
+        model = build_model(cfg)
+        params = to_serving(model.init(jax.random.PRNGKey(0)), cfg)
+        _STATE["quant"] = (model, params)
+    model, params = _STATE["quant"]
+    return model.cfg, model, params
+
+
+def _qbatcher(kind, n_slots, pool_blocks):
+    """Memoized quantized-act batchers (same rationale as ``_batcher``:
+    bounded jit compiles, pre-populated radix chaos)."""
+    key = ("q2xT", kind, n_slots, pool_blocks)
+    cache = _STATE["batchers"]
+    if key not in cache:
+        _, model, params = _setup_quant()
+        if kind == "dense":
+            cache[key] = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=CHUNK))
+        else:
+            cache[key] = PagedBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=S_MAX, chunk_size=CHUNK, kv_bits=16, block_size=BLOCK, num_blocks=1 + pool_blocks))
+    return cache[key]
+
+
+def _qoracle(prompt, max_new):
+    """Sequential single-request quantized-act stream: a one-slot dense
+    batcher of the same precision (the kv_bits=8 rationale applies — the
+    oracle is the sequential run of the same CHUNK-granular serving
+    numerics).  Per-row act scales are what make this comparable at all:
+    a row's quantization never depends on its batch neighbours, so the
+    one-slot run and the chaos run see bit-identical per-token numerics."""
+    key = ("q2xT", prompt.tobytes(), prompt.shape[1], max_new)
+    memo = _STATE["memo"]
+    if key not in memo:
+        solo = _qbatcher("dense", 1, 0)
+        req = Request(rid=0, tokens=prompt,
+        options=RequestOptions(max_new=max_new))
+        solo.submit(req)
+        solo.run()
+        memo[key] = req.output
+    return memo[key]
+
+
+@settings(max_examples=EXAMPLES, deadline=None, derandomize=True)
+@given(groups=st.lists(st.integers(0, 2), min_size=N_REQ, max_size=N_REQ),
+       lengths=st.lists(st.integers(2, 10), min_size=N_REQ, max_size=N_REQ),
+       budgets=st.lists(st.integers(4, 16), min_size=N_REQ, max_size=N_REQ),
+       arrivals=st.lists(st.integers(0, 6), min_size=N_REQ, max_size=N_REQ),
+       n_req=st.integers(3, N_REQ),
+       n_slots=st.sampled_from([2, 3]),
+       pool_blocks=st.sampled_from(POOL_CHOICES),
+       salt=st.integers(0, 3))
+def test_chaos_quantized_act_streams_with_suffix_sharing(
+        groups, lengths, budgets, arrivals, n_req, n_slots, pool_blocks,
+        salt):
+    """Quantized-act serving used to gate out radix suffix sharing; the gate
+    is gone, so the 2xT paged batcher must survive the same chaos as float:
+    random arrivals x tiny pools x prefix-heavy prompts, with eviction,
+    preemption-recompute and generated-suffix reuse all enabled — and every
+    stream bit-equal to the sequential one-slot oracle of the same
+    precision."""
+    cfg, _, _ = _setup_quant()
+    groups, lengths = groups[:n_req], lengths[:n_req]
+    arrivals = arrivals[:n_req]
+    budgets = [max(1, min(b, pool_blocks * BLOCK - ln + 1, S_MAX - ln))
+               for b, ln in zip(budgets[:n_req], lengths)]
+    prompts = [_prompt(g, ln, salt * N_REQ + i, cfg.vocab)
+               for i, (g, ln) in enumerate(zip(groups, lengths))]
+    want = {i: _qoracle(p, budgets[i]) for i, p in enumerate(prompts)}
+
+    paged = _qbatcher("paged", n_slots, pool_blocks)
+    assert paged._share_suffix          # the quantized-act carve-out is gone
+    reqs = [Request(rid=i, tokens=p,
+        options=RequestOptions(max_new=budgets[i]))
+            for i, p in enumerate(prompts)]
+    got = _drive(paged, reqs, arrivals)
+    assert got == want, (groups, lengths, budgets, arrivals, n_slots,
+                         pool_blocks, salt)
+    _assert_drained(paged)
+
+
+def test_quantized_act_second_turn_rides_generated_suffix():
+    """Deterministic pin for what the fuzz only probably reaches: a 2xT
+    follow-up turn (prompt + generated tokens) radix-hits the decode-written
+    suffix blocks — ``suffix_hit_tokens`` moves — and still streams
+    bit-identically to the sequential oracle of the extended prompt."""
+    cfg, _, _ = _setup_quant()
+    paged = _qbatcher("paged", 1, 8)
+    p = _prompt(0, 8, 0, cfg.vocab)                 # two block-aligned blocks
+    r0 = Request(rid=0, tokens=p, options=RequestOptions(max_new=8))
+    paged.submit(r0)
+    paged.run()
+    assert len(paged.radix) > 2          # prompt blocks AND generated suffix
+
+    turn2 = np.concatenate([p, np.asarray(r0.output, np.int32)[None]], axis=1)
+    base = paged.metrics.suffix_hit_tokens
+    r1 = Request(rid=1, tokens=turn2, options=RequestOptions(max_new=4))
+    paged.submit(r1)
+    paged.run()
+    assert paged.metrics.suffix_hit_tokens > base   # generated KV was reused
+    assert r1.output == _qoracle(turn2, 4)
+    _assert_drained(paged)
 
 
 # ---------------------------------------------------------------------------

@@ -120,6 +120,43 @@ print("TP_GOLDEN_OK")
 """
 
 
+QUANT_GOLDEN = _PRELUDE + r"""
+# ---- quantized-act (2xT) serving form: the fixed scale representation -----
+# Per-row dynamic act scales make quantized-act numerics independent of the
+# batch a row rides in, so the shard_map-local step functions (per-device
+# sub-batches) must reproduce the no-mesh streams BIT-identically — dense
+# and paged, dp / single / mixed meshes.
+from repro.runtime.kvcache import PagedBatcher
+
+cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
+                          dtype="float32", precision="2xT", n_layers=2)
+model = build_model(cfg)
+params = to_serving(model.init(jax.random.PRNGKey(0)), cfg)
+
+def qserve(kind, mesh, n_reqs=4, max_new=6):
+    rng = np.random.default_rng(0)
+    extra = {"kv_bits": 8, "block_size": 4} if kind == "paged" else {}
+    b = (PagedBatcher if kind == "paged" else ContinuousBatcher)(
+        model, params,
+        ServingConfig(n_slots=8, s_max=24, chunk_size=4, mesh=mesh, **extra))
+    for i in range(n_reqs):
+        b.submit(Request(rid=i, tokens=rng.integers(
+            0, cfg.vocab, (1, 5 + i)).astype(np.int32),
+            options=RequestOptions(max_new=max_new)))
+    done = b.run()
+    assert len(done) == n_reqs, (kind, len(done))
+    return {r.rid: r.output for r in done}
+
+for kind in ("dense", "paged"):
+    base = qserve(kind, None)
+    for spec in [(1, 1), (8, 1), (2, 4)]:
+        got = qserve(kind, make_mesh(*spec))
+        assert got == base, (kind, spec, got, base)
+        print(f"QUANT_{kind.upper()}_{spec[0]}x{spec[1]}_OK")
+print("QUANT_GOLDEN_OK")
+"""
+
+
 PAPER_SWEEP = _PRELUDE + r"""
 from repro.core.precision import PAPER_CONFIGS
 
@@ -156,6 +193,15 @@ def test_serving_spmd_mesh_golden_8dev():
     for marker in ("DP_GOLDEN_OK", "DECODE_HLO_OK", "CHUNK_HLO_OK",
                    "CACHE_ROUNDTRIP_OK", "TP_GOLDEN_OK"):
         assert marker in stdout, stdout[-2000:]
+
+
+def test_serving_spmd_quantized_act_mesh_golden_8dev():
+    """ISSUE 7 acceptance: quantized-act (2xT) dense AND paged serving
+    streams are bit-identical to the no-mesh run across dp (8,1), trivial
+    (1,1) and mixed (2,4) meshes — per-row act scales keep shard-local
+    sub-batches on the same numerics as the global batch."""
+    stdout = _run(QUANT_GOLDEN)
+    assert "QUANT_GOLDEN_OK" in stdout, stdout[-2000:]
 
 
 @pytest.mark.slow
