@@ -62,7 +62,7 @@ def run(precisions=None, m=64, n=256, k=512, iters=2, smoke=True,
     # every shape — must be all hits, zero sweeps (serving never re-tunes).
     tuning.reset()
     before = tuning.stats()
-    for name, cfg in cfgs:
+    for _name, cfg in cfgs:
         engine.autotune_matmul(cfg, m, n, k, backend="pallas",
                                candidates=candidates, iters=iters)
     after = tuning.stats()

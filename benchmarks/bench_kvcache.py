@@ -64,7 +64,7 @@ def _shared_prefix_requests(cfg, rng):
     PREFIX_LEN-token prefix and differs in a short suffix."""
     reqs = []
     rid = 0
-    for g in range(GROUPS):
+    for _ in range(GROUPS):
         prefix = rng.integers(0, cfg.vocab, (PREFIX_LEN,))
         for _ in range(PER_GROUP):
             suffix = rng.integers(0, cfg.vocab, (int(rng.integers(3, 8)),))

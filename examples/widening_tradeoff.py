@@ -60,7 +60,7 @@ def main():
                            pm.GOPS["alexnet"], 2.0)),
     ]
     results = []
-    for name, cfg, width, modeled in runs:
+    for name, cfg, _width, modeled in runs:
         loss = train_eval(cfg, args.steps)
         results.append((name, loss, modeled))
         print(f"{name}: eval_loss={loss:.4f}  "

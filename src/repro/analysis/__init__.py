@@ -1,0 +1,56 @@
+"""Static analysis & invariant auditing.
+
+Two passes, one front door (``python -m repro.analysis audit``):
+
+  * the **compile-time contract checker** (:mod:`repro.analysis.rules`)
+    traces/lowers every serving step function across the config matrix
+    (:mod:`repro.analysis.steps`) and walks the jaxpr + compiled HLO to
+    enforce declarative rules — no collectives on pure-DP steps, tuned
+    Pallas kernels actually firing, per-row activation scales, cache
+    donation, warm tuning keys;
+  * the **AST architecture linter** (:mod:`repro.analysis.astlint`)
+    enforces structural contracts over the repo's own sources — kernel
+    modules private to the engine, no legacy constructor kwargs outside
+    the shim, no ServingConfig bypass, no host syncs in hot loops.
+
+The shared HLO walker (:mod:`repro.analysis.hlo`) is also the single
+implementation behind ``launch/hlo_cost.py`` and ``launch/dryrun.py``'s
+collective reporting.
+
+Attribute access is lazy so importing ``repro.analysis`` (e.g. from the
+CLI) does not initialize jax — the CLI must be able to set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "hlo": ".hlo",
+    "jaxpr_walker": ".jaxpr_walker",
+    "astlint": ".astlint",
+    "rules": ".rules",
+    "steps": ".steps",
+    "report": ".report",
+    "cli": ".cli",
+    # conveniences
+    "audit_step": (".rules", "audit_step"),
+    "Finding": (".report", "Finding"),
+    "Report": (".report", "Report"),
+    "StepSpec": (".report", "StepSpec"),
+    "analyze_hlo_text": (".hlo", "analyze_hlo_text"),
+    "parse_collectives": (".hlo", "parse_collectives"),
+    "parse_hlo": (".hlo", "parse_hlo"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    import importlib
+    spec = _LAZY.get(name)
+    if spec is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}")
+    if isinstance(spec, tuple):
+        mod = importlib.import_module(spec[0], __name__)
+        return getattr(mod, spec[1])
+    return importlib.import_module(spec, __name__)

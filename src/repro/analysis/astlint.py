@@ -1,0 +1,232 @@
+"""Architecture linter: custom rules over the ``ast`` of the repo's own
+sources (the ruff-plugin shape, but for contracts ruff can't know).
+
+  ==========================  ===========================================
+  rule id                     contract
+  ==========================  ===========================================
+  kernel-import-boundary      the raw matmul kernel modules
+                              (binary/ternary/packed_matmul) are private
+                              to the engine — no imports outside
+                              ``src/repro/kernels/``
+  legacy-kwargs               the deprecated loose constructor kwargs
+                              (``n_slots=``, ``max_new=``, ...) appear
+                              only inside the back-compat shim and its
+                              deprecation tests
+  batcher-config-bypass       every ContinuousBatcher/PagedBatcher
+                              construction passes a ServingConfig (third
+                              positional arg or ``config=``)
+  device-get-in-hot-loop      no ``jax.device_get`` inside scheduler hot
+                              loops (``step``/``run`` and their helpers)
+                              — host syncs there serialize the device
+  ==========================  ===========================================
+
+Findings reuse :class:`repro.analysis.report.Finding` with
+``step = "<path>:<lineno>"`` so the CLI and pytest render them uniformly
+with the compile-time contract checker.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from .report import Finding
+
+_KERNEL_MODULES = ("binary_matmul", "ternary_matmul", "packed_matmul")
+_BATCHERS = ("ContinuousBatcher", "PagedBatcher")
+_HOT_LOOP_FNS = ("step", "run")
+_HOT_LOOP_PREFIXES = ("_step", "_sample", "_advance")
+
+# fallback copies for when the runtime package isn't importable (the shim in
+# runtime/serving.py stays the source of truth — see _legacy_kwargs())
+_FALLBACK_BATCHER_KWARGS = (
+    "n_slots", "s_max", "prompt_len", "chunk_size", "autotune", "mesh",
+    "kv_bits", "block_size", "num_blocks", "pool_bytes", "prefix_cache",
+    "reserve", "preemption")
+_FALLBACK_REQUEST_KWARGS = (
+    "max_new", "eos_id", "temperature", "top_k", "seed", "on_token")
+
+# per-rule path-prefix exemptions (repo-relative, forward slashes)
+DEFAULT_EXEMPT = {
+    "kernel-import-boundary": ("src/repro/kernels/", "tests/test_kernels.py"),
+    "legacy-kwargs": ("src/repro/runtime/serving.py",
+                      "tests/test_serving_api.py"),
+    "batcher-config-bypass": ("src/repro/runtime/serving.py",
+                              "tests/test_serving_api.py"),
+    "device-get-in-hot-loop": (),
+}
+
+AST_RULES = tuple(DEFAULT_EXEMPT)
+
+
+def _legacy_kwargs():
+    try:
+        from repro.runtime.serving import (_LEGACY_BATCHER_KWARGS,
+                                           _LEGACY_REQUEST_KWARGS)
+        return tuple(_LEGACY_BATCHER_KWARGS), tuple(_LEGACY_REQUEST_KWARGS)
+    except Exception:  # pragma: no cover - runtime package unavailable
+        return _FALLBACK_BATCHER_KWARGS, _FALLBACK_REQUEST_KWARGS
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _is_jax_device_get(node: ast.Call) -> bool:
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == "device_get"
+            and isinstance(f.value, ast.Name) and f.value.id == "jax")
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, rules: tuple):
+        self.path = path
+        self.rules = rules
+        self.findings: list[Finding] = []
+        self._fn_stack: list[str] = []
+        self._batcher_kw, self._request_kw = _legacy_kwargs()
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, step=f"{self.path}:{node.lineno}", message=message,
+            locus=ast.unparse(node)[:160] if hasattr(ast, "unparse") else ""))
+
+    # ---- kernel-import-boundary ------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        if "kernel-import-boundary" in self.rules:
+            for alias in node.names:
+                tail = alias.name.rsplit(".", 1)[-1]
+                if tail in _KERNEL_MODULES:
+                    self._emit("kernel-import-boundary", node,
+                               f"direct import of kernel module "
+                               f"{alias.name!r} — go through "
+                               "repro.kernels.engine (qmatmul)")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if "kernel-import-boundary" in self.rules and node.module:
+            tail = node.module.rsplit(".", 1)[-1]
+            hits = [node.module] if tail in _KERNEL_MODULES else \
+                [f"{node.module}.{a.name}" for a in node.names
+                 if a.name in _KERNEL_MODULES]
+            for mod in hits:
+                self._emit("kernel-import-boundary", node,
+                           f"direct import from kernel module "
+                           f"{mod!r} — go through "
+                           "repro.kernels.engine (qmatmul)")
+        self.generic_visit(node)
+
+    # ---- function-scope tracking (hot-loop rule) -------------------------
+    def _visit_fn(self, node) -> None:
+        self._fn_stack.append(node.name)
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def _in_hot_loop(self) -> bool:
+        return any(name in _HOT_LOOP_FNS
+                   or name.startswith(_HOT_LOOP_PREFIXES)
+                   for name in self._fn_stack)
+
+    # ---- call rules -------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node)
+        kw_names = {kw.arg for kw in node.keywords if kw.arg}
+
+        if "legacy-kwargs" in self.rules:
+            legacy = ()
+            if name in _BATCHERS:
+                legacy = sorted(kw_names & set(self._batcher_kw))
+            elif name == "Request":
+                legacy = sorted(kw_names & set(self._request_kw))
+            if legacy:
+                self._emit("legacy-kwargs", node,
+                           f"{name}() called with deprecated legacy "
+                           f"kwargs {legacy} — use "
+                           + ("ServingConfig" if name in _BATCHERS
+                              else "RequestOptions"))
+
+        if "batcher-config-bypass" in self.rules and name in _BATCHERS:
+            has_cfg = len(node.args) >= 3 or "config" in kw_names
+            if not has_cfg:
+                self._emit("batcher-config-bypass", node,
+                           f"{name}() constructed without a ServingConfig "
+                           "(pass it as the third argument or config=)")
+
+        if "device-get-in-hot-loop" in self.rules \
+                and _is_jax_device_get(node) and self._in_hot_loop():
+            self._emit("device-get-in-hot-loop", node,
+                       f"jax.device_get inside hot loop "
+                       f"{'.'.join(self._fn_stack)}() — host sync "
+                       "serializes the device; batch transfers outside "
+                       "the loop")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str, rules=None) -> list[Finding]:
+    """Lint one file's source text.  ``rules`` defaults to every AST rule;
+    exemptions are NOT applied here (callers own path policy)."""
+    rules = tuple(rules) if rules is not None else AST_RULES
+    unknown = [r for r in rules if r not in AST_RULES]
+    if unknown:
+        raise KeyError(f"unknown AST rule(s) {unknown}; known: "
+                       f"{sorted(AST_RULES)}")
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="syntax-error", step=f"{path}:{e.lineno or 0}",
+                        message=str(e))]
+    v = _Visitor(path, rules)
+    v.visit(tree)
+    return v.findings
+
+
+def _iter_py_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in ("__pycache__", ".git", ".venv")]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def lint_paths(paths, *, repo_root: str | None = None, rules=None,
+               exempt=None) -> list[Finding]:
+    """Lint files/directories.  Paths in findings are repo-root-relative;
+    ``exempt`` (rule -> path-prefix tuple) defaults to
+    :data:`DEFAULT_EXEMPT` — the shim and raw-kernel tests legitimately
+    touch what the rules forbid elsewhere."""
+    rules = tuple(rules) if rules is not None else AST_RULES
+    exempt = dict(DEFAULT_EXEMPT) if exempt is None else dict(exempt)
+    repo_root = repo_root or os.getcwd()
+    findings: list[Finding] = []
+    files: list[str] = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(repo_root, p)
+        if os.path.isdir(full):
+            files.extend(_iter_py_files(full))
+        elif os.path.isfile(full):
+            files.append(full)
+    for f in files:
+        rel = os.path.relpath(f, repo_root).replace(os.sep, "/")
+        active = tuple(r for r in rules
+                       if not any(rel.startswith(pfx)
+                                  for pfx in exempt.get(r, ())))
+        if not active:
+            continue
+        with open(f, encoding="utf-8") as fh:
+            src = fh.read()
+        findings.extend(lint_source(src, rel, rules=active))
+    return findings
+
+
+def default_lint_roots(repo_root: str) -> list[str]:
+    """The source trees the architecture linter covers by default."""
+    return [p for p in ("src/repro", "tests", "benchmarks", "examples")
+            if os.path.isdir(os.path.join(repo_root, p))]

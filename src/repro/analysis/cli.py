@@ -1,0 +1,122 @@
+"""``python -m repro.analysis audit`` — the front door.
+
+Runs both passes over the serving-relevant config matrix:
+
+  * the compile-time contract checker (trace + lower every serving step
+    function per {cell, mesh} and enforce the declarative rules), and
+  * the AST architecture linter over the repo's own sources,
+
+then prints a summary and exits non-zero on any finding.  ``--json`` writes
+the structured report (CI uploads it as an artifact).
+
+The checker needs a multi-device CPU: when fewer than 8 devices are visible
+and jax hasn't initialized yet, the CLI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` itself (this is why
+``repro.analysis`` imports jax lazily).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _ensure_virtual_devices() -> None:
+    if "jax" in sys.modules:           # too late to change device count
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def _parse_mesh(spec: str):
+    if spec in ("none", "null"):
+        return None
+    d, m = spec.split(",")
+    return (int(d), int(m))
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/cli.py -> repo root is three levels above src/
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    return os.path.dirname(root) if os.path.basename(root) == "src" else root
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static verification of kernel/sharding/precision "
+                    "contracts")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    ap_audit = sub.add_parser(
+        "audit", help="trace+lower every serving step across the config "
+                      "matrix and lint the sources")
+    ap_audit.add_argument(
+        "--configs", nargs="*", default=None, metavar="CELL",
+        help="audit cell names (default: the full matrix; see "
+             "repro.analysis.steps.CELLS)")
+    ap_audit.add_argument(
+        "--mesh", nargs="*", default=None, metavar="D,M",
+        help='mesh shapes like "8,1" (or "none"); default: each cell\'s '
+             "own mesh list")
+    ap_audit.add_argument("--json", nargs="?", const="-", default=None,
+                          metavar="PATH", help="write the JSON report "
+                          "(PATH, or stdout with no value)")
+    ap_audit.add_argument("--no-lint", action="store_true",
+                          help="skip the AST architecture linter pass")
+    ap_audit.add_argument("--no-steps", action="store_true",
+                          help="skip the compile-time contract checker pass")
+
+    ap_lint = sub.add_parser("lint", help="run only the AST linter")
+    ap_lint.add_argument("paths", nargs="*", default=None)
+
+    args = ap.parse_args(argv)
+    from .report import Report
+    report = Report()
+    root = _repo_root()
+
+    if args.cmd == "lint" or (args.cmd == "audit" and not args.no_lint):
+        from . import astlint
+        paths = getattr(args, "paths", None) or \
+            astlint.default_lint_roots(root)
+        lint_findings = astlint.lint_paths(paths, repo_root=root)
+        report.extend(lint_findings, cell="astlint")
+        report.checked.append({"cell": "astlint", "paths": list(paths),
+                               "rules": list(astlint.AST_RULES)})
+
+    if args.cmd == "audit" and not args.no_steps:
+        _ensure_virtual_devices()
+        from .steps import CELLS, audit_cell, cell_by_name
+        cells = ([cell_by_name(n) for n in args.configs]
+                 if args.configs else list(CELLS))
+        meshes_override = ([_parse_mesh(m) for m in args.mesh]
+                           if args.mesh else None)
+        cache: dict = {}
+        for cell in cells:
+            meshes = meshes_override if meshes_override is not None \
+                else list(cell.meshes)
+            for mesh_shape in meshes:
+                label = f"{cell.name}@{mesh_shape}"
+                print(f"[audit] {label} ...", flush=True)
+                findings, checked = audit_cell(cell, mesh_shape,
+                                               _cache=cache)
+                report.extend(findings, cell=label)
+                report.checked.extend(checked)
+
+    out_json = getattr(args, "json", None)
+    if out_json == "-":
+        print(report.to_json())
+    elif out_json:
+        with open(out_json, "w", encoding="utf-8") as f:
+            f.write(report.to_json() + "\n")
+        print(f"[audit] report written to {out_json}")
+    print(report.summary())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":          # pragma: no cover - exercised via -m
+    raise SystemExit(main())

@@ -1,0 +1,136 @@
+"""Recursive jaxpr traversal + the quantized-operand dtype dataflow walk.
+
+Two contract rules are grounded here:
+
+  * ``pallas_call_present`` — does a ``pallas_call`` primitive appear
+    anywhere in the traced step (i.e. a tuned kernel actually fired, rather
+    than the xla-fallback registration dispatching a plain dot_general)?
+  * ``no_f32_upcast_of_quantized_operands`` — no quantized (int8-family)
+    tensor is dequantized to float and fed to a ``dot_general`` *outside* a
+    Pallas kernel.  In-kernel dequant is the tuned path and is fine, so the
+    walk deliberately does NOT descend into ``pallas_call`` sub-jaxprs.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from collections.abc import Iterator
+
+# primitives that move quantized payloads without changing their provenance
+_PASS_PRIMS = {"convert_element_type", "reshape", "transpose",
+               "broadcast_in_dim", "squeeze", "slice", "copy"}
+# elementwise prims that keep provenance when the co-operand is a constant
+# (the ``convert(int8) * literal_scale`` dequant idiom); array-valued scale
+# factors (e.g. per-position KV scales in the reference attention path) are
+# deliberately NOT propagated — only pallas-backend matmul chains bind here
+_SCALE_PRIMS = {"mul", "add", "sub", "div"}
+# sub-jaxpr-bearing primitives whose invars map 1:1 onto the inner invars
+_CALL_PRIMS = {"pjit", "closed_call", "core_call", "custom_jvp_call",
+               "custom_vjp_call", "remat", "checkpoint", "shard_map"}
+
+_SMALL_INT = {"int2", "int4", "int8", "uint2", "uint4", "uint8"}
+
+
+def _is_var(v) -> bool:
+    return not hasattr(v, "val")  # Literals carry .val; Vars don't
+
+
+def _dtype_name(v) -> str:
+    aval = getattr(v, "aval", None)
+    dt = getattr(aval, "dtype", None)
+    return getattr(dt, "name", "")
+
+
+def _sub_jaxprs(eqn):
+    """(key, jaxpr) pairs for every sub-jaxpr in an eqn's params."""
+    for key, val in eqn.params.items():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                yield key, inner            # ClosedJaxpr -> Jaxpr
+            elif hasattr(v, "eqns"):
+                yield key, v                # bare Jaxpr
+
+
+def iter_eqns(jaxpr, *, descend_pallas: bool = True) -> Iterator:
+    """Yield every eqn in ``jaxpr`` and (recursively) its sub-jaxprs."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)  # unwrap ClosedJaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if not descend_pallas and eqn.primitive.name == "pallas_call":
+            continue
+        for _, sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, descend_pallas=descend_pallas)
+
+
+def count_primitives(jaxpr, *, descend_pallas: bool = True) -> Counter:
+    return Counter(e.primitive.name
+                   for e in iter_eqns(jaxpr, descend_pallas=descend_pallas))
+
+
+def has_primitive(jaxpr, name: str) -> bool:
+    return any(e.primitive.name == name for e in iter_eqns(jaxpr))
+
+
+def _eqn_excerpt(eqn, limit: int = 160) -> str:
+    try:
+        s = str(eqn)
+    except Exception:  # noqa: BLE001 - excerpt is best-effort display only
+        s = eqn.primitive.name
+    s = " ".join(s.split())
+    return s[:limit]
+
+
+def find_float_upcasts(jaxpr) -> list[tuple[str, str]]:
+    """Dtype dataflow walk: flag ``dot_general`` eqns consuming a float
+    operand whose value chain originates from an int8-family (quantized)
+    tensor outside any Pallas kernel.
+
+    Returns ``[(primitive_name, eqn_excerpt), ...]`` — one entry per
+    offending dot.  Pallas sub-jaxprs are skipped (in-kernel dequant is the
+    tuned path); ``pjit``/``shard_map``-style call boundaries propagate the
+    taint when invar counts line up, and are otherwise walked fresh (which
+    still catches self-contained dequant->dot chains inside them).
+    """
+    findings: list[tuple[str, str]] = []
+
+    def walk(jx, tainted: set) -> None:
+        jx = getattr(jx, "jaxpr", jx)
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            in_taint = [(_is_var(v) and v in tainted) or
+                        _dtype_name(v) in _SMALL_INT
+                        for v in eqn.invars]
+            if prim == "pallas_call":
+                continue  # tuned kernel: in-kernel dequant is the contract
+            if prim == "dot_general":
+                for v, t in zip(eqn.invars, in_taint):
+                    if t and _dtype_name(v).startswith("float"):
+                        findings.append((prim, _eqn_excerpt(eqn)))
+                        break
+            for _, sub in _sub_jaxprs(eqn):
+                inner = getattr(sub, "jaxpr", sub)
+                sub_taint = set()
+                if prim in _CALL_PRIMS and \
+                        len(inner.invars) == len(eqn.invars):
+                    sub_taint = {iv for iv, t in
+                                 zip(inner.invars, in_taint) if t}
+                walk(sub, sub_taint)
+            propagates = prim in _PASS_PRIMS or (
+                prim in _SCALE_PRIMS
+                and any(not _is_var(v) or getattr(v.aval, "ndim", 1) == 0
+                        for v in eqn.invars))
+            if propagates and any(in_taint):
+                for ov in eqn.outvars:
+                    tainted.add(ov)
+            # any small-int output is itself quantized data
+            for ov in eqn.outvars:
+                if _dtype_name(ov) in _SMALL_INT:
+                    tainted.add(ov)
+
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    seed = {v for v in jx.invars if _dtype_name(v) in _SMALL_INT}
+    seed |= {v for v in getattr(jx, "constvars", ())
+             if _dtype_name(v) in _SMALL_INT}
+    walk(jx, seed)
+    return findings

@@ -1,0 +1,108 @@
+"""Leaf data structures for the invariant auditor.
+
+This module is intentionally import-light (stdlib only): ``StepSpec`` is
+constructed inside ``runtime/serving.py`` / ``runtime/kvcache/batcher.py``
+(``audit_steps()``), and findings flow back out through the CLI and the
+``audit_step`` pytest fixture — keeping it a leaf avoids runtime<->analysis
+import cycles.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One contract violation: which rule fired, on which step, and where
+    in the jaxpr/HLO it anchored."""
+    rule: str                 # rule id, e.g. "no_collectives"
+    step: str                 # step name, e.g. "decode" / "paged:chunk"
+    message: str              # human-readable statement of the violation
+    locus: str = ""           # jaxpr eqn / HLO line excerpt (truncated)
+    cell: str = ""            # audit cell name (filled in by the CLI)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "step": self.step, "cell": self.cell,
+                "message": self.message, "locus": self.locus}
+
+    def __str__(self) -> str:
+        where = f"{self.cell}/{self.step}" if self.cell else self.step
+        tail = f"\n    at: {self.locus}" if self.locus else ""
+        return f"[{self.rule}] {where}: {self.message}{tail}"
+
+
+@dataclass
+class StepSpec:
+    """One auditable serving step function: the jitted callable plus example
+    arguments that trace/lower it exactly the way the hot loop calls it.
+
+    ``donate_argnums`` mirrors the jit wrapping (so the ``cache_donated``
+    rule knows donation was *requested* — the rule then checks the compiled
+    module actually aliased).  ``quantized_acts``/``quantized_weights``
+    describe the precision config so rule applicability doesn't have to be
+    re-derived from the params tree.
+    """
+    name: str
+    fn: object                # the jitted step function
+    args: tuple               # example args (trace-shaped, real dtypes)
+    donate_argnums: tuple = ()
+    pure_dp: bool = True      # shard_map-first step: no collectives allowed
+    quantized_acts: bool = False
+    quantized_weights: bool = False
+    backend: str = "xla"      # engine dispatch backend at audit time
+    mesh: object | None = None
+
+    def default_rules(self) -> tuple[str, ...]:
+        """The contract set this step must uphold, derived from its wiring.
+        The Pallas-specific rules (kernel fired, no dequant-to-float dot,
+        tile keys warm) only bind when the engine's dispatch backend is
+        ``pallas`` — under the ``xla`` backend the registered reference
+        impls ARE the float-dot fallback, by design."""
+        rules = []
+        if self.pure_dp:
+            rules.append("no_collectives")
+        if self.donate_argnums:
+            rules.append("cache_donated")
+        if self.quantized_acts:
+            rules.append("scale_shape_is_per_row")
+        if self.quantized_weights and self.backend == "pallas":
+            rules += ["pallas_call_present",
+                      "no_f32_upcast_of_quantized_operands",
+                      "tuning_cache_hit"]
+        return tuple(rules)
+
+
+@dataclass
+class Report:
+    """Audit run result: findings (empty == clean) + what was checked."""
+    findings: list[Finding] = field(default_factory=list)
+    checked: list[dict] = field(default_factory=list)  # {cell, step, rules}
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def extend(self, findings, *, cell: str = "") -> None:
+        for f in findings:
+            if cell and not f.cell:
+                f = Finding(rule=f.rule, step=f.step, message=f.message,
+                            locus=f.locus, cell=cell)
+            self.findings.append(f)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "n_findings": len(self.findings),
+            "findings": [f.to_dict() for f in self.findings],
+            "checked": self.checked,
+        }, indent=2)
+
+    def summary(self) -> str:
+        n_steps = len(self.checked)
+        n_rules = sum(len(c.get("rules", ())) for c in self.checked)
+        head = (f"audit: {n_steps} step(s), {n_rules} rule application(s), "
+                f"{len(self.findings)} finding(s)")
+        if self.ok:
+            return head + " — clean"
+        return "\n".join([head] + [str(f) for f in self.findings])

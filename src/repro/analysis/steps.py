@@ -1,0 +1,183 @@
+"""The audit cell matrix: which {config, precision, serving form, mesh}
+combinations the invariant auditor traces, and how to run them.
+
+A *cell* is one batcher construction (model config + precision + dense/paged
+serving form + optional speculative wiring) audited across a list of mesh
+shapes.  :func:`audit_cell` builds the cell's batcher on one mesh, primes
+the tuning cache (zero-cost default tiles — ``tuning_cache_hit`` verifies
+key *coverage*), enumerates its ``audit_steps()`` and checks every step's
+contracts, all under the cell's forced engine backend (the backend must
+cover tracing, not just construction — ``qmatmul`` consults it at trace
+time).
+
+Everything here imports jax lazily so the CLI can set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before first init.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+
+DEFAULT_MESHES = ((1, 1), (8, 1), (2, 4))
+
+
+@dataclass(frozen=True)
+class AuditCell:
+    """One batcher configuration in the audit matrix."""
+    name: str
+    config: str = "smollm-135m"      # configs/ registry name, or "tp-golden"
+    precision: str | None = None     # override cfg.precision (None = keep)
+    paged: bool = False
+    kv_bits: int = 8                 # paged KV storage width
+    speculative: bool = False
+    force_backend: str | None = None  # engine backend while building+tracing
+    n_slots: int = 8
+    s_max: int = 24
+    chunk_size: int = 4
+    meshes: tuple = DEFAULT_MESHES
+
+
+# the serving-relevant matrix (ISSUE 8 acceptance: smollm pure-DP, d1024 TP,
+# 2xT quantized-act — dense and paged forms where each applies)
+CELLS = (
+    AuditCell(name="smollm-dp"),
+    AuditCell(name="smollm-dp-paged", paged=True, kv_bits=8),
+    AuditCell(name="smollm-2xT", precision="2xT", force_backend="pallas"),
+    AuditCell(name="smollm-2xT-paged", precision="2xT", paged=True,
+              kv_bits=8, force_backend="pallas"),
+    AuditCell(name="smollm-spec", paged=True, kv_bits=8, speculative=True,
+              meshes=(None,)),      # windowed verify is single-host
+    AuditCell(name="tp-d1024", config="tp-golden", n_slots=2, s_max=16),
+)
+
+
+def cell_by_name(name: str) -> AuditCell:
+    for c in CELLS:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown audit cell {name!r}; known: "
+                   f"{[c.name for c in CELLS]}")
+
+
+@contextlib.contextmanager
+def cell_backend(cell: AuditCell):
+    """Force the engine dispatch backend for the cell's whole build+trace
+    window (restores the previous override on exit)."""
+    from repro.kernels import engine
+    if cell.force_backend is None:
+        yield
+        return
+    prev = engine._BACKEND_OVERRIDE
+    engine.set_default_backend(cell.force_backend)
+    try:
+        yield
+    finally:
+        engine.set_default_backend(prev)
+
+
+def build_model_and_params(cell: AuditCell):
+    import dataclasses as dc
+
+    import jax
+
+    from repro.models import build_model, reduce_for_smoke, to_serving
+
+    if cell.config == "tp-golden":
+        # the TP acceptance config from the SPMD goldens: d_model >= 1024
+        # MHA so the sharder actually tensor-parallelizes
+        from repro.models.config import ModelConfig
+        cfg = ModelConfig(name="tp-golden", n_layers=2, d_model=1024,
+                          n_heads=8, n_kv_heads=8, head_dim=128, d_ff=2048,
+                          vocab=512, dtype="float32",
+                          layer_pattern=("attn",), ffn_pattern=("dense",),
+                          precision=cell.precision or "2xT")
+        tp = 8
+    else:
+        from repro.configs import get_config
+        cfg = dc.replace(reduce_for_smoke(get_config(cell.config)),
+                         dtype="float32")
+        if cell.precision:
+            cfg = dc.replace(cfg, precision=cell.precision, n_layers=2)
+        tp = 1
+    model = build_model(cfg)
+    params = to_serving(model.init(jax.random.PRNGKey(0)), cfg, tp=tp)
+    return model, cfg, params
+
+
+def _serving_config(cell: AuditCell, mesh):
+    from repro.runtime.serving import ServingConfig
+    kw = dict(n_slots=cell.n_slots, s_max=cell.s_max,
+              chunk_size=cell.chunk_size, mesh=mesh)
+    if cell.paged:
+        kw.update(kv_bits=cell.kv_bits, block_size=4)
+    if cell.speculative:
+        kw.update(speculative=True, draft_k=2)
+    return ServingConfig(**kw)
+
+
+def prime_cell_tuning(cell: AuditCell, model_cfg, mesh) -> int:
+    """Zero-cost tuning-cache warm-up for one (cell, mesh): insert default
+    tiles for every per-shard shape class the cell's hot path will look up
+    (``engine.prime_serving_shapes``).  Returns shape classes covered."""
+    import dataclasses as dc
+
+    from repro.core.precision import get_precision, signed
+    from repro.kernels import engine
+    n = engine.prime_serving_shapes(
+        model_cfg, signed(get_precision(model_cfg.precision)),
+        n_slots=cell.n_slots, chunk_size=cell.chunk_size, mesh=mesh)
+    if cell.speculative:
+        # the draft variant's grid + the flattened verify-window bucket
+        draft_cfg = dc.replace(model_cfg, precision="2xT")
+        n += engine.prime_serving_shapes(
+            draft_cfg, signed(get_precision("2xT")),
+            n_slots=cell.n_slots, chunk_size=cell.chunk_size, mesh=mesh,
+            extra_m=(cell.n_slots * 3,))
+    return n
+
+
+def build_cell_steps(cell: AuditCell, mesh_shape, *, prime: bool = True,
+                     _cache: dict | None = None) -> list:
+    """Construct the cell's batcher on one mesh and enumerate its step
+    functions (StepSpecs).  Call under :func:`cell_backend` — tracing the
+    returned specs consults the engine backend again.  ``mesh_shape`` is
+    (data, model) or None; ``_cache`` memoizes model+params across meshes
+    of the same cell."""
+    if _cache is not None and cell.name in _cache:
+        model, cfg, params = _cache[cell.name]
+    else:
+        model, cfg, params = build_model_and_params(cell)
+        if _cache is not None:
+            _cache[cell.name] = (model, cfg, params)
+
+    mesh = None
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(*mesh_shape)
+
+    if prime:
+        prime_cell_tuning(cell, cfg, mesh)
+
+    from repro.runtime.serving import ContinuousBatcher
+    if cell.paged:
+        from repro.runtime.kvcache import PagedBatcher
+        b = PagedBatcher(model, params, _serving_config(cell, mesh))
+    else:
+        b = ContinuousBatcher(model, params, _serving_config(cell, mesh))
+    return b.audit_steps()
+
+
+def audit_cell(cell: AuditCell, mesh_shape, *, _cache: dict | None = None):
+    """Audit one (cell, mesh): build, prime, enumerate, check.  Returns
+    ``(findings, checked)`` where ``checked`` records every (step, rules)
+    application for the report."""
+    from .rules import audit_step
+    findings, checked = [], []
+    with cell_backend(cell):
+        for spec in build_cell_steps(cell, mesh_shape, _cache=_cache):
+            rules = spec.default_rules()
+            checked.append({"cell": cell.name,
+                            "mesh": list(mesh_shape) if mesh_shape else None,
+                            "step": spec.name, "rules": list(rules)})
+            findings.extend(audit_step(spec, rules))
+    return findings, checked

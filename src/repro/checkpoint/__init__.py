@@ -22,7 +22,7 @@ import os
 import shutil
 import threading
 import warnings
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -43,7 +43,7 @@ class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------ save
@@ -122,7 +122,7 @@ class Checkpointer:
                     out.append(int(name.split("_")[1]))
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
 

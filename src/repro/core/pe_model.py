@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
 
 # ---------------------------------------------------------------------------
 # Table I — device resources
@@ -43,7 +42,7 @@ STRATIX10 = FPGADevice("Stratix 10 GX 2800", 5760, 933_120, 229_000, 15_000)
 # Table II — PE configuration logic utilization (ALMs per dot lane)
 # keys: (activation, weight, words_per_dot) with T=ternary, B=binary
 # ---------------------------------------------------------------------------
-PE_TABLE: Dict[Tuple[str, str, int], int] = {
+PE_TABLE: dict[tuple[str, str, int], int] = {
     ("8", "8", 8): 500,
     ("8", "T", 8): 91,
     ("8", "T", 16): 176,
@@ -62,7 +61,7 @@ PE_TABLE: Dict[Tuple[str, str, int], int] = {
 }
 
 # the PE variant the paper's Table IV/V projections use per (act, weight)
-TABLE4_PE: Dict[Tuple[str, str], Tuple[str, str, int]] = {
+TABLE4_PE: dict[tuple[str, str], tuple[str, str, int]] = {
     ("8", "8"): ("8", "8", 8),
     ("8", "T"): ("8", "T", 16),
     ("8", "B"): ("8", "B", 32),
@@ -88,7 +87,7 @@ S10_FMAX = 600e6              # paper: "projections made with fmax of 600 MHz"
 A10_FMAX_MEASURED = 275e6     # Table III
 
 
-def peak_tops(pe: Tuple[str, str, int], device: FPGADevice,
+def peak_tops(pe: tuple[str, str, int], device: FPGADevice,
               fmax: float = S10_FMAX, alm_fraction: float = ALM_FRACTION) -> float:
     """Resource-bound peak: lanes = budget/ALMs-per-dot; 2 ops per word."""
     alms_per_dot = PE_TABLE[pe]
@@ -127,7 +126,7 @@ def fp32_images_per_sec(device, gops_per_image: float) -> float:
 # ---------------------------------------------------------------------------
 # Layer-cycle model for the Arria 10 AlexNet proof of concept (Table III)
 # ---------------------------------------------------------------------------
-def alexnet_conv_fc_dims(width_mult: float = 1.0) -> List[dict]:
+def alexnet_conv_fc_dims(width_mult: float = 1.0) -> list[dict]:
     """(K, C, R, S, P, Q) per compute layer, channels widened per WRPN
     (first conv & classifier stay at base width)."""
     from repro.core.widening import widen_cnn_channels
@@ -145,7 +144,7 @@ def alexnet_conv_fc_dims(width_mult: float = 1.0) -> List[dict]:
     return layers
 
 
-def cycles_per_image(layers: List[dict], lanes: int, words: int) -> int:
+def cycles_per_image(layers: list[dict], lanes: int, words: int) -> int:
     total = 0
     for l in layers:
         dots = math.ceil(l["C"] * l["R"] * l["S"] / words)

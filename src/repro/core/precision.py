@@ -10,7 +10,6 @@ Pallas kernels, XNOR-popcount).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 # Weight encodings.  "int" covers 2..8-bit signed integers; ternary/binary are
 # the paper's special cases with their own PE (and their own Pallas kernel here).
@@ -37,7 +36,7 @@ class PrecisionConfig:
     # analogue of the paper's bandwidth saving; DESIGN.md §2).
     pack_weights: bool = False
     # Quantize the KV cache (beyond-paper extension, same mechanism).
-    kv_bits: Optional[int] = None
+    kv_bits: int | None = None
 
     def __post_init__(self):
         if self.w_mode == W_TERNARY and self.w_bits != 2:

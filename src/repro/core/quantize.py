@@ -21,7 +21,6 @@ forward uses the quantized value, backward passes gradients through unchanged
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +52,7 @@ def act_quant_codes_unsigned(x: jax.Array, bits: int) -> jax.Array:
     return jnp.floor(x * levels + 0.5).astype(jnp.int8)
 
 
-def act_quant_codes_signed(x: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+def act_quant_codes_signed(x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
     """Symmetric signed k-bit codes with a per-tensor scale (DESIGN.md §8.3).
 
     Returns (codes in [-(2^{k-1}-1), 2^{k-1}-1] as int8, scale) with
@@ -96,7 +95,7 @@ def act_fake_quant(x: jax.Array, cfg: PrecisionConfig) -> jax.Array:
 # Weight quantizers
 # ---------------------------------------------------------------------------
 
-def ternary_quant(w: jax.Array, axis=0) -> Tuple[jax.Array, jax.Array]:
+def ternary_quant(w: jax.Array, axis=0) -> tuple[jax.Array, jax.Array]:
     """TWN ternarization (ref [15]).  Returns (codes in {-1,0,1} int8, alpha).
 
     ``axis`` indexes the reduction axes = everything except the output-channel
@@ -111,14 +110,14 @@ def ternary_quant(w: jax.Array, axis=0) -> Tuple[jax.Array, jax.Array]:
     return codes.astype(jnp.int8), alpha.astype(jnp.float32)
 
 
-def binary_quant(w: jax.Array, axis=0) -> Tuple[jax.Array, jax.Array]:
+def binary_quant(w: jax.Array, axis=0) -> tuple[jax.Array, jax.Array]:
     """XNOR-net binarization (ref [17]): codes {-1,+1}, alpha = mean|w|."""
     alpha = jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
     codes = jnp.where(w >= 0, 1.0, -1.0)
     return codes.astype(jnp.int8), alpha.astype(jnp.float32)
 
 
-def int_quant(w: jax.Array, bits: int, axis=0) -> Tuple[jax.Array, jax.Array]:
+def int_quant(w: jax.Array, bits: int, axis=0) -> tuple[jax.Array, jax.Array]:
     """Symmetric k-bit signed weight quantization with per-channel scale."""
     qmax = (1 << (bits - 1)) - 1
     absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=axis, keepdims=True), 1e-8)
@@ -127,7 +126,7 @@ def int_quant(w: jax.Array, bits: int, axis=0) -> Tuple[jax.Array, jax.Array]:
     return codes, scale.astype(jnp.float32)
 
 
-def weight_quant(w: jax.Array, cfg: PrecisionConfig, axis=0) -> Tuple[jax.Array, jax.Array]:
+def weight_quant(w: jax.Array, cfg: PrecisionConfig, axis=0) -> tuple[jax.Array, jax.Array]:
     """Dispatch by config.  Returns (int8 codes, float32 per-channel alpha/scale)."""
     if cfg.w_mode == W_FLOAT:
         raise ValueError("float weights are not quantized")

@@ -15,7 +15,6 @@ resuming on a different shard count re-partitions deterministically
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

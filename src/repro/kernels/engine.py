@@ -28,8 +28,10 @@ this engine and their own tests.
 """
 from __future__ import annotations
 
+import contextlib
 import os
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -128,8 +130,8 @@ def hbm_bytes(pw: PackedWeight) -> int:
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
-KernelKey = Tuple[str, int, int, str]        # (weight_kind, act_bits, weight_bits, backend)
-_REGISTRY: Dict[KernelKey, Callable] = {}
+KernelKey = tuple[str, int, int, str]        # (weight_kind, act_bits, weight_bits, backend)
+_REGISTRY: dict[KernelKey, Callable] = {}
 
 ACT_BITS_RANGE = range(0, 9)                 # 0 == float activations
 
@@ -149,28 +151,37 @@ def register_kernel(weight_kind: str, act_bits, w_bits, backend: str):
     return deco
 
 
-def resolve(weight_kind: str, act_bits: int, w_bits: int, backend: str) -> Callable:
+def resolve_entry(weight_kind: str, act_bits: int, w_bits: int,
+                  backend: str) -> tuple[Callable, KernelKey]:
     """Exact key first, then the ``xla`` backend as the universal fallback
-    (e.g. binary weights with multi-bit activations have no Pallas PE)."""
+    (e.g. binary weights with multi-bit activations have no Pallas PE).
+    Returns ``(fn, matched_key)`` — the key's backend field is the backend
+    that actually dispatched, which is how the invariant auditor
+    (``repro.analysis``) tells a tuned Pallas impl from a silent xla
+    fallback without string-matching function names."""
     for key in ((weight_kind, act_bits, w_bits, backend),
                 (weight_kind, act_bits, w_bits, BACKEND_XLA)):
         fn = _REGISTRY.get(key)
         if fn is not None:
-            return fn
+            return fn, key
     raise KeyError(
         f"no kernel for (weight_kind={weight_kind!r}, act_bits={act_bits}, "
         f"weight_bits={w_bits}, backend={backend!r}); registered: "
         f"{sorted(set((k[0], k[3]) for k in _REGISTRY))}")
 
 
-def available_kernels() -> Dict[KernelKey, str]:
+def resolve(weight_kind: str, act_bits: int, w_bits: int, backend: str) -> Callable:
+    return resolve_entry(weight_kind, act_bits, w_bits, backend)[0]
+
+
+def available_kernels() -> dict[KernelKey, str]:
     return {k: fn.__name__ for k, fn in sorted(_REGISTRY.items())}
 
 
-_BACKEND_OVERRIDE: Optional[str] = None
+_BACKEND_OVERRIDE: str | None = None
 
 
-def set_default_backend(backend: Optional[str]) -> None:
+def set_default_backend(backend: str | None) -> None:
     """Force the registry backend for every call that doesn't pass one
     explicitly; ``None`` restores the platform default.  The ``REPRO_BACKEND``
     environment variable does the same for subprocesses (e.g. HLO tests that
@@ -188,6 +199,50 @@ def default_backend() -> str:
     if env in (BACKEND_PALLAS, BACKEND_XLA):
         return env
     return BACKEND_PALLAS if jax.default_backend() == "tpu" else BACKEND_XLA
+
+
+# ---------------------------------------------------------------------------
+# dispatch trace (repro.analysis hook)
+# ---------------------------------------------------------------------------
+class DispatchEvent(NamedTuple):
+    """One engine dispatch, recorded at trace time inside
+    :func:`dispatch_trace`.  ``impl_backend`` is the registry key that
+    actually matched (``xla`` when the requested backend silently fell back),
+    so the contract checker never has to string-match HLO for kernel names.
+    ``a_scale_shape`` is the dynamic activation scale's shape (None for
+    float/pre-quantized inputs) against ``m_rows`` local rows — the per-row
+    ``(M, 1)`` invariant from the scale-representation fix."""
+    op: str                     # "qmatmul" | "decode_attention" | "paged_attention"
+    kind: str                   # storage kind / attn kind
+    requested_backend: str
+    impl_backend: str
+    a_bits: int                 # act bits (matmul) / kv_bits (attention)
+    w_bits: int
+    m_rows: int                 # local M rows (trace-time, shard-local)
+    a_scale_shape: tuple[int, ...] | None
+    block: tuple[int, int, int] | None
+
+
+_DISPATCH_SINK: list | None = None
+
+
+@contextlib.contextmanager
+def dispatch_trace():
+    """Collect every :class:`DispatchEvent` the engine emits while tracing
+    under this context (``jax.make_jaxpr`` / ``.lower()`` of a step function
+    re-runs the python callable, so dispatches fire here at zero runtime
+    cost).  Nesting restores the previous sink on exit."""
+    global _DISPATCH_SINK
+    prev, _DISPATCH_SINK = _DISPATCH_SINK, []
+    try:
+        yield _DISPATCH_SINK
+    finally:
+        _DISPATCH_SINK = prev
+
+
+def _record_dispatch(**kw) -> None:
+    if _DISPATCH_SINK is not None:
+        _DISPATCH_SINK.append(DispatchEvent(**kw))
 
 
 # ---------------------------------------------------------------------------
@@ -382,9 +437,9 @@ def _prep_activations(x2, pw: PackedWeight, a_bits: int):
 # the single public dispatch point
 # ---------------------------------------------------------------------------
 def qmatmul(x, pw: PackedWeight, cfg: PrecisionConfig, *, bias=None,
-            out_dtype=jnp.float32, backend: Optional[str] = None,
-            block: Optional[Tuple[int, int, int]] = None,
-            interpret: Optional[bool] = None):
+            out_dtype=jnp.float32, backend: str | None = None,
+            block: tuple[int, int, int] | None = None,
+            interpret: bool | None = None):
     """``x @ W`` with quantized/packed ``W`` under ``cfg``.
 
     x        : (..., K) float activations, int8 codes, or (binary) int32
@@ -413,7 +468,7 @@ def qmatmul(x, pw: PackedWeight, cfg: PrecisionConfig, *, bias=None,
     scale = pw.scale.reshape(-1).astype(jnp.float32)
 
     kind = storage_kind(pw)
-    fn = resolve(kind, a_bits, pw.bits, backend)
+    fn, matched = resolve_entry(kind, a_bits, pw.bits, backend)
     if block is None and backend == BACKEND_PALLAS and kind != K_CODES:
         # x2.shape[0] is the LOCAL row count when tracing inside shard_map,
         # matching the per-device keys serving_tune_plan(…, mesh=…) pre-tunes.
@@ -422,6 +477,12 @@ def qmatmul(x, pw: PackedWeight, cfg: PrecisionConfig, *, bias=None,
             kind=kind, a_bits=a_bits, w_bits=pw.bits, backend=backend)
     elif block is None:
         block = tuning.DEFAULT_BLOCK       # xla impls ignore tile sizes
+    _record_dispatch(op="qmatmul", kind=kind, requested_backend=backend,
+                     impl_backend=matched[3], a_bits=a_bits, w_bits=pw.bits,
+                     m_rows=int(x2.shape[0]),
+                     a_scale_shape=(None if a_scale is None
+                                    else tuple(a_scale.shape)),
+                     block=tuple(block))
     out = fn(xq, pw, scale, bias, block=tuple(block), out_dtype=out_dtype,
              interpret=interpret, a_scale=a_scale)
     return out.reshape(*lead, out.shape[-1])
@@ -471,8 +532,8 @@ def fake_quant_dot(x, w, cfg: PrecisionConfig, *, axis=0):
 
 ATTN_DECODE = "decode"
 ATTN_PAGED = "paged"
-AttnKey = Tuple[str, int, str]
-_ATTN_REGISTRY: Dict[AttnKey, Callable] = {}
+AttnKey = tuple[str, int, str]
+_ATTN_REGISTRY: dict[AttnKey, Callable] = {}
 
 
 def register_attention(kind: str, kv_bits, backend: str):
@@ -485,17 +546,22 @@ def register_attention(kind: str, kv_bits, backend: str):
     return deco
 
 
-def resolve_attention(kind: str, kv_bits: int, backend: str) -> Callable:
+def resolve_attention_entry(kind: str, kv_bits: int,
+                            backend: str) -> tuple[Callable, AttnKey]:
     for key in ((kind, kv_bits, backend), (kind, kv_bits, BACKEND_XLA)):
         fn = _ATTN_REGISTRY.get(key)
         if fn is not None:
-            return fn
+            return fn, key
     raise KeyError(
         f"no attention kernel for (kind={kind!r}, kv_bits={kv_bits}, "
         f"backend={backend!r}); registered: {sorted(_ATTN_REGISTRY)}")
 
 
-def available_attention_kernels() -> Dict[AttnKey, str]:
+def resolve_attention(kind: str, kv_bits: int, backend: str) -> Callable:
+    return resolve_attention_entry(kind, kv_bits, backend)[0]
+
+
+def available_attention_kernels() -> dict[AttnKey, str]:
     return {k: fn.__name__ for k, fn in sorted(_ATTN_REGISTRY.items())}
 
 
@@ -539,8 +605,8 @@ def _paged_attn_pallas(q, k, ks, v, vs, pt_pos, *, kv_bits, dtype, block,
 
 def decode_attention(q, k_codes, k_scale, v_codes, v_scale, pos, *,
                      kv_bits: int = 8, dtype=jnp.float32,
-                     backend: Optional[str] = None,
-                     interpret: Optional[bool] = None):
+                     backend: str | None = None,
+                     interpret: bool | None = None):
     """One-step dense-cache decode attention via the registry.
 
     q: (B, KV, G, Dh); codes (B, S, KV, Dh'); scales (B, S, KV, 1);
@@ -549,34 +615,43 @@ def decode_attention(q, k_codes, k_scale, v_codes, v_scale, pos, *,
     backend = backend or default_backend()
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    fn = resolve_attention(ATTN_DECODE, kv_bits, backend)
+    fn, matched = resolve_attention_entry(ATTN_DECODE, kv_bits, backend)
     block = None
     if backend == BACKEND_PALLAS:
         b, kv, g, dh = q.shape
         block = tuning.get_block_sizes(
             b * g, dh, k_codes.shape[1], kind=f"attn_{ATTN_DECODE}",
             a_bits=kv_bits, w_bits=8, backend=backend)
+    _record_dispatch(op="decode_attention", kind=ATTN_DECODE,
+                     requested_backend=backend, impl_backend=matched[2],
+                     a_bits=kv_bits, w_bits=8, m_rows=int(q.shape[0]),
+                     a_scale_shape=None,
+                     block=None if block is None else tuple(block))
     return fn(q, k_codes, k_scale, v_codes, v_scale, pos, kv_bits=kv_bits,
               dtype=dtype, block=block, interpret=interpret)
 
 
 def paged_attention(q, k_pool, k_scale, v_pool, v_scale, page_table, pos, *,
                     kv_bits: int = 8, dtype=jnp.float32,
-                    backend: Optional[str] = None,
-                    interpret: Optional[bool] = None):
+                    backend: str | None = None,
+                    interpret: bool | None = None):
     """One-step paged decode attention (block pool + page table) via the
     registry.  Pool leaves (NB, bs, KV, Dh'); page_table (B, n_blocks)."""
     backend = backend or default_backend()
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    fn = resolve_attention(ATTN_PAGED, kv_bits, backend)
+    fn, matched = resolve_attention_entry(ATTN_PAGED, kv_bits, backend)
+    _record_dispatch(op="paged_attention", kind=ATTN_PAGED,
+                     requested_backend=backend, impl_backend=matched[2],
+                     a_bits=kv_bits, w_bits=8, m_rows=int(q.shape[0]),
+                     a_scale_shape=None, block=None)
     return fn(q, k_pool, k_scale, v_pool, v_scale, (page_table, pos),
               kv_bits=kv_bits, dtype=dtype, block=None, interpret=interpret)
 
 
 def autotune_decode_attention(*, b: int, s: int, kv: int, g: int, dh: int,
                               kv_bits: int = 8, iters: int = 2,
-                              interpret: Optional[bool] = None,
+                              interpret: bool | None = None,
                               force: bool = False, seed: int = 0) -> dict:
     """Sweep the flash-decode kernel's KV chunk length for one cache shape
     class and persist the winner (tuning-cache kind ``attn_decode``; the
@@ -608,7 +683,7 @@ def autotune_decode_attention(*, b: int, s: int, kv: int, g: int, dh: int,
 
 def autotune_kv_block_size(*, b: int, kv: int, g: int, dh: int, s_max: int,
                            kv_bits: int = 8, candidates=(16, 32, 64, 128),
-                           iters: int = 2, interpret: Optional[bool] = None,
+                           iters: int = 2, interpret: bool | None = None,
                            force: bool = False, seed: int = 0) -> dict:
     """Sweep the paged-attention kernel over candidate KV **block sizes** —
     the pool's block size is itself the kernel's sequence tile, so the sweep
@@ -693,7 +768,7 @@ def quantized_matmul(x, pw: PackedWeight, bias=None, *,
 # autotuning entry points
 # ---------------------------------------------------------------------------
 def autotune_matmul(cfg: PrecisionConfig, m: int, n: int, k: int, *,
-                    backend: Optional[str] = None, interpret: Optional[bool] = None,
+                    backend: str | None = None, interpret: bool | None = None,
                     candidates=None, iters: int = 2, force: bool = False,
                     seed: int = 0) -> dict:
     """Sweep Pallas tiles for one (M, N, K, precision) shape class, timing
@@ -789,7 +864,7 @@ class PrecisionVariant(NamedTuple):
 
 
 # model-name -> variant-name -> PrecisionVariant
-_VARIANTS: Dict[str, Dict[str, PrecisionVariant]] = {}
+_VARIANTS: dict[str, dict[str, PrecisionVariant]] = {}
 
 
 def register_variant(model_name: str, name: str, pcfg: PrecisionConfig,
@@ -802,12 +877,12 @@ def register_variant(model_name: str, name: str, pcfg: PrecisionConfig,
     return var
 
 
-def registered_variants(model_name: str) -> Dict[str, PrecisionVariant]:
+def registered_variants(model_name: str) -> dict[str, PrecisionVariant]:
     """The variants currently registered for ``model_name`` (possibly {})."""
     return dict(_VARIANTS.get(model_name, {}))
 
 
-def clear_variants(model_name: Optional[str] = None) -> None:
+def clear_variants(model_name: str | None = None) -> None:
     """Drop registered variants (all models when ``model_name`` is None) —
     releases the param pytrees they pin."""
     if model_name is None:
@@ -865,7 +940,7 @@ def serving_tune_plan(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
 
 def tune_serving_shapes(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
                         chunk_size: int, mesh=None, extra_m=(),
-                        backend: Optional[str] = None,
+                        backend: str | None = None,
                         candidates=None, iters: int = 2) -> list:
     """Pre-tune the exact M-row buckets the continuous batcher dispatches
     (see :func:`serving_tune_plan` — with ``mesh``, per-device shard shapes
@@ -884,8 +959,34 @@ def tune_serving_shapes(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
     return out
 
 
+def prime_serving_shapes(model_cfg, pcfg: PrecisionConfig, *, n_slots: int,
+                         chunk_size: int, mesh=None, extra_m=(),
+                         backend: str | None = None) -> int:
+    """Insert default-block cache entries for every tunable shape class in
+    :func:`serving_tune_plan` WITHOUT measuring (``tuning.prime``) — the
+    zero-cost warm-up the invariant auditor uses so ``tuning_cache_hit``
+    checks key *coverage* (per-shard keys resolve, zero sweeps) rather than
+    tile quality.  Returns the number of shape classes primed/present."""
+    backend = backend or BACKEND_PALLAS
+    n = 0
+    for (m, nn, k) in serving_tune_plan(model_cfg, pcfg, n_slots=n_slots,
+                                        chunk_size=chunk_size, mesh=mesh,
+                                        extra_m=extra_m):
+        if not _tunable_k(pcfg, k):
+            continue
+        a_bits = 0 if (pcfg.a_mode == A_FLOAT or pcfg.a_bits > 8) \
+            else pcfg.a_bits
+        # _tunable_k already restricts to packed storage, where the cache
+        # kind is exactly the weight mode (int / ternary / binary)
+        kind = pcfg.w_mode
+        tuning.prime(m, nn, k, kind=kind, a_bits=a_bits,
+                     w_bits=weight_bits(pcfg), backend=backend, persist=False)
+        n += 1
+    return n
+
+
 def tune_model_shapes(model_cfg, pcfg: PrecisionConfig, *, m_rows=(8, 128),
-                      backend: Optional[str] = None, candidates=None,
+                      backend: str | None = None, candidates=None,
                       iters: int = 2) -> list:
     """Pre-tune every (M, N, K) a model's serving path will dispatch, so the
     serving process itself only ever hits the cache.  Returns the entries."""

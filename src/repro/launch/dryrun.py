@@ -20,7 +20,6 @@ Results cached as results/dryrun/<arch>__<shape>__<mesh>__<variant>.json.
 """
 import argparse
 import json
-import re
 import time
 import traceback
 
@@ -28,8 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis.hlo import analyze_hlo_text, parse_collectives
 from repro.configs import ARCH_IDS, SHAPES, get_config, iter_cells
-from repro.launch.hlo_cost import analyze_hlo_text
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_decode_fn, make_prefill_fn, make_train_step
 from repro.models import build_model, make_batch, to_serving
@@ -44,31 +43,11 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 # archs whose training state needs FSDP + factored optimizer (DESIGN.md §5)
 FSDP_ARCHS = {"kimi-k2-1t-a32b", "internvl2-76b", "jamba-v0.1-52b"}
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5}
-
-_COLL_RE = re.compile(
-    r"(\w[\w\.\-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
-
-
-def parse_collectives(hlo_text: str):
-    """Sum per-device output bytes of collective ops in partitioned HLO."""
-    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
-           "all-to-all": 0, "collective-permute": 0}
-    counts = dict.fromkeys(out, 0)
-    for m in _COLL_RE.finditer(hlo_text):
-        _, dtype, dims, kind = m.groups()
-        nbytes = _DTYPE_BYTES.get(dtype, 4)
-        size = 1
-        for d in dims.split(","):
-            if d:
-                size *= int(d)
-        out[kind] += int(size * nbytes)
-        counts[kind] += 1
-    return {"bytes": out, "counts": counts,
-            "total_bytes": int(sum(out.values()))}
+# parse_collectives (re-exported above) now comes from the shared HLO walker
+# in repro.analysis.hlo — same {"bytes", "counts", "total_bytes"} reporting
+# shape as the old regex scan, but computed from the parsed module so the
+# dryrun report, launch/hlo_cost and the invariant auditor can never
+# disagree on what a collective is.
 
 
 def _shardings(mesh, specs):

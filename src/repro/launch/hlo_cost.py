@@ -1,289 +1,20 @@
-"""Trip-count-aware HLO cost analysis from ``compiled.as_text()``.
+"""Trip-count-aware HLO cost analysis — re-export shim.
 
-``xla::HloCostAnalysis`` (what ``compiled.cost_analysis()`` wraps) visits each
-while BODY exactly once — for scan-over-layers models that undercounts FLOPs,
-bytes and collectives by the trip count (61x for kimi-k2!).  This module
-parses the post-partitioning HLO text instead:
-
-  * computations and their op lists (with a local def-site shape table),
-  * dot FLOPs  = 2 * prod(output dims) * prod(lhs contracting dims),
-  * collective bytes by kind (tuple-shaped operands summed),
-  * per-op HBM traffic with opcode-aware rules:
-      - dynamic-slice / gather(-rooted fusion): touch output-sized data, not
-        the full operand (a scan reading one layer's slice of the stacked
-        params must not count the whole stack every iteration);
-      - dynamic-update-slice / scatter(-rooted fusion): in-place — touch
-        ~2x update bytes, not read+write of the whole KV cache;
-      - everything else: operands + outputs;
-  * while trip counts from ``backend_config known_trip_count`` and
-    call-graph multipliers (nested scans compose),
-
-then totals = sum over the call graph of local cost x trip multiplier.
-All numbers are PER DEVICE (the partitioned module is the per-device program).
+The implementation moved to :mod:`repro.analysis.hlo`, the shared HLO
+walker that also backs ``launch/dryrun.py``'s collective reporting and the
+``repro.analysis`` contract rules (``no_collectives``, ``cache_donated``).
+This module keeps the historical import surface
+(``from repro.launch.hlo_cost import analyze_hlo_text``) alive.
 """
-from __future__ import annotations
+from repro.analysis.hlo import (  # noqa: F401
+    COLLECTIVES,
+    Computation,
+    Op,
+    _type_bytes_and_dims,
+    analyze_hlo_text,
+    parse_hlo,
+    total_costs,
+)
 
-import re
-from typing import Dict, List, Optional
-
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-# ops that move no data (metadata / aliasing only)
-_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
-             "after-all", "partition-id", "replica-id", "iota", "reshape",
-             "copy-start", "copy-done"}
-_SLICE_READ = {"dynamic-slice", "gather", "slice"}
-_INPLACE = {"dynamic-update-slice", "scatter", "select-and-scatter"}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
-_DEF_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
-_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s*->")
-_OPCODE_RE = re.compile(r"\)?\s*([a-z][a-z0-9\-]*)\(")
-_TRIP_RE = re.compile(r'known_trip_count[":{]+n["\s:]+(\d+)')
-_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
-_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
-_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
-_TOAPPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
-_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
-_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-
-
-def _type_bytes_and_dims(type_str: str):
-    """Parse all dtype[dims] groups in a type string (handles tuples).
-    Returns (total_bytes, first_dims_list)."""
-    total = 0
-    first_dims = None
-    for m in _SHAPE_RE.finditer(type_str):
-        dtype, dims = m.groups()
-        if dtype not in _DTYPE_BYTES:
-            continue
-        size = 1
-        for d in dims.split(","):
-            if d:
-                size *= int(d)
-        total += size * _DTYPE_BYTES[dtype]
-        if first_dims is None:
-            first_dims = [int(d) for d in dims.split(",") if d]
-    return total, (first_dims or [])
-
-
-class Op:
-    __slots__ = ("opcode", "out_bytes", "operand_bytes", "flops",
-                 "called", "trip", "line", "operand_names")
-
-    def __init__(self):
-        self.opcode = ""
-        self.out_bytes = 0
-        self.operand_bytes: List[int] = []
-        self.flops = 0.0
-        self.called: Optional[str] = None
-        self.trip = 1
-        self.line = ""
-        self.operand_names: List[str] = []
-
-
-class Computation:
-    def __init__(self, name):
-        self.name = name
-        self.ops: List[Op] = []
-        self.defs: Dict[str, str] = {}
-        self.root_opcode = ""
-        self.param_order: List[str] = []
-        # param name -> effective read bytes (slice-consumed params are read
-        # at slice-output granularity, not full size — scan-over-stacked-
-        # params models slice ONE layer per iteration inside fusions)
-        self.param_reads: Dict[str, float] = {}
-        self._consumers: Dict[str, List[tuple]] = {}
-
-
-def parse_hlo(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Computation = None
-    entry = None
-    for line in text.splitlines():
-        if not line:
-            continue
-        if line[0] not in " \t" and "{" in line and "->" in line:
-            m = _HEADER_RE.match(line)
-            if m:
-                cur = Computation(m.group(1))
-                comps[cur.name] = cur
-                if line.startswith("ENTRY"):
-                    entry = cur.name
-                for pm in re.finditer(r"([\w\.\-]+):\s*([^,)]+)", m.group(2)):
-                    cur.defs[pm.group(1)] = pm.group(2)
-                    cur.param_order.append(pm.group(1))
-            continue
-        if cur is None:
-            continue
-        m = _DEF_RE.match(line)
-        if not m:
-            continue
-        name, rest = m.groups()
-        op_m = _OPCODE_RE.search(rest)
-        opcode = op_m.group(1) if op_m else ""
-        type_str = rest[:op_m.start()] if op_m else rest
-        cur.defs[name] = type_str
-        is_root = line.lstrip().startswith("ROOT")
-        if is_root:
-            cur.root_opcode = opcode
-
-        if opcode in _FREE_OPS or not opcode:
-            continue
-
-        op = Op()
-        op.opcode = opcode
-        op.out_bytes, out_dims = _type_bytes_and_dims(type_str)
-        op.line = rest
-
-        tm = _TRIP_RE.search(rest)
-        if tm:
-            op.trip = int(tm.group(1))
-        for rx in (_BODY_RE, _COND_RE, _CALLS_RE, _TOAPPLY_RE):
-            cm = rx.search(rest)
-            if cm:
-                if rx is _BODY_RE or rx is _COND_RE:
-                    # whiles get two child edges (body + cond) at trip
-                    cur.ops.append(_child_op(cm.group(1), op.trip))
-                else:
-                    op.called = cm.group(1)
-        if _BODY_RE.search(rest):
-            continue  # while op itself moves no data beyond its children
-
-        # operand shapes
-        paren = rest[rest.find("("):]
-        first_group = paren.split("),")[0] if ")," in paren else paren
-        lhs_dims = None
-        op_names = _OPERANDS_RE.findall(first_group)
-        for i, op_name in enumerate(op_names):
-            t = cur.defs.get(op_name)
-            if t is None:
-                continue
-            b, dims = _type_bytes_and_dims(t)
-            op.operand_bytes.append(b)
-            # track how params are consumed (for slice-read discounts)
-            if op_name in cur.param_order:
-                cur._consumers.setdefault(op_name, []).append(
-                    (opcode, op.out_bytes))
-            if i == 0:
-                lhs_dims = dims
-        op.operand_names = op_names
-
-        if opcode == "dot":
-            cm2 = _CONTRACT_RE.search(rest)
-            contract = 1
-            if cm2 and lhs_dims:
-                for ax in cm2.group(1).split(","):
-                    if ax:
-                        ax = int(ax)
-                        if ax < len(lhs_dims):
-                            contract *= lhs_dims[ax]
-            out_elems = 1
-            for d in out_dims:
-                out_elems *= d
-            op.flops = 2.0 * out_elems * contract
-        cur.ops.append(op)
-
-    # post-pass: effective read size per fused-computation parameter —
-    # a param consumed ONLY by slicing reads (dynamic-slice/gather/slice)
-    # streams slice-output bytes, not its full (often scan-stacked) size
-    for comp in comps.values():
-        for pname in comp.param_order:
-            full, _ = _type_bytes_and_dims(comp.defs.get(pname, ""))
-            uses = comp._consumers.get(pname, [])
-            if uses and all(u[0] in _SLICE_READ for u in uses):
-                comp.param_reads[pname] = min(
-                    full, sum(2 * u[1] for u in uses))
-            else:
-                comp.param_reads[pname] = full
-
-    comps["__entry__"] = comps.get(entry) or next(iter(comps.values()))
-    return comps
-
-
-def _child_op(name: str, trip: int) -> Op:
-    op = Op()
-    op.opcode = "__child__"
-    op.called = name
-    op.trip = trip
-    return op
-
-
-def _op_traffic(op: Op, comps: Dict[str, Computation]) -> float:
-    """HBM bytes touched by one execution of ``op`` (opcode-aware)."""
-    opcode = op.opcode
-    root = ""
-    if opcode == "fusion" and op.called and op.called in comps:
-        callee = comps[op.called]
-        root = callee.root_opcode
-        # discount operands the fused computation only slices into
-        in_bytes = 0.0
-        for i, b in enumerate(op.operand_bytes):
-            if i < len(callee.param_order):
-                in_bytes += min(b, callee.param_reads.get(
-                    callee.param_order[i], b))
-            else:
-                in_bytes += b
-        max_op = max(op.operand_bytes, default=0)
-        if root in _SLICE_READ:
-            return 2.0 * op.out_bytes + max(in_bytes - max_op, 0)
-        if root in _INPLACE:
-            return 2.0 * max(in_bytes - max_op, 0)
-        return in_bytes + op.out_bytes
-    in_bytes = sum(op.operand_bytes)
-    max_op = max(op.operand_bytes, default=0)
-    if opcode in _SLICE_READ or root in _SLICE_READ:
-        # read ~output-sized data (+ indices, negligible)
-        return 2.0 * op.out_bytes + (in_bytes - max_op)
-    if opcode in _INPLACE or root in _INPLACE:
-        # in-place: touch the non-target operands twice (read update, write
-        # region); the big aliased target is NOT streamed
-        return 2.0 * max(in_bytes - max_op, 0)
-    return in_bytes + op.out_bytes
-
-
-def total_costs(comps: Dict[str, Computation]):
-    entry = comps["__entry__"]
-    totals = {"flops": 0.0, "bytes": 0.0,
-              "collectives": {k: 0.0 for k in COLLECTIVES},
-              "collective_counts": {k: 0 for k in COLLECTIVES}}
-    stack = set()
-
-    def visit(comp: Computation, mult: float):
-        if comp.name in stack:
-            return
-        stack.add(comp.name)
-        for op in comp.ops:
-            if op.opcode == "__child__":
-                # while body/cond — the only edges that re-execute (x trip);
-                # fusion sub-computations stay in VMEM and are NOT recursed
-                if op.called in comps:
-                    visit(comps[op.called], mult * op.trip)
-                continue
-            totals["flops"] += op.flops * mult
-            totals["bytes"] += _op_traffic(op, comps) * mult
-            if op.opcode in COLLECTIVES:
-                totals["collectives"][op.opcode] += op.out_bytes * mult
-                totals["collective_counts"][op.opcode] += 1
-        stack.discard(comp.name)
-
-    visit(entry, 1.0)
-    totals["collective_bytes"] = sum(totals["collectives"].values())
-    return totals
-
-
-def analyze_hlo_text(text: str):
-    comps = parse_hlo(text)
-    t = total_costs(comps)
-    return {
-        "flops_corrected": t["flops"],
-        "bytes_corrected": t["bytes"],
-        "collective_bytes_corrected": t["collective_bytes"],
-        "collectives_by_kind": t["collectives"],
-        "collective_op_counts": t["collective_counts"],
-    }
+__all__ = ["COLLECTIVES", "Computation", "Op", "analyze_hlo_text",
+           "parse_hlo", "total_costs"]

@@ -16,7 +16,8 @@ for stub-frontend archs, plus {"frames": (B,S,D)} for enc-dec, and
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -108,7 +109,7 @@ def make_batch(cfg: ModelConfig, shape: ShapeConfig, key=None,
     key = key if key is not None else jax.random.PRNGKey(0)
     b = batch_override or shape.global_batch
     s = shape.seq_len
-    batch: Dict[str, Any] = {}
+    batch: dict[str, Any] = {}
     from .frontends import audio_frames_stub, vision_patches_stub
     if cfg.kind == "encdec":
         batch["frames"] = audio_frames_stub(key, b, s, cfg.d_model)

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,8 +29,8 @@ class ModelConfig:
     d_ff: int = 0
     vocab: int = 0
     rope_theta: float = 10000.0
-    layer_pattern: Tuple[str, ...] = ("attn",)
-    ffn_pattern: Tuple[str, ...] = ("dense",)
+    layer_pattern: tuple[str, ...] = ("attn",)
+    ffn_pattern: tuple[str, ...] = ("dense",)
     window: int = 4096                     # sliding window for attn_local
     attn_softcap: float = 0.0              # gemma2: 50.0
     final_softcap: float = 0.0             # gemma2: 30.0

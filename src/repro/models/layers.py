@@ -15,7 +15,6 @@ scale is the fused BNS epilogue of paper eqs. (1)/(2).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

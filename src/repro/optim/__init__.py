@@ -13,7 +13,8 @@ distribution layer can shard optimizer state congruently with params.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

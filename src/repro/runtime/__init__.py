@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Callable, List, Optional
+from collections.abc import Callable
 
 from .adaptive import AdaptiveServer, ByteLedger  # noqa: F401
 from .errors import (AdmissionError, EmptyPromptError,  # noqa: F401
@@ -85,10 +85,10 @@ class StragglerMonitor:
         self.mean = 0.0
         self.var = 0.0
         self.n = 0
-        self.events: List[StragglerEvent] = []
+        self.events: list[StragglerEvent] = []
         self.consecutive = 0
 
-    def record(self, step: int, wall_s: float) -> Optional[StragglerEvent]:
+    def record(self, step: int, wall_s: float) -> StragglerEvent | None:
         self.n += 1
         if self.n <= self.warmup:
             self.mean = wall_s if self.n == 1 else \
@@ -116,7 +116,7 @@ class StragglerMonitor:
 
 
 def retry_with_backoff(fn: Callable, retries: int = 3, base_s: float = 0.1,
-                       exceptions=(OSError, IOError)):
+                       exceptions=(OSError,)):
     for attempt in range(retries + 1):
         try:
             return fn()
@@ -140,7 +140,7 @@ class ElasticTrainer:
         self.save_every = save_every
 
     def run(self, n_steps: int, n_data: int, n_model: int, data_iter,
-            monitor: Optional[StragglerMonitor] = None):
+            monitor: StragglerMonitor | None = None):
         mesh, state, shardings, step_fn = self.build(n_data, n_model)
         start = 0
         latest = self.ckpt.latest_step()

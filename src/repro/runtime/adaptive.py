@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
 
 from .errors import UnknownSLOClassError
 from .kvcache import PagedBatcher, paged_block_bytes
@@ -62,8 +61,8 @@ class ByteLedger:
 
     def __init__(self, budget_bytes: int):
         self.budget_bytes = int(budget_bytes)
-        self.lanes: List[PagedBatcher] = []
-        self._block_bytes: Dict[int, int] = {}
+        self.lanes: list[PagedBatcher] = []
+        self._block_bytes: dict[int, int] = {}
 
     def attach(self, lane: PagedBatcher) -> None:
         self._block_bytes[id(lane)] = paged_block_bytes(
@@ -120,15 +119,15 @@ class AdaptiveServer:
     """
 
     def __init__(self, model, params,
-                 config: Optional[ServingConfig] = None, *,
-                 metrics: Optional[Metrics] = None):
+                 config: ServingConfig | None = None, *,
+                 metrics: Metrics | None = None):
         if not isinstance(config, ServingConfig):
             raise TypeError("AdaptiveServer: pass a ServingConfig "
                             "(AdaptiveServer(model, params, "
                             "ServingConfig(...)))")
         self.config = config
         self.model = model
-        self.classes: Dict[str, SLOClass] = dict(
+        self.classes: dict[str, SLOClass] = dict(
             config.slo_classes or default_slo_classes())
         self.policy = config.brownout_policy or BrownoutPolicy()
         self.controller = BrownoutController(self.policy)
@@ -136,7 +135,7 @@ class AdaptiveServer:
             else Metrics(config.n_slots)
         for cls in self.classes.values():
             self.metrics.register_slo(cls.name, cls.ttft_ms, cls.itl_ms)
-        self.queue: Deque[Request] = deque()
+        self.queue: deque[Request] = deque()
 
         n_rungs = 1 + (min(self.policy.max_level,
                            max((c.max_brownout for c in
@@ -144,7 +143,7 @@ class AdaptiveServer:
                        if config.brownout else 0)
         lane_cfg = dataclasses.replace(
             config, brownout=False, slo_classes=None, brownout_policy=None)
-        self.lanes: List[PagedBatcher] = []
+        self.lanes: list[PagedBatcher] = []
         for rung in range(n_rungs):
             kv = DEFAULT_KV_LADDER[min(rung, len(DEFAULT_KV_LADDER) - 1)]
             if rung == len(DEFAULT_KV_LADDER):        # low-bit weight rung
@@ -161,7 +160,7 @@ class AdaptiveServer:
             lane.tick = False      # the server emits one consolidated tick
             self.lanes.append(lane)
 
-        self.ledger: Optional[ByteLedger] = None
+        self.ledger: ByteLedger | None = None
         if config.pool_bytes is not None and len(self.lanes) > 1:
             self.ledger = ByteLedger(config.pool_bytes)
             for lane in self.lanes:
@@ -224,7 +223,7 @@ class AdaptiveServer:
                 self.metrics.on_brownout(level, degraded_admission=True)
             lane.submit(req)
 
-    def step(self) -> List[Request]:
+    def step(self) -> list[Request]:
         """One server iteration: consolidated signal tick, controller
         observation, admission routing, then one step of every lane with
         work."""
@@ -242,7 +241,7 @@ class AdaptiveServer:
         level = self.controller.observe(self.metrics.controller_signals())
         self.metrics.on_brownout(level)
         self._route(level)
-        finished: List[Request] = []
+        finished: list[Request] = []
         for lane in self.lanes:
             if not lane.idle:
                 finished.extend(lane.step())
@@ -252,8 +251,8 @@ class AdaptiveServer:
     def idle(self) -> bool:
         return not self.queue and all(l.idle for l in self.lanes)
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        out: List[Request] = []
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        out: list[Request] = []
         for _ in range(max_steps):
             out.extend(self.step())
             if self.idle:

@@ -10,7 +10,6 @@ call sites keep working.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 
 class AdmissionError(ValueError):
@@ -20,7 +19,7 @@ class AdmissionError(ValueError):
       rid: the rejected request's id (None when unknowable).
     """
 
-    def __init__(self, message: str, *, rid: Optional[int] = None):
+    def __init__(self, message: str, *, rid: int | None = None):
         super().__init__(message)
         self.rid = rid
 
@@ -39,7 +38,7 @@ class InvalidBudgetError(AdmissionError):
       max_new: the offending budget.
     """
 
-    def __init__(self, message: str, *, rid: Optional[int] = None,
+    def __init__(self, message: str, *, rid: int | None = None,
                  max_new: int = 0):
         super().__init__(message, rid=rid)
         self.max_new = int(max_new)
@@ -55,7 +54,7 @@ class PromptTooLongError(AdmissionError):
       overflow:  tokens over the remaining budget.
     """
 
-    def __init__(self, message: str, *, rid: Optional[int] = None,
+    def __init__(self, message: str, *, rid: int | None = None,
                  length: int = 0, s_max: int = 0):
         super().__init__(message, rid=rid)
         self.length = int(length)
@@ -74,7 +73,7 @@ class PoolFootprintError(AdmissionError):
       deficit:          blocks short.
     """
 
-    def __init__(self, message: str, *, rid: Optional[int] = None,
+    def __init__(self, message: str, *, rid: int | None = None,
                  required_blocks: int = 0, available_blocks: int = 0):
         super().__init__(message, rid=rid)
         self.required_blocks = int(required_blocks)
@@ -91,7 +90,7 @@ class UnknownSLOClassError(AdmissionError):
       classes: the configured class names.
     """
 
-    def __init__(self, message: str, *, rid: Optional[int] = None,
+    def __init__(self, message: str, *, rid: int | None = None,
                  slo: str = "", classes: tuple = ()):
         super().__init__(message, rid=rid)
         self.slo = slo

@@ -59,7 +59,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -119,7 +118,7 @@ class PagedBatcher(ContinuousBatcher):
     """
 
     def __init__(self, model, params,
-                 config: Optional[ServingConfig] = None, *,
+                 config: ServingConfig | None = None, *,
                  metrics=None, **legacy):
         config = _coerce_config(config, legacy, type(self).__name__)
         if config.kv_bits not in KV_BITS_CHOICES:
@@ -223,7 +222,7 @@ class PagedBatcher(ContinuousBatcher):
         self.pool = tfm.make_pool(cfg, num_blocks, bs, self.kv_bits,
                                   mesh=mesh)
         self._pt = np.zeros((self.n_slots, self.blocks_per_seq), np.int32)
-        self._slot_blocks: List[Optional[List[int]]] = [None] * self.n_slots
+        self._slot_blocks: list[list[int] | None] = [None] * self.n_slots
         # admission order = preemption priority (earlier admitted wins)
         self._slot_seq = np.zeros(self.n_slots, np.int64)
         self._seq_counter = 0
@@ -341,6 +340,52 @@ class PagedBatcher(ContinuousBatcher):
         self._draft_decode = jax.jit(_draft_fn, donate_argnums=(2,))
         self._verify = jax.jit(_verify_fn, donate_argnums=(2,))
 
+    # ---------------------------------------------------------------- audit
+    def audit_steps(self) -> list:
+        """Paged step functions for the compile-time contract checker:
+        batched decode + chunk append over the block pool, plus the
+        speculative draft/verify pair when wired.  Step names carry a
+        ``paged:`` prefix so audit reports distinguish them from the dense
+        batcher's steps."""
+        from repro.analysis.report import StepSpec
+        flags = self._audit_flags()
+        pt = jnp.asarray(self._pt)
+        pos = jnp.asarray(self.pos)
+        toks = jnp.asarray(self.tokens)
+        steps = [
+            StepSpec(name="paged:decode", fn=self._decode,
+                     args=(self.params, toks, self.pool, pt, pos),
+                     donate_argnums=(2,), **flags),
+            StepSpec(name="paged:chunk", fn=self._prefill_chunk,
+                     args=(self.params,
+                           jnp.zeros((1, self.chunk_size), jnp.int32),
+                           self.pool,
+                           # admission page-table row shape (writes deflect
+                           # to the null block under an all-zeros row)
+                           jnp.zeros((1, self.blocks_per_seq), jnp.int32),
+                           jnp.int32(0)),
+                     donate_argnums=(2,), **flags),
+        ]
+        if self.spec:
+            from repro.core.precision import A_FLOAT, W_FLOAT, \
+                get_precision, signed
+            draft_pcfg = signed(get_precision(self.draft_precision))
+            draft_flags = dict(
+                flags, quantized_weights=draft_pcfg.w_mode != W_FLOAT,
+                quantized_acts=draft_pcfg.w_mode != W_FLOAT
+                and draft_pcfg.a_mode != A_FLOAT and draft_pcfg.a_bits <= 8)
+            steps.append(StepSpec(
+                name="paged:draft_decode", fn=self._draft_decode,
+                args=(self._draft_params, toks, self.pool, pt, pos),
+                donate_argnums=(2,), **draft_flags))
+            steps.append(StepSpec(
+                name="paged:verify", fn=self._verify,
+                args=(self.params,
+                      jnp.zeros((self.n_slots, self.spec_k + 1), jnp.int32),
+                      self.pool, pt, pos),
+                donate_argnums=(2,), **flags))
+        return steps
+
     # -------------------------------------------------------------- submit
     def _blocks_needed(self, length: int, max_new: int) -> int:
         """Blocks covering every position the request can ever write.
@@ -388,7 +433,7 @@ class PagedBatcher(ContinuousBatcher):
         gen = np.asarray(req.output, np.int32)[None]
         return np.concatenate([req.tokens, gen], axis=1)
 
-    def _match_prefix(self, tokens: np.ndarray) -> List[Tuple[int, bool]]:
+    def _match_prefix(self, tokens: np.ndarray) -> list[tuple[int, bool]]:
         """Radix lookup of (block, is_suffix) pairs, capped so (a) at least
         the last token is still prefilled (its logits seed generation) and
         (b) the match ends on a chunk boundary as well as a block boundary
@@ -483,7 +528,7 @@ class PagedBatcher(ContinuousBatcher):
             self._pt[adm.slot, :] = self._adm_row[0]
             self._activate(adm.req, adm.slot, None, row)
 
-    def _alloc(self, n: int) -> Optional[List[int]]:
+    def _alloc(self, n: int) -> list[int] | None:
         """Pool alloc with LRU radix eviction as the fallback; ``None`` only
         when resident requests genuinely hold the pool.  Eviction targets
         FREEABLE leaves only (radix-only references): dropping a reference

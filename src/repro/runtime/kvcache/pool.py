@@ -15,7 +15,7 @@ function.  It is pinned with a permanent reference.
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional
+from collections.abc import Iterable
 
 import numpy as np
 
@@ -27,7 +27,7 @@ class BlockPool:
         self.num_blocks = num_blocks
         # LIFO free list: recently released blocks are re-used first (their
         # pool rows are more likely still warm in cache)
-        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
         self._ref = np.zeros(num_blocks, np.int32)
         self._ref[0] = 1                         # pin the null block
         self.peak_used = 0                       # allocation high-water mark
@@ -50,7 +50,7 @@ class BlockPool:
         return int(self._ref[block_id])
 
     # ------------------------------------------------------------ operations
-    def alloc(self, n: int) -> Optional[List[int]]:
+    def alloc(self, n: int) -> list[int] | None:
         """Take ``n`` free blocks (each with refcount 1), or None if the pool
         cannot satisfy the request — the caller decides whether to evict
         cached blocks or keep the request queued.  All-or-nothing."""

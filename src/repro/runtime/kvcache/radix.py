@@ -31,7 +31,7 @@ return to the free list.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Tuple
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -41,11 +41,11 @@ from .pool import BlockPool
 class _Node:
     __slots__ = ("key", "block", "children", "parent", "last_used", "suffix")
 
-    def __init__(self, key: Optional[bytes], block: int,
-                 parent: Optional["_Node"], suffix: bool = False):
+    def __init__(self, key: bytes | None, block: int,
+                 parent: "_Node" | None, suffix: bool = False):
         self.key = key                     # bytes of this edge's bs tokens
         self.block = block                 # physical block id (-1 for root)
-        self.children: Dict[bytes, _Node] = {}
+        self.children: dict[bytes, _Node] = {}
         self.parent = parent
         self.last_used = 0
         self.suffix = suffix               # generated-suffix (vs prompt) KV
@@ -73,20 +73,20 @@ class RadixPrefixCache:
                 yield n.block
             stack.extend(n.children.values())
 
-    def _keys(self, tokens: np.ndarray) -> List[bytes]:
+    def _keys(self, tokens: np.ndarray) -> list[bytes]:
         bs = self.block_size
         t = np.asarray(tokens, np.int32).reshape(-1)
         return [t[i:i + bs].tobytes() for i in range(0, len(t) // bs * bs, bs)]
 
     # ------------------------------------------------------------------ match
-    def match(self, tokens: np.ndarray) -> List[int]:
+    def match(self, tokens: np.ndarray) -> list[int]:
         """Physical block ids of the longest cached block-aligned prefix of
         ``tokens``.  Bumps the matched path's LRU clock.  The caller must
         ``pool.acquire`` each returned block before anything else can evict
         it."""
         return [bid for bid, _ in self.match_with_kinds(tokens)]
 
-    def match_with_kinds(self, tokens: np.ndarray) -> List[Tuple[int, bool]]:
+    def match_with_kinds(self, tokens: np.ndarray) -> list[tuple[int, bool]]:
         """Like :meth:`match` but each block id comes with its node's
         ``suffix`` flag, so the caller can split prompt-prefix hits from
         generated-suffix hits in the metrics."""
@@ -102,8 +102,8 @@ class RadixPrefixCache:
         return out
 
     # ----------------------------------------------------------------- insert
-    def insert(self, tokens: np.ndarray, block_ids: List[int],
-               suffix_from: Optional[int] = None) -> int:
+    def insert(self, tokens: np.ndarray, block_ids: list[int],
+               suffix_from: int | None = None) -> int:
         """Register ``block_ids`` as the cache of ``tokens``' full blocks
         (``len(block_ids)`` leading blocks).  Existing nodes win on conflict
         (two requests prefilled the same prompt concurrently — the duplicate
@@ -129,7 +129,7 @@ class RadixPrefixCache:
         return added
 
     # ------------------------------------------------------------------ evict
-    def _leaves(self) -> List[_Node]:
+    def _leaves(self) -> list[_Node]:
         out, stack = [], [self.root]
         while stack:
             n = stack.pop()

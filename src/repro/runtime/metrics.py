@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Dict, List, Optional
 
 PERCENTILES = (50, 90, 99)
 
@@ -21,7 +20,7 @@ PERCENTILES = (50, 90, 99)
 SIGNAL_WINDOW = 64
 
 
-def _pcts(samples: List[float]) -> Dict[str, float]:
+def _pcts(samples: list[float]) -> dict[str, float]:
     if not samples:
         return {f"p{p}": 0.0 for p in PERCENTILES} | {"mean": 0.0, "n": 0}
     xs = sorted(samples)
@@ -76,9 +75,9 @@ class Metrics:
 
     def __init__(self, n_slots: int = 0):
         self.n_slots = n_slots
-        self.queue_ms: List[float] = []
-        self.ttft_ms: List[float] = []
-        self.itl_ms: List[float] = []
+        self.queue_ms: list[float] = []
+        self.ttft_ms: list[float] = []
+        self.itl_ms: list[float] = []
         self.requests_submitted = 0
         self.requests_finished = 0
         self.requests_active = 0
@@ -110,11 +109,11 @@ class Metrics:
         self._step_util: deque = deque(maxlen=SIGNAL_WINDOW)
         self._step_active: deque = deque(maxlen=SIGNAL_WINDOW)
         # per-SLO-class latency samples + attainment targets
-        self.slo_targets: Dict[str, Dict[str, float]] = {}
-        self._slo_ttft: Dict[str, List[float]] = {}
-        self._slo_itl: Dict[str, List[float]] = {}
-        self._slo_finished: Dict[str, int] = {}
-        self._slo_attained: Dict[str, int] = {}
+        self.slo_targets: dict[str, dict[str, float]] = {}
+        self._slo_ttft: dict[str, list[float]] = {}
+        self._slo_itl: dict[str, list[float]] = {}
+        self._slo_finished: dict[str, int] = {}
+        self._slo_attained: dict[str, int] = {}
         self.brownout_level = 0
         self.brownout_raises = 0
         self.degraded_admissions = 0
@@ -122,9 +121,9 @@ class Metrics:
         self.spec_verify_steps = 0
         self.spec_draft_tokens = 0
         self.spec_accepted_tokens = 0
-        self._t0: Optional[float] = None           # first ADMISSION (compute)
-        self._t0_submit: Optional[float] = None    # first submit (queue open)
-        self._t1: Optional[float] = None
+        self._t0: float | None = None           # first ADMISSION (compute)
+        self._t0_submit: float | None = None    # first submit (queue open)
+        self._t1: float | None = None
 
     # ------------------------------------------------------------- recording
     def _touch(self):
@@ -144,7 +143,7 @@ class Metrics:
         if self._t0_submit is None:
             self._t0_submit = time.time()
 
-    def on_admit(self, req, n_prompt_tokens: Optional[int] = None,
+    def on_admit(self, req, n_prompt_tokens: int | None = None,
                  resumed: bool = False) -> None:
         """One admission.  ``n_prompt_tokens`` overrides the prompt width
         (a preemption-resumed request prefills prompt + generated tokens);
@@ -221,9 +220,9 @@ class Metrics:
         self._slo_finished.setdefault(name, 0)
         self._slo_attained.setdefault(name, 0)
 
-    def on_step(self, queue_depth: int, pool_in_use: Optional[int] = None,
-                pool_total: Optional[int] = None, active: int = 0,
-                util: Optional[float] = None) -> None:
+    def on_step(self, queue_depth: int, pool_in_use: int | None = None,
+                pool_total: int | None = None, active: int = 0,
+                util: float | None = None) -> None:
         """One SCHEDULER STEP tick — the controller-signal sample point.
 
         This is deliberately per-step, not per-admission: an admission-driven

@@ -30,7 +30,7 @@ metrics dict, so it is unit-testable without touching jax.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 DEFAULT_KV_LADDER = (16, 8, 4)
 
@@ -54,7 +54,7 @@ class SLOClass:
     speculative: bool = False
 
 
-def default_slo_classes() -> Dict[str, SLOClass]:
+def default_slo_classes() -> dict[str, SLOClass]:
     """The three stock tiers.  ``premium`` never degrades and runs the
     self-speculative fast path; ``standard`` rides the kv_bits rungs;
     ``batch`` may additionally spill onto the low-bit weight variant (the
@@ -94,7 +94,7 @@ class BrownoutController:
     arrival trace does not bounce the ladder every step.
     """
 
-    def __init__(self, policy: Optional[BrownoutPolicy] = None):
+    def __init__(self, policy: BrownoutPolicy | None = None):
         self.policy = policy or BrownoutPolicy()
         self.level = 0
         self._calm = 0
@@ -175,9 +175,9 @@ def simulate_policy(policy: BrownoutPolicy,
 
 
 def search_policy(arrivals: Sequence[int],
-                  seed: Optional[BrownoutPolicy] = None,
+                  seed: BrownoutPolicy | None = None,
                   iters: int = 32, **sim_kwargs
-                  ) -> Tuple[BrownoutPolicy, dict]:
+                  ) -> tuple[BrownoutPolicy, dict]:
     """Coordinate-descent hillclimb over the controller thresholds.
 
     Seeded with ``seed`` (the stock :class:`BrownoutPolicy` by default —
@@ -210,7 +210,7 @@ def search_policy(arrivals: Sequence[int],
 
 
 def bursty_trace(n_steps: int = 96, burst_every: int = 24,
-                 burst: int = 12, base: int = 0) -> List[int]:
+                 burst: int = 12, base: int = 0) -> list[int]:
     """Synthetic bursty arrival trace (the regression tests' workload):
     long idle stretches punctuated by admission spikes — exactly the shape
     that starves a per-admission-sampled controller, since no admissions

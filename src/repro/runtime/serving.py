@@ -44,7 +44,8 @@ import dataclasses
 import time
 import warnings
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +66,7 @@ class RequestOptions:
     itself.  ``slo`` names the service tier the adaptive server routes by
     (ignored by the plain batchers)."""
     max_new: int = 16
-    eos_id: Optional[int] = None
+    eos_id: int | None = None
     # sampling: temperature <= 0 -> greedy; top_k 0 -> full distribution
     temperature: float = 0.0
     top_k: int = 0
@@ -73,7 +74,7 @@ class RequestOptions:
     # service tier for SLO-routed adaptive serving (runtime.adaptive)
     slo: str = "standard"
     # per-token streaming: called as on_token(req, token, finished)
-    on_token: Optional[Callable[["Request", int, bool], None]] = None
+    on_token: Callable[["Request", int, bool], None] | None = None
 
 
 @dataclasses.dataclass
@@ -91,24 +92,24 @@ class ServingConfig:
     # ---- scheduler shape ------------------------------------------------
     n_slots: int = 8
     s_max: int = 128
-    prompt_len: Optional[int] = None
-    chunk_size: Optional[int] = None
+    prompt_len: int | None = None
+    chunk_size: int | None = None
     autotune: bool = False
     mesh: Any = None
     # ---- paged KV cache (PagedBatcher) ----------------------------------
     kv_bits: int = 16
     block_size: int = 16
-    num_blocks: Optional[int] = None
-    pool_bytes: Optional[int] = None
+    num_blocks: int | None = None
+    pool_bytes: int | None = None
     prefix_cache: bool = True
     reserve: str = "prompt"
     preemption: str = "recompute"
     # ---- adaptive precision serving (AdaptiveServer / speculative) ------
-    slo_classes: Optional[Dict[str, Any]] = None   # name -> policy.SLOClass
+    slo_classes: dict[str, Any] | None = None   # name -> policy.SLOClass
     brownout: bool = False
     brownout_policy: Any = None                    # policy.BrownoutPolicy
     speculative: bool = False
-    draft_precision: Optional[str] = "2xT"         # PAPER_CONFIGS key
+    draft_precision: str | None = "2xT"         # PAPER_CONFIGS key
     draft_k: int = 3
 
 
@@ -156,7 +157,7 @@ class Request:
     on the request."""
 
     def __init__(self, rid: int, tokens: np.ndarray,
-                 options: Optional[RequestOptions] = None, **legacy):
+                 options: RequestOptions | None = None, **legacy):
         unknown = set(legacy) - set(_LEGACY_REQUEST_KWARGS)
         if unknown:
             raise TypeError(f"Request: unexpected keyword arguments "
@@ -177,7 +178,7 @@ class Request:
         self.first_token_at = 0.0
         self.last_token_at = 0.0
         self.finished_at = 0.0
-        self.output: List[int] = []
+        self.output: list[int] = []
 
     # option views (read-only: mutate req.options, not the request)
     @property
@@ -185,7 +186,7 @@ class Request:
         return self.options.max_new
 
     @property
-    def eos_id(self) -> Optional[int]:
+    def eos_id(self) -> int | None:
         return self.options.eos_id
 
     @property
@@ -255,8 +256,8 @@ class ContinuousBatcher:
     """Slot-based continuous batching: chunked (or whole-prompt) prefill
     interleaved with batched decode."""
 
-    def __init__(self, model, params, config: Optional[ServingConfig] = None,
-                 *, metrics: Optional[Metrics] = None, **legacy):
+    def __init__(self, model, params, config: ServingConfig | None = None,
+                 *, metrics: Metrics | None = None, **legacy):
         config = _coerce_config(config, legacy, type(self).__name__)
         self.config = config
         self.model = model
@@ -309,17 +310,17 @@ class ContinuousBatcher:
         # per-step controller-signal sampling (the adaptive server turns
         # this off per lane and emits one consolidated tick itself)
         self.tick = True
-        self.queue: Deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)
         self.done = np.ones(n_slots, bool)
         # slots paused by the paged batcher (block-pool exhaustion with
         # preemption off): their decode write deflects to the null block and
         # the emit loop skips them until a block frees up
         self.stalled = np.zeros(n_slots, bool)
-        self._adm: Optional[_Admission] = None
+        self._adm: _Admission | None = None
         self._adm_cache = None             # reused (1, s_adm) admission cache
-        self._just_finished: List[Request] = []
+        self._just_finished: list[Request] = []
         # host-side next-token buffer; placed (sharded) at each decode call
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self._build_runtime(model, cfg, mesh)
@@ -477,6 +478,55 @@ class ContinuousBatcher:
         global-batch numerics for every config."""
         return baxes is not None and self._shd.pure_dp(cfg, mesh)
 
+    # ---------------------------------------------------------------- audit
+    def _audit_flags(self) -> dict:
+        """Shared StepSpec fields for this batcher's serving contracts:
+        precision flags, the engine backend, and pure-DP-ness (mesh-less
+        batchers are trivially collective-free)."""
+        from repro.core.precision import A_FLOAT, W_FLOAT, get_precision, \
+            signed
+        from repro.kernels import engine
+        pcfg = signed(get_precision(self.model.cfg.precision))
+        qw = pcfg.w_mode != W_FLOAT
+        return {
+            "quantized_weights": qw,
+            "quantized_acts": qw and pcfg.a_mode != A_FLOAT
+            and pcfg.a_bits <= 8,
+            "backend": engine.default_backend(),
+            "pure_dp": self.mesh is None
+            or self._shd.pure_dp(self.model.cfg, self.mesh),
+            "mesh": self.mesh,
+        }
+
+    def audit_steps(self) -> list:
+        """Enumerate this batcher's compiled step functions as
+        :class:`repro.analysis.report.StepSpec`\\ s — the exact callables and
+        argument shapes the hot loop dispatches, for the compile-time
+        contract checker (``python -m repro.analysis audit``)."""
+        from repro.analysis.report import StepSpec
+        flags = self._audit_flags()
+        steps = [
+            StepSpec(name="decode", fn=self._decode,
+                     args=(self.params, jnp.asarray(self.tokens), self.cache,
+                           jnp.asarray(self.pos)),
+                     donate_argnums=(2,), **flags),
+            StepSpec(name="prefill", fn=self._prefill,
+                     args=(self.params,
+                           {"tokens": jnp.zeros((1, min(8, self.s_adm)),
+                                                jnp.int32)}),
+                     **flags),
+        ]
+        if self.chunk_size:
+            adm_cache = self._adm_cache if self._adm_cache is not None \
+                else self._make_cache(1, self.s_adm)
+            steps.append(StepSpec(
+                name="chunk", fn=self._prefill_chunk,
+                args=(self.params,
+                      jnp.zeros((1, self.chunk_size), jnp.int32),
+                      adm_cache, jnp.int32(0)),
+                donate_argnums=(2,), **flags))
+        return steps
+
     def _validate(self, req: Request):
         """Admission validation; raises a typed AdmissionError subclass
         (each still a ValueError for pre-redesign except-clauses)."""
@@ -567,7 +617,7 @@ class ContinuousBatcher:
         self.queue.appendleft(req)
 
     # ----------------------------------------------------------------- admit
-    def _free_slot(self) -> Optional[int]:
+    def _free_slot(self) -> int | None:
         for i in range(self.n_slots):
             if self.done[i] and self.slots[i] is None:
                 return i

@@ -89,3 +89,28 @@ try:
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:
     _install_hypothesis_fallback()
+
+
+import pytest
+
+
+@pytest.fixture
+def audit_step():
+    """The repro.analysis contract checker as a fixture: call it with a
+    StepSpec (e.g. from ``batcher.audit_steps()``) and it asserts the step's
+    contracts hold, returning the findings list (empty on success).  Pass
+    ``rules=(...)`` to override the wiring-derived set, or ``expect`` to
+    assert specific rule ids fired instead of none."""
+    from repro.analysis.rules import audit_step as _audit
+
+    def check(spec, rules=None, expect=()):
+        findings = _audit(spec, rules)
+        fired = sorted({f.rule for f in findings})
+        if expect:
+            assert fired == sorted(set(expect)), \
+                (fired, [str(f) for f in findings])
+        else:
+            assert not findings, [str(f) for f in findings]
+        return findings
+
+    return check

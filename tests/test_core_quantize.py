@@ -131,7 +131,7 @@ def test_paper_config_registry():
     assert get_precision("2xT").w_mode == W_TERNARY
     assert get_precision("1x1").w_mode == W_BINARY
     assert get_precision("fp32").is_float
-    for name, cfg in PAPER_CONFIGS.items():
+    for _name, cfg in PAPER_CONFIGS.items():
         assert cfg.name.replace("f", "fp32") or True  # names render
         assert cfg.weight_storage_bits <= 16
     with pytest.raises(KeyError):

@@ -283,7 +283,7 @@ def test_candidate_blocks_valid_and_include_default():
         cands = tuning.candidate_blocks(64, 256, k, kind, bits)
         assert tuning.fallback_block(64, 256, k, kind, bits) in cands
         align = tuning._bk_align(kind, bits)
-        for (bm, bn, bk) in cands:
+        for (_bm, bn, bk) in cands:
             assert 256 % bn == 0 and k % bk == 0 and bk % align == 0
 
 

@@ -1,10 +1,11 @@
 """Unit tests for the trip-count-aware HLO cost parser (synthetic HLO text)
-and hypothesis property tests for the sharding rules — plus the compiled-HLO
-assertion that the pure-DP serving decode step is fully collective-free
-(shard_map-local cache writes)."""
+and hypothesis property tests for the sharding rules — plus the contract
+audit (repro.analysis) that the pure-DP serving steps are collective-free
+and the quantized-act steps fire the tuned Pallas kernels."""
 import os
 import subprocess
 import sys
+import tempfile
 
 import jax
 import numpy as np
@@ -12,7 +13,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.launch.hlo_cost import analyze_hlo_text, parse_hlo
+from repro.analysis.hlo import analyze_hlo_text, parse_hlo
 from repro.models.config import ModelConfig
 from repro.parallel import sharding as sh
 
@@ -259,111 +260,59 @@ def test_pool_specs_never_shard_block_or_position_dims():
 
 
 # ---------------------------------------------------------------------------
-# compiled decode step on a dp mesh: fully collective-free (shard_map-local
-# per-token KV row writes — the ROADMAP leftover this PR closes)
+# compiled serving steps on dp meshes: the contract audit replaces the old
+# HLO-substring greps — audit_cell enforces no_collectives / cache_donated
+# (and, for quantized cells, pallas_call_present / no_f32_upcast /
+# scale_shape_is_per_row / tuning_cache_hit) from the structured walkers
 # ---------------------------------------------------------------------------
-_DECODE_HLO_SCRIPT = r"""
-import os
+_AUDIT_CELL_SCRIPT = r"""
+import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import dataclasses
-import jax, jax.numpy as jnp, numpy as np
-from repro.configs import get_config
-from repro.models import build_model, reduce_for_smoke
-from repro.runtime.serving import ContinuousBatcher, ServingConfig
-from repro.launch.mesh import make_mesh
+from repro.analysis.steps import audit_cell, cell_by_name
 
-cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
-                          dtype="float32")
-model = build_model(cfg)
-params = model.init(jax.random.PRNGKey(0))
-for spec in [(8, 1), (2, 4)]:
-    b = ContinuousBatcher(model, params,
-        ServingConfig(n_slots=8, s_max=24, chunk_size=4, mesh=make_mesh(*spec)))
-    txt = b._decode.lower(b.params, jnp.asarray(b.tokens), b.cache,
-                          jnp.asarray(b.pos)).compile().as_text()
-    for coll in ("all-gather", "all-reduce", "all-to-all",
-                 "collective-permute", "reduce-scatter"):
-        assert coll not in txt, (spec, coll)
-    print(f"DECODE_LOCAL_{spec[0]}x{spec[1]}_OK")
-print("DECODE_SHARD_LOCAL_OK")
+name, meshes = sys.argv[1], sys.argv[2:]
+cache = {}
+for m in meshes:
+    mesh = None if m == "none" else tuple(int(x) for x in m.split(","))
+    findings, checked = audit_cell(cell_by_name(name), mesh, _cache=cache)
+    assert checked, (name, mesh, "no steps audited")
+    assert not findings, (name, mesh, [str(f) for f in findings])
+    print(f"AUDIT_{m}_OK")
+print("AUDIT_CELL_OK")
 """
 
 
-def _run_subprocess(script):
+def _run_audit_cell(name, *meshes):
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(repo, "src")
     env.pop("XLA_FLAGS", None)
     env["JAX_PLATFORMS"] = "cpu"
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=900)
+    # hermetic tuning cache: audit_cell primes its own keys (persist=False)
+    env["REPRO_TUNING_CACHE"] = os.path.join(
+        tempfile.mkdtemp(prefix="audit-tuning-"), "cache.json")
+    out = subprocess.run(
+        [sys.executable, "-c", _AUDIT_CELL_SCRIPT, name, *meshes],
+        env=env, capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "AUDIT_CELL_OK" in out.stdout, out.stdout[-2000:]
     return out.stdout
 
 
 def test_decode_step_collective_free_on_dp_mesh_8dev():
-    """Pure-DP serving decode compiles to ZERO collectives: the per-token KV
-    row write (formerly a cross-device scatter/gather under pjit) now runs
-    shard-local under shard_map."""
-    assert "DECODE_SHARD_LOCAL_OK" in _run_subprocess(_DECODE_HLO_SCRIPT)
-
-
-# ---------------------------------------------------------------------------
-# quantized-act (2xT) sharded serving: the tuned Pallas qmatmul actually
-# FIRES inside the shard_map-local step functions, and nothing cache- or
-# scale-shaped is gathered — the ISSUE 7 headline claim
-# ---------------------------------------------------------------------------
-_QUANT_PALLAS_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-os.environ["REPRO_BACKEND"] = "pallas"   # force the Pallas path on CPU
-import dataclasses
-import jax, jax.numpy as jnp, numpy as np
-from repro.configs import get_config
-from repro.models import build_model, reduce_for_smoke, to_serving
-from repro.runtime.serving import ContinuousBatcher, ServingConfig
-from repro.launch.mesh import make_mesh
-
-cfg = dataclasses.replace(reduce_for_smoke(get_config("smollm-135m")),
-                          dtype="float32", precision="2xT", n_layers=2)
-model = build_model(cfg)
-params = to_serving(model.init(jax.random.PRNGKey(0)), cfg)
-
-for spec in [(8, 1), (2, 4)]:
-    b = ContinuousBatcher(model, params,
-        ServingConfig(n_slots=8, s_max=24, chunk_size=4,
-                      mesh=make_mesh(*spec)))
-    b._adm_cache = b._make_cache(1, b.s_adm)
-    chunk_toks = jnp.zeros((1, 4), jnp.int32)
-    steps = {
-        "decode": ((lambda p, t, c, pos: b._decode(p, t, c, pos)),
-                   (b.params, jnp.asarray(b.tokens), b.cache,
-                    jnp.asarray(b.pos))),
-        "chunk": ((lambda p, t, c, pos: b._prefill_chunk(p, t, c, pos)),
-                  (b.params, chunk_toks, b._adm_cache, jnp.int32(0))),
-    }
-    for name, (fn, a) in steps.items():
-        # interpret-mode pallas_call leaves no marker in compiled CPU HLO,
-        # so Pallas presence is asserted on the jaxpr: the step must trace
-        # to shard_map-wrapped pallas_call equations (the tuned qmatmul
-        # firing on per-shard local shapes)
-        jpr = str(jax.make_jaxpr(fn)(*a))
-        assert "shard_map" in jpr, (spec, name, "not shard_map dispatched")
-        assert "pallas_call" in jpr, (spec, name, "Pallas qmatmul not fired")
-        # and the compiled executable must move NO cache-/scale-sized
-        # tensor between devices: zero all-gathers of any kind
-        jfn = b._decode if name == "decode" else b._prefill_chunk
-        txt = jfn.lower(*a).compile().as_text()
-        assert "all-gather" not in txt, (spec, name, "all-gather in HLO")
-        print(f"QUANT_PALLAS_{name.upper()}_{spec[0]}x{spec[1]}_OK")
-print("QUANT_PALLAS_SHARDED_OK")
-"""
+    """Pure-DP serving steps compile to ZERO collectives and donate the
+    cache: the per-token KV row write (formerly a cross-device
+    scatter/gather under pjit) runs shard-local under shard_map.  Enforced
+    by the repro.analysis contract checker (no_collectives walks the parsed
+    HLO, cache_donated checks input_output_alias)."""
+    _run_audit_cell("smollm-dp", "8,1", "2,4")
 
 
 def test_quantized_act_sharded_steps_fire_pallas_8dev():
-    """Compiled sharded decode AND chunk-prefill for a quantized-act
-    PAPER_CONFIG (2xT) dispatch through shard_map into the Pallas qmatmul
-    (jaxpr carries shard_map + pallas_call), and the executables gather
-    nothing — the quantized-act pjit fallback is gone."""
-    stdout = _run_subprocess(_QUANT_PALLAS_SCRIPT)
-    assert "QUANT_PALLAS_SHARDED_OK" in stdout, stdout[-2000:]
+    """Sharded decode AND chunk-prefill for a quantized-act PAPER_CONFIG
+    (2xT) dispatch the tuned Pallas qmatmul on per-shard shapes with per-row
+    activation scales, warm tuning keys, no float upcast of quantized
+    operands, and zero collectives — the full quantized contract set,
+    enforced from engine dispatch events + jaxpr + HLO rather than string
+    greps."""
+    _run_audit_cell("smollm-2xT", "8,1", "2,4")

@@ -10,7 +10,6 @@ assert attributes, never message substrings.
 import dataclasses
 import io
 import os
-import re
 import warnings
 from contextlib import redirect_stdout
 
@@ -176,84 +175,19 @@ def test_unknown_slo_error_is_admission_error():
 # ---------------------------------------------------------------------------
 # no call site outside the shim still uses deprecated kwargs
 # ---------------------------------------------------------------------------
-_LEGACY_BATCHER_KW = {"n_slots", "s_max", "prompt_len", "chunk_size",
-                      "autotune", "mesh", "kv_bits", "block_size",
-                      "num_blocks", "pool_bytes", "prefix_cache", "reserve",
-                      "preemption"}
-_LEGACY_REQUEST_KW = {"max_new", "eos_id", "temperature", "top_k", "seed",
-                      "on_token"}
-# the shim itself and this file's deprecation tests legitimately use them
-_EXEMPT = {os.path.join("src", "repro", "runtime", "serving.py"),
-           os.path.join("tests", "test_serving_api.py")}
-
-
-def _split_top_level(s):
-    out, depth, cur = [], 0, []
-    for ch in s:
-        if ch in "([{":
-            depth += 1
-        elif ch in ")]}":
-            depth -= 1
-        if ch == "," and depth == 0:
-            out.append("".join(cur))
-            cur = []
-        else:
-            cur.append(ch)
-    out.append("".join(cur))
-    return [a.strip() for a in out]
-
-
-def _find_calls(text, name):
-    for m in re.finditer(r"\b" + name + r"\(", text):
-        i, depth = m.end(), 1
-        while depth and i < len(text):
-            if text[i] in "([{":
-                depth += 1
-            elif text[i] in ")]}":
-                depth -= 1
-            i += 1
-        if depth == 0:
-            yield text[m.end():i - 1]
-
-
-def _kw_names(args):
-    for a in _split_top_level(args):
-        m = re.match(r"([A-Za-z_][A-Za-z_0-9]*)\s*=[^=]", a)
-        if m:
-            yield m.group(1)
-
-
 def test_no_legacy_kwargs_outside_the_shim():
-    """Grep-style sweep: every batcher/Request call site in src/, tests/ and
-    benchmarks/ goes through the typed config — top-level legacy kwargs only
-    survive inside the shim module and this file's deprecation tests."""
-    root = os.path.join(os.path.dirname(__file__), "..")
-    offenders = []
-    for sub in ("src", "tests", "benchmarks"):
-        for dirpath, _, files in os.walk(os.path.join(root, sub)):
-            for fn in files:
-                if not fn.endswith(".py"):
-                    continue
-                path = os.path.join(dirpath, fn)
-                rel = os.path.relpath(path, root)
-                if rel in _EXEMPT:
-                    continue
-                with open(path) as f:
-                    text = f.read()
-                for ctor in ("ContinuousBatcher", "PagedBatcher",
-                             "AdaptiveServer"):
-                    for args in _find_calls(text, ctor):
-                        bad = set(_kw_names(args)) & _LEGACY_BATCHER_KW
-                        if bad:
-                            offenders.append((rel, ctor, sorted(bad)))
-                for args in _find_calls(text, "Request"):
-                    bad = set(_kw_names(args)) & _LEGACY_REQUEST_KW
-                    if bad:
-                        offenders.append((rel, "Request", sorted(bad)))
-    assert not offenders, (
+    """AST sweep (repro.analysis.astlint): every batcher/Request call site in
+    src/, tests/ and benchmarks/ goes through the typed config — top-level
+    legacy kwargs only survive inside the shim module and this file's
+    deprecation tests (the rule's built-in exemptions)."""
+    from repro.analysis import astlint
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    findings = astlint.lint_paths(
+        astlint.default_lint_roots(root), repo_root=root,
+        rules=("legacy-kwargs",))
+    assert not findings, (
         "legacy constructor kwargs outside the shim:\n"
-        + "\n".join(f"  {rel}: {ctor}({', '.join(kw)}=...)"
-                    for rel, ctor, kw in offenders))
+        + "\n".join(f"  {f.step}: {f.locus}" for f in findings))
 
 
 # ---------------------------------------------------------------------------
