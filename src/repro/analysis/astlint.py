@@ -18,6 +18,12 @@ sources (the ruff-plugin shape, but for contracts ruff can't know).
   device-get-in-hot-loop      no ``jax.device_get`` inside scheduler hot
                               loops (``step``/``run`` and their helpers)
                               — host syncs there serialize the device
+  tracing-in-jit              the flight recorder stays host-side: no
+                              tracer calls inside functions that get
+                              jit/shard_map-compiled (they would record
+                              once at trace time, not per step), and no
+                              ``repro.runtime.tracing`` imports in jit-land
+                              modules (models/kernels/parallel)
   ==========================  ===========================================
 
 Findings reuse :class:`repro.analysis.report.Finding` with
@@ -36,6 +42,15 @@ _BATCHERS = ("ContinuousBatcher", "PagedBatcher")
 _HOT_LOOP_FNS = ("step", "run")
 _HOT_LOOP_PREFIXES = ("_step", "_sample", "_advance")
 
+# tracing-in-jit: tracer receivers by convention (self.tracer / a `tr` or
+# `tracer` local), the compile wrappers whose callees must stay tracer-free,
+# and the module trees that only ever hold jit-compiled math
+_TRACER_NAMES = ("tracer", "_tracer", "tr")
+_JIT_WRAPPERS = ("jit", "shard_map", "pjit")
+_JIT_LAND_PREFIXES = ("src/repro/models/", "src/repro/kernels/",
+                      "src/repro/parallel/")
+_TRACING_MODULE = "repro.runtime.tracing"
+
 # fallback copies for when the runtime package isn't importable (the shim in
 # runtime/serving.py stays the source of truth — see _legacy_kwargs())
 _FALLBACK_BATCHER_KWARGS = (
@@ -53,6 +68,7 @@ DEFAULT_EXEMPT = {
     "batcher-config-bypass": ("src/repro/runtime/serving.py",
                               "tests/test_serving_api.py"),
     "device-get-in-hot-loop": (),
+    "tracing-in-jit": (),
 }
 
 AST_RULES = tuple(DEFAULT_EXEMPT)
@@ -82,13 +98,43 @@ def _is_jax_device_get(node: ast.Call) -> bool:
             and isinstance(f.value, ast.Name) and f.value.id == "jax")
 
 
+def _is_tracer_call(node: ast.Call) -> bool:
+    """A method call on a tracer receiver: ``tracer.x(...)``, ``tr.x(...)``,
+    ``self.tracer.x(...)`` — the convention every flight-recorder call site
+    follows."""
+    f = node.func
+    if not isinstance(f, ast.Attribute):
+        return False
+    v = f.value
+    if isinstance(v, ast.Name):
+        return v.id in _TRACER_NAMES
+    if isinstance(v, ast.Attribute):
+        return v.attr in _TRACER_NAMES
+    return False
+
+
+def _jitted_fn_names(tree: ast.AST) -> set:
+    """Names of functions passed as the FIRST argument to a jit/shard_map/
+    pjit call anywhere in the module.  Whole-tree prepass because the
+    compile wrapping (``self._decode = jax.jit(_decode_fn, ...)``) may come
+    before or after the def."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _call_name(node) in _JIT_WRAPPERS:
+            for a in node.args[:1]:
+                if isinstance(a, ast.Name):
+                    names.add(a.id)
+    return names
+
+
 class _Visitor(ast.NodeVisitor):
-    def __init__(self, path: str, rules: tuple):
+    def __init__(self, path: str, rules: tuple, jitted: set | None = None):
         self.path = path
         self.rules = rules
         self.findings: list[Finding] = []
         self._fn_stack: list[str] = []
         self._batcher_kw, self._request_kw = _legacy_kwargs()
+        self._jitted = jitted if jitted is not None else set()
 
     def _emit(self, rule: str, node: ast.AST, message: str) -> None:
         self.findings.append(Finding(
@@ -96,6 +142,9 @@ class _Visitor(ast.NodeVisitor):
             locus=ast.unparse(node)[:160] if hasattr(ast, "unparse") else ""))
 
     # ---- kernel-import-boundary ------------------------------------------
+    def _in_jit_land(self) -> bool:
+        return self.path.startswith(_JIT_LAND_PREFIXES)
+
     def visit_Import(self, node: ast.Import) -> None:
         if "kernel-import-boundary" in self.rules:
             for alias in node.names:
@@ -105,6 +154,14 @@ class _Visitor(ast.NodeVisitor):
                                f"direct import of kernel module "
                                f"{alias.name!r} — go through "
                                "repro.kernels.engine (qmatmul)")
+        if "tracing-in-jit" in self.rules and self._in_jit_land():
+            for alias in node.names:
+                if alias.name == _TRACING_MODULE:
+                    self._emit("tracing-in-jit", node,
+                               f"{self.path}: jit-land modules (models/"
+                               "kernels/parallel) must not import the "
+                               "flight recorder — tracing is wired around "
+                               "the compiled step functions, never inside")
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
@@ -118,6 +175,17 @@ class _Visitor(ast.NodeVisitor):
                            f"direct import from kernel module "
                            f"{mod!r} — go through "
                            "repro.kernels.engine (qmatmul)")
+        if "tracing-in-jit" in self.rules and self._in_jit_land() \
+                and node.module:
+            hit = (node.module == _TRACING_MODULE
+                   or (node.module == _TRACING_MODULE.rsplit(".", 1)[0]
+                       and any(a.name == "tracing" for a in node.names)))
+            if hit:
+                self._emit("tracing-in-jit", node,
+                           f"{self.path}: jit-land modules (models/kernels/"
+                           "parallel) must not import the flight recorder "
+                           "— tracing is wired around the compiled step "
+                           "functions, never inside")
         self.generic_visit(node)
 
     # ---- function-scope tracking (hot-loop rule) -------------------------
@@ -166,6 +234,25 @@ class _Visitor(ast.NodeVisitor):
                        f"{'.'.join(self._fn_stack)}() — host sync "
                        "serializes the device; batch transfers outside "
                        "the loop")
+
+        if "tracing-in-jit" in self.rules:
+            if _is_tracer_call(node) \
+                    and any(n in self._jitted for n in self._fn_stack):
+                jitted = next(n for n in self._fn_stack
+                              if n in self._jitted)
+                self._emit("tracing-in-jit", node,
+                           f"tracer call inside jit-compiled function "
+                           f"{jitted}() — it records once at trace time, "
+                           "not per step; move it to the host-side caller")
+            if name in _JIT_WRAPPERS:
+                for arg in node.args:
+                    if isinstance(arg, ast.Lambda) and any(
+                            isinstance(n, ast.Call) and _is_tracer_call(n)
+                            for n in ast.walk(arg)):
+                        self._emit("tracing-in-jit", arg,
+                                   f"tracer call in a lambda passed to "
+                                   f"{name}() — it records once at trace "
+                                   "time, not per step")
         self.generic_visit(node)
 
 
@@ -182,7 +269,7 @@ def lint_source(src: str, path: str, rules=None) -> list[Finding]:
     except SyntaxError as e:
         return [Finding(rule="syntax-error", step=f"{path}:{e.lineno or 0}",
                         message=str(e))]
-    v = _Visitor(path, rules)
+    v = _Visitor(path, rules, jitted=_jitted_fn_names(tree))
     v.visit(tree)
     return v.findings
 

@@ -224,6 +224,7 @@ class DispatchEvent(NamedTuple):
 
 
 _DISPATCH_SINK: list | None = None
+_DISPATCH_LISTENER = None
 
 
 @contextlib.contextmanager
@@ -240,9 +241,24 @@ def dispatch_trace():
         _DISPATCH_SINK = prev
 
 
+def set_dispatch_listener(cb) -> None:
+    """Install a persistent :class:`DispatchEvent` observer (or ``None`` to
+    remove it).  Unlike :func:`dispatch_trace`, the listener survives across
+    traces — the serving flight recorder (:mod:`repro.runtime.tracing`) uses
+    it to put kernel dispatches on the serving timeline.  Dispatches still
+    fire at jit trace time, so listener events mark (re)compiles."""
+    global _DISPATCH_LISTENER
+    _DISPATCH_LISTENER = cb
+
+
 def _record_dispatch(**kw) -> None:
+    if _DISPATCH_SINK is None and _DISPATCH_LISTENER is None:
+        return
+    ev = DispatchEvent(**kw)
     if _DISPATCH_SINK is not None:
-        _DISPATCH_SINK.append(DispatchEvent(**kw))
+        _DISPATCH_SINK.append(ev)
+    if _DISPATCH_LISTENER is not None:
+        _DISPATCH_LISTENER(ev)
 
 
 # ---------------------------------------------------------------------------

@@ -85,6 +85,57 @@ def _legacy_loop(model, params, cfg, args):
     return toks
 
 
+def _trace_config(args):
+    """``--trace/--profile/--metrics-interval`` -> a TraceConfig (or None).
+
+    The flight recorder is also armed when only profiling or snapshot
+    streaming is requested — both ride on the tracer — but the Perfetto
+    file is written only when --trace names one.
+    """
+    if not (args.trace or args.profile or args.metrics_interval):
+        return None
+    from repro.runtime.tracing import TraceConfig
+    snapshot_path = None
+    if args.metrics_interval:
+        if not args.metrics_json:
+            raise SystemExit("--metrics-interval needs --metrics-json "
+                             "(snapshot stream path is derived from it)")
+        base = args.metrics_json
+        base = base[:-5] if base.endswith(".json") else base
+        snapshot_path = base + ".snapshots.jsonl"
+    return TraceConfig(
+        enabled=True, buffer=args.trace_buffer, path=args.trace,
+        snapshot_path=snapshot_path,
+        snapshot_interval=args.metrics_interval,
+        profile=args.profile)
+
+
+def _report_trace(batcher, args):
+    """Post-run flight-recorder export: Perfetto file, snapshot stream
+    tail, per-phase device/host profile summary."""
+    tracer = getattr(batcher, "tracer", None)
+    if tracer is None or not tracer.enabled:
+        return
+    if args.trace:
+        doc = tracer.to_perfetto(args.trace)
+        print(f"trace -> {args.trace} ({len(doc['traceEvents'])} events, "
+              f"{tracer.dropped} dropped)")
+    if tracer.snapshotter is not None:
+        tracer.snapshotter.final(batcher.metrics)
+        print(f"metrics snapshots -> {tracer.snapshotter.path} "
+              f"({tracer.snapshotter.lines_written} lines)")
+    profilers = [p for p in [getattr(batcher, "profiler", None)] if p]
+    for lane in getattr(batcher, "lanes", []):        # AdaptiveServer
+        if lane.profiler is not None:
+            profilers.append(lane.profiler)
+    for prof in profilers:
+        for label, s in sorted(prof.summary().items()):
+            print(f"profile[{label}]: {s['steps']} steps, device "
+                  f"{s['device_ms']['p50']:.2f} ms p50, host gap "
+                  f"{s['host_ms']['p50']:.2f} ms p50 "
+                  f"(host_frac {s['host_frac']:.1%})")
+
+
 def _batcher_loop(model, params, cfg, args, mesh=None):
     """Continuous batching through the scheduler v2 (SPMD when --mesh)."""
     s_max = args.prompt_len + args.gen
@@ -97,7 +148,8 @@ def _batcher_loop(model, params, cfg, args, mesh=None):
         prefix_cache=args.prefix_cache,
         reserve=args.reserve, preemption=args.preemption,
         brownout=args.brownout, speculative=args.speculative,
-        draft_precision=args.draft_precision, draft_k=args.draft_k)
+        draft_precision=args.draft_precision, draft_k=args.draft_k,
+        trace=_trace_config(args))
     adaptive = args.brownout
     if args.paged or adaptive or args.speculative:
         from repro.runtime.kvcache import PagedBatcher, paged_block_bytes
@@ -185,6 +237,7 @@ def _batcher_loop(model, params, cfg, args, mesh=None):
         with open(args.metrics_json, "w") as f:
             json.dump(batcher.metrics.summary(), f, indent=1)
         print(f"metrics -> {args.metrics_json}")
+    _report_trace(batcher, args)
     return toks
 
 
@@ -265,6 +318,24 @@ def main(argv=None):
                     help="print tokens as they are generated")
     ap.add_argument("--metrics-json", default=None,
                     help="dump the serving metrics summary to this file")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the serving flight recorder and export a "
+                         "Perfetto/chrome://tracing timeline to this file "
+                         "(scheduler steps, admissions, prefill chunks, "
+                         "decode dispatches, per-request flow arrows)")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="flight-recorder ring capacity in events "
+                         "(drop-oldest beyond this; drops are counted)")
+    ap.add_argument("--profile", action="store_true",
+                    help="bracket each device dispatch with "
+                         "block_until_ready and measure device-time vs "
+                         "host-gap per step (adds sync overhead; implies "
+                         "the flight recorder)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="stream a Metrics.summary() snapshot (+numeric "
+                         "delta) every N scheduler steps to "
+                         "<metrics-json stem>.snapshots.jsonl "
+                         "(needs --metrics-json)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--autotune", action="store_true",
                     help="pre-tune Pallas tiles for the scheduler's shape "

@@ -10,6 +10,10 @@ serving — the submodule layout underneath may move):
     lanes with brownout + self-speculative decoding).
   * :class:`Metrics`, the :mod:`repro.runtime.errors` admission-error
     hierarchy, and the :mod:`repro.runtime.policy` brownout policy layer.
+  * :class:`Tracer` / :class:`TraceConfig` (the serving flight recorder:
+    structured event tracing, Perfetto export, crash dumps, metrics
+    snapshots — ``runtime.tracing``) and :class:`StepProfiler` (per-step
+    device-time vs host-gap measurement — ``runtime.profile``).
 
 **Fault-tolerance runtime** (all host-side; they wrap the pure step
 functions):
@@ -41,8 +45,11 @@ from .kvcache import PagedBatcher  # noqa: F401
 from .metrics import Metrics  # noqa: F401
 from .policy import (BrownoutController, BrownoutPolicy,  # noqa: F401
                      SLOClass, default_slo_classes, search_policy)
+from .profile import StepProfiler  # noqa: F401
 from .serving import (ContinuousBatcher, Request,  # noqa: F401
                       RequestOptions, ServingConfig)
+from .tracing import (MetricsSnapshotter, TraceConfig,  # noqa: F401
+                      Tracer, span_coverage)
 
 
 class PreemptionGuard:

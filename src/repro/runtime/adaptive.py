@@ -135,6 +135,11 @@ class AdaptiveServer:
             else Metrics(config.n_slots)
         for cls in self.classes.values():
             self.metrics.register_slo(cls.name, cls.ttft_ms, cls.itl_ms)
+        # one shared flight recorder across the server and every lane: lane
+        # events land on per-lane tracks, request flows cross lanes intact
+        from .tracing import Tracer
+        self.tracer = Tracer.from_config(config.trace)
+        self.trace_track = "server"
         self.queue: deque[Request] = deque()
 
         n_rungs = 1 + (min(self.policy.max_level,
@@ -156,8 +161,10 @@ class AdaptiveServer:
                     lane_cfg, kv_bits=kv,
                     speculative=config.speculative and rung == 0)
             lane = PagedBatcher(lane_model, lane_params, cfg_r,
-                                metrics=self.metrics)
+                                metrics=self.metrics, tracer=self.tracer)
             lane.tick = False      # the server emits one consolidated tick
+            lane.trace_track = f"rung{rung}-kv{kv}" \
+                + ("-spec" if cfg_r.speculative else "")
             self.lanes.append(lane)
 
         self.ledger: ByteLedger | None = None
@@ -238,13 +245,31 @@ class AdaptiveServer:
         self.metrics.on_step(
             depth, pool_in_use=in_use, pool_total=total, active=active,
             util=self.ledger.utilization() if self.ledger else None)
-        level = self.controller.observe(self.metrics.controller_signals())
+        tr = self.tracer
+        signals = self.metrics.controller_signals()
+        prev_level = self.metrics.brownout_level
+        level = self.controller.observe(signals)
         self.metrics.on_brownout(level)
+        if level != prev_level and tr.enabled:
+            # the transition instant carries the exact controller_signals()
+            # snapshot the decision was made on — "what did the controller
+            # see the tick it raised" is answerable from the trace alone
+            tr.instant("brownout", "adaptive", track=self.trace_track,
+                       level=level, prev_level=prev_level, **signals)
         self._route(level)
         finished: list[Request] = []
-        for lane in self.lanes:
-            if not lane.idle:
-                finished.extend(lane.step())
+        if tr.enabled:
+            tr.begin("step", "adaptive", track=self.trace_track,
+                     queue_depth=depth, level=level)
+        try:
+            for lane in self.lanes:
+                if not lane.idle:
+                    finished.extend(lane.step())
+        finally:
+            if tr.enabled:
+                tr.end("step", "adaptive", track=self.trace_track)
+        if tr.snapshotter is not None:
+            tr.tick_snapshot(self.metrics)
         return finished
 
     @property
@@ -253,10 +278,14 @@ class AdaptiveServer:
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         out: list[Request] = []
-        for _ in range(max_steps):
-            out.extend(self.step())
-            if self.idle:
-                break
+        try:
+            for _ in range(max_steps):
+                out.extend(self.step())
+                if self.idle:
+                    break
+        except BaseException:
+            self.tracer.on_crash()
+            raise
         return out
 
     # ---------------------------------------------------------- invariants

@@ -119,7 +119,7 @@ class PagedBatcher(ContinuousBatcher):
 
     def __init__(self, model, params,
                  config: ServingConfig | None = None, *,
-                 metrics=None, **legacy):
+                 metrics=None, tracer=None, **legacy):
         config = _coerce_config(config, legacy, type(self).__name__)
         if config.kv_bits not in KV_BITS_CHOICES:
             raise ValueError(f"kv_bits must be one of {KV_BITS_CHOICES}, "
@@ -181,7 +181,8 @@ class PagedBatcher(ContinuousBatcher):
                     "primaries are fine: per-row act scales keep the verify "
                     "window's rows bit-identical to sequential decode.)")
             get_precision(self.draft_precision)   # unknown name raises here
-        super().__init__(model, params, config, metrics=metrics)
+        super().__init__(model, params, config, metrics=metrics,
+                         tracer=tracer)
 
     # ------------------------------------------------------------- runtime
     def _build_runtime(self, model, cfg, mesh):
@@ -481,6 +482,14 @@ class PagedBatcher(ContinuousBatcher):
             self.metrics.on_admit(req, n_prompt_tokens=length,
                                   resumed=readmission)
             start = len(shared) * self.block_size
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "admit", "scheduler", track=self.trace_track,
+                    rid=req.rid, slot=slot, prompt_tokens=length,
+                    resumed=readmission, prefix_hit_tokens=start)
+                # a re-admission continues the request's existing flow
+                self.tracer.flow("t" if readmission else "s", req.rid,
+                                 track=self.trace_track)
             if self.radix is not None:
                 n_sfx = sum(1 for _, sfx in matched if sfx)
                 self.metrics.on_prefix_lookup(
@@ -517,9 +526,27 @@ class PagedBatcher(ContinuousBatcher):
         c = self.chunk_size
         chunk = jnp.asarray(adm.tokens[:, adm.next_pos:adm.next_pos + c])
         self.metrics.prefill_chunks += 1
-        logits, self.pool = self._prefill_chunk(
-            self.params, chunk, self.pool, jnp.asarray(self._adm_row),
-            jnp.int32(adm.start + adm.next_pos))
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("prefill_chunk", "scheduler", track=self.trace_track,
+                     rid=adm.req.rid, pos=adm.start + adm.next_pos)
+            tr.flow("t", adm.req.rid, track=self.trace_track)
+        try:
+            if self.profiler is None:
+                logits, self.pool = self._prefill_chunk(
+                    self.params, chunk, self.pool,
+                    jnp.asarray(self._adm_row),
+                    jnp.int32(adm.start + adm.next_pos))
+            else:
+                with self.profiler.step("prefill_chunk"):
+                    logits, self.pool = self._prefill_chunk(
+                        self.params, chunk, self.pool,
+                        jnp.asarray(self._adm_row),
+                        jnp.int32(adm.start + adm.next_pos))
+                    jax.block_until_ready(logits)
+        finally:
+            if tr.enabled:
+                tr.end("prefill_chunk", "scheduler", track=self.trace_track)
         adm.next_pos += c
         if adm.next_pos >= adm.tokens.shape[1]:
             row = logits[0, (adm.length - 1 - adm.start) % c]
@@ -561,6 +588,10 @@ class PagedBatcher(ContinuousBatcher):
                     max(n - self.pool_meta.free_blocks, 1),
                     freeable_only=True)
                 self.metrics.on_evictions(dropped)
+                if dropped and self.tracer.enabled:
+                    self.tracer.instant("evict", "kvcache",
+                                        track=self.trace_track,
+                                        blocks=dropped)
                 if dropped == 0:
                     break
                 blocks = self.pool_meta.alloc(n)
@@ -575,6 +606,11 @@ class PagedBatcher(ContinuousBatcher):
                                   self.num_blocks - 1)
         self.metrics.kv_blocks_peak = max(self.metrics.kv_blocks_peak,
                                           self.pool_meta.peak_used)
+        if self.tracer.enabled:
+            self.tracer.counter("kv_blocks", "kvcache",
+                                track=self.trace_track,
+                                in_use=self.pool_meta.used_blocks,
+                                total=self.num_blocks - 1)
 
     def _register_written(self, req: Request, slot: int, n_written: int):
         """Publish the slot's computed KV — the full blocks of the first
@@ -636,6 +672,10 @@ class PagedBatcher(ContinuousBatcher):
                     moved = True
                 else:
                     self.stalled[i] = True
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "stall", "scheduler", track=self.trace_track,
+                            rid=self.slots[i].rid, slot=i)
                 continue
             self._slot_blocks[i].append(blk[0])
             self._pt[i, b_idx] = blk[0]
@@ -692,12 +732,31 @@ class PagedBatcher(ContinuousBatcher):
         self._pt[slot, :] = 0               # dead decode writes -> null block
         self._requeue(req, slot)
         self.metrics.on_preempt(req)
+        if self.tracer.enabled:
+            self.tracer.instant("preempt", "scheduler",
+                                track=self.trace_track, rid=req.rid,
+                                slot=slot, n_written=n_written)
+            self.tracer.flow("t", req.rid, track=self.trace_track)
         self._gauge()
 
     def _decode_call(self):
-        logits, greedy_dev, self.pool = self._decode(
-            self.params, jnp.asarray(self.tokens), self.pool,
-            jnp.asarray(self._pt), jnp.asarray(self.pos))
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("decode", "scheduler", track=self.trace_track)
+        try:
+            if self.profiler is None:
+                logits, greedy_dev, self.pool = self._decode(
+                    self.params, jnp.asarray(self.tokens), self.pool,
+                    jnp.asarray(self._pt), jnp.asarray(self.pos))
+            else:
+                with self.profiler.step("decode"):
+                    logits, greedy_dev, self.pool = self._decode(
+                        self.params, jnp.asarray(self.tokens), self.pool,
+                        jnp.asarray(self._pt), jnp.asarray(self.pos))
+                    jax.block_until_ready((logits, greedy_dev))
+        finally:
+            if tr.enabled:
+                tr.end("decode", "scheduler", track=self.trace_track)
         return logits, np.asarray(greedy_dev, np.int32)
 
     def _tick(self):
@@ -769,15 +828,37 @@ class PagedBatcher(ContinuousBatcher):
         window = np.zeros((self.n_slots, w), np.int32)
         window[:, 0] = self.tokens[:, 0]
         toks = self.tokens
-        for j in range(int(limits.max(initial=0))):
-            nxt, self.pool = self._draft_decode(
-                self._draft_params, jnp.asarray(toks), self.pool,
-                jnp.asarray(self._pt), jnp.asarray(base_pos + j))
-            toks = np.asarray(nxt, np.int32).reshape(self.n_slots, 1)
-            window[:, j + 1] = toks[:, 0]
-        logits, greedy, self.pool = self._verify(
-            self.params, jnp.asarray(window), self.pool,
-            jnp.asarray(self._pt), jnp.asarray(base_pos))
+        tr = self.tracer
+        n_draft = int(limits.max(initial=0))
+        if tr.enabled:
+            tr.begin("draft", "scheduler", track=self.trace_track,
+                     rounds=n_draft)
+        try:
+            for j in range(n_draft):
+                nxt, self.pool = self._draft_decode(
+                    self._draft_params, jnp.asarray(toks), self.pool,
+                    jnp.asarray(self._pt), jnp.asarray(base_pos + j))
+                toks = np.asarray(nxt, np.int32).reshape(self.n_slots, 1)
+                window[:, j + 1] = toks[:, 0]
+        finally:
+            if tr.enabled:
+                tr.end("draft", "scheduler", track=self.trace_track)
+        if tr.enabled:
+            tr.begin("verify", "scheduler", track=self.trace_track)
+        try:
+            if self.profiler is None:
+                logits, greedy, self.pool = self._verify(
+                    self.params, jnp.asarray(window), self.pool,
+                    jnp.asarray(self._pt), jnp.asarray(base_pos))
+            else:
+                with self.profiler.step("verify"):
+                    logits, greedy, self.pool = self._verify(
+                        self.params, jnp.asarray(window), self.pool,
+                        jnp.asarray(self._pt), jnp.asarray(base_pos))
+                    jax.block_until_ready((logits, greedy))
+        finally:
+            if tr.enabled:
+                tr.end("verify", "scheduler", track=self.trace_track)
         greedy = np.asarray(greedy, np.int32)
         self.metrics.decode_steps += 1
         drafted = accepted = 0
@@ -809,10 +890,14 @@ class PagedBatcher(ContinuousBatcher):
                 accepted += j
                 break
         self.metrics.on_spec_round(drafted, accepted)
+        if self.tracer.enabled:
+            self.tracer.instant("spec_round", "scheduler",
+                                track=self.trace_track,
+                                drafted=drafted, accepted=accepted)
 
-    def step(self):
+    def _step_impl(self):
         if not self.spec:
-            return super().step()
+            return super()._step_impl()
         self._tick()
         self._advance_admission()
         if not all(self.done):

@@ -165,7 +165,10 @@ class Metrics:
         now = time.time()
         if first:
             self.ttft_ms.append((now - req.submitted_at) * 1e3)
-        elif req.last_token_at:
+        elif req.last_token_at is not None:
+            # identity check, not truthiness: a last_token_at of exactly 0.0
+            # (monkeypatched clocks in tests) is a real timestamp and its
+            # ITL sample must not be dropped
             self.itl_ms.append((now - req.last_token_at) * 1e3)
         self._touch()
 
@@ -414,9 +417,17 @@ class Metrics:
                 # low-bit drafts bought real batched-decode work
                 "accepted_per_verify": (self.spec_accepted_tokens
                                         / max(self.spec_verify_steps, 1)),
+                # legacy blended rate: accepted over drafted + verify steps
+                # (mixes draft tokens with dispatch counts — kept verbatim
+                # for bench-history continuity; prefer draft_accept_rate)
                 "accept_rate": (self.spec_accepted_tokens
                                 / max(self.spec_draft_tokens
                                       + self.spec_verify_steps, 1)),
+                # fraction of DRAFTED tokens the fp verify confirmed — the
+                # unit-consistent acceptance number draft-window autotuning
+                # should read
+                "draft_accept_rate": (self.spec_accepted_tokens
+                                      / max(self.spec_draft_tokens, 1)),
             }
         return out
 

@@ -1,0 +1,105 @@
+"""Per-step device/host profiling at the ``block_until_ready`` boundary.
+
+The ROADMAP's fused-decode item names "host-side overlap — the host never
+sits between device steps" as a goal, but until now the host gap was
+guessed, not measured.  :class:`StepProfiler` measures it: every profiled
+dispatch is bracketed host-side and explicitly synced, splitting each
+scheduler step into
+
+  ``device_ms`` — dispatch call → ``jax.block_until_ready`` return.  The
+      device step is the long pole inside this bracket (it also contains
+      the python dispatch overhead, which is exactly what a fused kernel
+      would amortize);
+  ``host_ms``   — the gap between the PREVIOUS profiled sync returning and
+      this dispatch starting: scheduler bookkeeping, sampling, token
+      emission, admission math.  This is the time the device sits idle
+      between steps — the number the fused-decode/double-buffering work
+      needs as its baseline.
+
+Profiling forces a sync per profiled dispatch, so it serializes async
+dispatch — use it to *measure* the overlap structure, not inside the
+fastest production path.  When a :class:`repro.runtime.tracing.Tracer` is
+attached, each bracket also lands on the trace's "device" track as a
+complete ("X") span, with the host gap as its own span beside it.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from contextlib import contextmanager
+
+from .tracing import TRACK_DEVICE, Tracer
+
+
+def _pcts(xs: list[float]) -> dict:
+    if not xs:
+        return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "n": 0}
+    s = sorted(xs)
+    n = len(s)
+    return {
+        "mean": sum(s) / n,
+        "p50": s[min(n - 1, max(0, -(-50 * n // 100) - 1))],
+        "p90": s[min(n - 1, max(0, -(-90 * n // 100) - 1))],
+        "n": n,
+    }
+
+
+class StepProfiler:
+    """Device-time vs host-gap accounting per labeled dispatch phase.
+
+    Usage (the batchers wire this around their jitted dispatches)::
+
+        with profiler.step("decode"):
+            out = decode_fn(...)
+            jax.block_until_ready(out)
+
+    The sync belongs INSIDE the bracket: the bracket measures "how long
+    until this step's results are host-visible", and the gap to the next
+    bracket measures pure host time."""
+
+    def __init__(self, tracer: Tracer | None = None):
+        self.tracer = tracer
+        self.records: dict[str, list[tuple[float, float]]] = \
+            defaultdict(list)
+        self._last_sync: float | None = None
+
+    @contextmanager
+    def step(self, label: str):
+        t0 = time.perf_counter()
+        host_ms = ((t0 - self._last_sync) * 1e3
+                   if self._last_sync is not None else 0.0)
+        try:
+            yield
+        finally:
+            t1 = time.perf_counter()
+            self._last_sync = t1
+            device_ms = (t1 - t0) * 1e3
+            self.records[label].append((device_ms, host_ms))
+            tr = self.tracer
+            if tr is not None and tr.enabled:
+                base = tr._t0
+                ts0 = (t0 - base) * 1e6
+                if host_ms > 0.0:
+                    tr.complete("host_gap", "profile",
+                                ts0 - host_ms * 1e3, host_ms * 1e3,
+                                track=TRACK_DEVICE, before=label)
+                tr.complete(f"device:{label}", "profile", ts0,
+                            device_ms * 1e3, track=TRACK_DEVICE)
+
+    def summary(self) -> dict:
+        """Per-label device/host breakdown.  ``host_frac`` is the share of
+        profiled wall time the device spent waiting on the host — the
+        fused-decode baseline number."""
+        out = {}
+        for label, recs in self.records.items():
+            dev = [d for d, _ in recs]
+            host = [h for _, h in recs[1:]] if len(recs) > 1 \
+                else [h for _, h in recs]
+            d_sum, h_sum = sum(dev), sum(host)
+            out[label] = {
+                "steps": len(recs),
+                "device_ms": _pcts(dev),
+                "host_ms": _pcts(host),
+                "host_frac": h_sum / max(d_sum + h_sum, 1e-9),
+            }
+        return out

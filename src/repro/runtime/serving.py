@@ -111,6 +111,10 @@ class ServingConfig:
     speculative: bool = False
     draft_precision: str | None = "2xT"         # PAPER_CONFIGS key
     draft_k: int = 3
+    # ---- observability (runtime.tracing flight recorder) ----------------
+    # a tracing.TraceConfig (or None): structured event tracing, periodic
+    # metrics snapshots, and per-step device/host profiling
+    trace: Any = None
 
 
 # legacy constructor kwargs the back-compat shim still accepts (everything
@@ -176,7 +180,10 @@ class Request:
         self.submitted_at = 0.0
         self.started_at = 0.0
         self.first_token_at = 0.0
-        self.last_token_at = 0.0
+        # None until a token lands: Metrics.on_token guards on `is not None`
+        # (a 0.0 sentinel under a monkeypatched clock reads as a real
+        # timestamp and fabricates huge ITL samples)
+        self.last_token_at: float | None = None
         self.finished_at = 0.0
         self.output: list[int] = []
 
@@ -257,7 +264,7 @@ class ContinuousBatcher:
     interleaved with batched decode."""
 
     def __init__(self, model, params, config: ServingConfig | None = None,
-                 *, metrics: Metrics | None = None, **legacy):
+                 *, metrics: Metrics | None = None, tracer=None, **legacy):
         config = _coerce_config(config, legacy, type(self).__name__)
         self.config = config
         self.model = model
@@ -307,6 +314,19 @@ class ContinuousBatcher:
                 mesh=mesh)
 
         self.metrics = metrics if metrics is not None else Metrics(n_slots)
+        # flight recorder (runtime.tracing): host-side only — tracer calls
+        # wrap the jitted dispatches, never run inside them (the
+        # tracing-in-jit astlint rule).  The adaptive server passes one
+        # shared tracer into every lane; trace_track names this batcher's
+        # timeline row.
+        from .tracing import Tracer
+        self.tracer = Tracer.from_config(config.trace) if tracer is None \
+            else tracer
+        self.trace_track = "scheduler"
+        self.profiler = None
+        if getattr(config.trace, "profile", False):
+            from .profile import StepProfiler
+            self.profiler = StepProfiler(self.tracer)
         # per-step controller-signal sampling (the adaptive server turns
         # this off per lane and emits one consolidated tick itself)
         self.tick = True
@@ -574,6 +594,10 @@ class ContinuousBatcher:
             req.first_token_at = now
         self.metrics.on_token(req, first)
         req.last_token_at = now
+        if first and self.tracer.enabled:
+            self.tracer.instant("first_token", "scheduler",
+                                track=self.trace_track, rid=req.rid, tok=tok)
+            self.tracer.flow("t", req.rid, track=self.trace_track)
         if req.on_token is not None:
             req.on_token(req, tok, finished)
 
@@ -594,6 +618,11 @@ class ContinuousBatcher:
     def _finish(self, req: Request, slot: int):
         req.finished_at = time.time()
         self.metrics.on_finish(req)
+        if self.tracer.enabled:
+            self.tracer.instant("finish", "scheduler", track=self.trace_track,
+                                rid=req.rid, slot=slot,
+                                n_out=len(req.output))
+            self.tracer.flow("f", req.rid, track=self.trace_track)
         self._release_slot(req, slot)
         self.done[slot] = True
         self.slots[slot] = None
@@ -663,6 +692,11 @@ class ContinuousBatcher:
             req.started_at = time.time()
             self.metrics.on_admit(req)
             length = req.tokens.shape[1]
+            if self.tracer.enabled:
+                self.tracer.instant("admit", "scheduler",
+                                    track=self.trace_track, rid=req.rid,
+                                    slot=slot, prompt_tokens=length)
+                self.tracer.flow("s", req.rid, track=self.trace_track)
             l_pad = bucket_length(length, self.chunk_size)
             padded = np.zeros((1, l_pad), np.int32)
             padded[:, :length] = req.tokens
@@ -675,8 +709,25 @@ class ContinuousBatcher:
         c = self.chunk_size
         chunk = jnp.asarray(adm.tokens[:, adm.next_pos:adm.next_pos + c])
         self.metrics.prefill_chunks += 1
-        logits, self._adm_cache = self._prefill_chunk(
-            self.params, chunk, self._adm_cache, jnp.int32(adm.next_pos))
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("prefill_chunk", "scheduler", track=self.trace_track,
+                     rid=adm.req.rid, pos=adm.next_pos)
+            tr.flow("t", adm.req.rid, track=self.trace_track)
+        try:
+            if self.profiler is None:
+                logits, self._adm_cache = self._prefill_chunk(
+                    self.params, chunk, self._adm_cache,
+                    jnp.int32(adm.next_pos))
+            else:
+                with self.profiler.step("prefill_chunk"):
+                    logits, self._adm_cache = self._prefill_chunk(
+                        self.params, chunk, self._adm_cache,
+                        jnp.int32(adm.next_pos))
+                    jax.block_until_ready(logits)
+        finally:
+            if tr.enabled:
+                tr.end("prefill_chunk", "scheduler", track=self.trace_track)
         adm.next_pos += c
         if adm.next_pos >= adm.tokens.shape[1]:
             # final chunk always contains the last real position L-1
@@ -696,16 +747,45 @@ class ContinuousBatcher:
             self.metrics.on_admit(req)
             self.metrics.prefill_full += 1
             self.slots[slot] = req
+            tr = self.tracer
+            if tr.enabled:
+                tr.instant("admit", "scheduler", track=self.trace_track,
+                           rid=req.rid, slot=slot,
+                           prompt_tokens=req.tokens.shape[1])
+                tr.flow("s", req.rid, track=self.trace_track)
+                tr.begin("prefill", "scheduler", track=self.trace_track,
+                         rid=req.rid)
             batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)}
-            logits, one_cache = self._prefill(self.params, batch)
+            try:
+                logits, one_cache = self._prefill(self.params, batch)
+            finally:
+                if tr.enabled:
+                    tr.end("prefill", "scheduler", track=self.trace_track)
             self._activate(req, slot, one_cache, logits[0, -1])
 
     # ----------------------------------------------------------------- step
     def _decode_call(self):
         """One batched decode dispatch; returns (logits, greedy (B,) np)."""
-        logits, greedy_dev, self.cache = self._decode(
-            self.params, jnp.asarray(self.tokens), self.cache,
-            jnp.asarray(self.pos))
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("decode", "scheduler", track=self.trace_track)
+        try:
+            if self.profiler is None:
+                logits, greedy_dev, self.cache = self._decode(
+                    self.params, jnp.asarray(self.tokens), self.cache,
+                    jnp.asarray(self.pos))
+            else:
+                # the device-sync boundary: block inside the bracket so the
+                # profiler splits device time from the host gap before the
+                # next dispatch
+                with self.profiler.step("decode"):
+                    logits, greedy_dev, self.cache = self._decode(
+                        self.params, jnp.asarray(self.tokens), self.cache,
+                        jnp.asarray(self.pos))
+                    jax.block_until_ready((logits, greedy_dev))
+        finally:
+            if tr.enabled:
+                tr.end("decode", "scheduler", track=self.trace_track)
         return logits, np.asarray(greedy_dev, np.int32)
 
     def _pre_decode(self):
@@ -733,7 +813,28 @@ class ContinuousBatcher:
     def step(self):
         """One scheduler iteration: a prefill chunk (if a request is being
         admitted) plus one decode step for every active slot.  Returns the
-        requests finished this step."""
+        requests finished this step.
+
+        This is the flight-recorder wrapper — the step span, the tuning-
+        cache counter sample, and the metrics-snapshot cadence — around
+        :meth:`_step_impl`, which subclasses override for their scheduling
+        variants (the paged batcher's speculative rounds)."""
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("step", "scheduler", track=self.trace_track,
+                     queue_depth=len(self.queue))
+            try:
+                finished = self._step_impl()
+            finally:
+                tr.end("step", "scheduler", track=self.trace_track)
+            tr.maybe_tuning_counter()
+        else:
+            finished = self._step_impl()
+        if self.tick and tr.snapshotter is not None:
+            tr.tick_snapshot(self.metrics)
+        return finished
+
+    def _step_impl(self):
         self._tick()
         if self.chunk_size:
             self._advance_admission()
@@ -771,10 +872,16 @@ class ContinuousBatcher:
         return not self.queue and self._adm is None and bool(all(self.done))
 
     def run(self, max_steps: int = 10_000):
-        """Drain the queue; returns all finished requests."""
+        """Drain the queue; returns all finished requests.  On any exception
+        the flight recorder dumps its ring next to the crash before
+        re-raising."""
         out = []
-        for _ in range(max_steps):
-            out.extend(self.step())
-            if self.idle:
-                break
+        try:
+            for _ in range(max_steps):
+                out.extend(self.step())
+                if self.idle:
+                    break
+        except BaseException:
+            self.tracer.on_crash()
+            raise
         return out

@@ -198,6 +198,46 @@ def test_lint_device_get_in_hot_loop():
                                rules=("device-get-in-hot-loop",)) == []
 
 
+def test_lint_tracing_in_jit_call():
+    src = ("import jax\n"
+           "def _decode_fn(p, t):\n"
+           "    tr.instant('decode', 'scheduler')\n"
+           "    return t\n"
+           "decode = jax.jit(_decode_fn)\n")
+    f = _fire(src, "src/repro/runtime/foo.py", "tracing-in-jit")
+    assert "_decode_fn" in f.message
+    # the same call OUTSIDE the jitted function is the supported pattern
+    ok = ("import jax\n"
+          "def _decode_fn(p, t):\n"
+          "    return t\n"
+          "decode = jax.jit(_decode_fn)\n"
+          "def step(self):\n"
+          "    tr.begin('step', 'scheduler')\n"
+          "    return decode(None, None)\n")
+    assert astlint.lint_source(ok, "src/repro/runtime/foo.py",
+                               rules=("tracing-in-jit",)) == []
+
+
+def test_lint_tracing_in_jit_lambda():
+    src = "f = jax.jit(lambda p, b: tracer.instant('x', 'y') or b)\n"
+    f = _fire(src, "src/repro/launch/foo.py", "tracing-in-jit")
+    assert "lambda" in f.message
+
+
+def test_lint_tracing_import_forbidden_in_jit_land():
+    src = "from repro.runtime.tracing import Tracer\n"
+    for path in ("src/repro/models/foo.py", "src/repro/kernels/foo.py",
+                 "src/repro/parallel/foo.py"):
+        f = _fire(src, path, "tracing-in-jit")
+        assert "flight recorder" in f.message
+    # ...but host-side serving code imports it freely
+    assert astlint.lint_source(src, "src/repro/runtime/serving.py",
+                               rules=("tracing-in-jit",)) == []
+    # the submodule-from spelling fires too
+    alt = "from repro.runtime import tracing\n"
+    _fire(alt, "src/repro/models/foo.py", "tracing-in-jit")
+
+
 def test_lint_syntax_error_is_a_finding():
     findings = astlint.lint_source("def broken(:\n", "src/x.py")
     assert [f.rule for f in findings] == ["syntax-error"]

@@ -15,10 +15,12 @@ import numpy as np
 from repro.runtime.metrics import Metrics, _pcts
 
 
-def _req(submitted_at=0.0, started_at=0.0, prompt_len=4):
+def _req(submitted_at=0.0, started_at=0.0, prompt_len=4,
+         last_token_at=None):
     return types.SimpleNamespace(
         submitted_at=submitted_at, started_at=started_at,
-        last_token_at=0.0, tokens=np.zeros((1, prompt_len), np.int32))
+        last_token_at=last_token_at,
+        tokens=np.zeros((1, prompt_len), np.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -80,6 +82,54 @@ def test_throughput_window_starts_at_first_admission():
     assert th["tok_per_s"] > th["since_submit"]["tok_per_s"]
     assert abs(th["tok_per_s"] * max(m.wall_s, 1e-9)
                - s["tokens"]["generated"]) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# ITL guard: identity check, not truthiness
+# ---------------------------------------------------------------------------
+def test_itl_records_sample_when_last_token_at_is_epoch_zero():
+    """Regression: ``elif req.last_token_at:`` silently dropped the ITL
+    sample whenever the previous token's timestamp was exactly 0.0 (falsy
+    float) — real under monkeypatched clocks.  The guard must be
+    ``is not None``."""
+    m = Metrics(n_slots=1)
+    r = _req()
+    m.on_submit(r)
+    m.on_admit(r)
+    m.on_token(r, first=True)
+    r.last_token_at = 0.0                  # epoch-zero: a REAL timestamp
+    m.on_token(r, first=False)
+    assert len(m.itl_ms) == 1 and m.itl_ms[0] > 0.0
+
+
+def test_itl_skips_sample_when_no_previous_token():
+    m = Metrics(n_slots=1)
+    r = _req()                             # last_token_at=None: no history
+    m.on_submit(r)
+    m.on_admit(r)
+    m.on_token(r, first=False)             # defensive path
+    assert m.itl_ms == []
+
+
+# ---------------------------------------------------------------------------
+# speculative acceptance rates
+# ---------------------------------------------------------------------------
+def test_draft_accept_rate_is_unit_consistent():
+    """``draft_accept_rate`` = accepted / drafted (a true fraction);
+    ``accept_rate`` keeps the legacy blended denominator (drafted tokens +
+    verify dispatches) verbatim for bench-history continuity."""
+    m = Metrics(n_slots=1)
+    m.on_spec_round(drafted=3, accepted=3)   # perfect round
+    m.on_spec_round(drafted=3, accepted=1)
+    s = m.summary()["speculative"]
+    assert s["draft_accept_rate"] == 4 / 6
+    assert s["accept_rate"] == 4 / (6 + 2)   # legacy: mixes in verify steps
+    assert s["accepted_per_verify"] == 2.0
+    # a flawless run reads 1.0 on the new rate (the legacy one cannot)
+    m2 = Metrics(n_slots=1)
+    m2.on_spec_round(drafted=4, accepted=4)
+    assert m2.summary()["speculative"]["draft_accept_rate"] == 1.0
+    assert m2.summary()["speculative"]["accept_rate"] < 1.0
 
 
 # ---------------------------------------------------------------------------
