@@ -33,6 +33,7 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -212,6 +213,55 @@ def overcommit_bench(cfg, model, params):
     }
 
 
+def dead_block_guard_bench():
+    """The paged-attention kernel's ``pl.when`` dead-block guard at long
+    page tables.  With a short live prefix most of the (B, KV, n_blocks)
+    grid is dead; the guard skips dequant + both dots per dead block.
+
+    Asserted: outputs with a long dead tail are BIT-identical to the
+    truncated just-live table (the guard is the identity on dead blocks).
+    Recorded: interpret-mode wall-clock at short vs full occupancy on the
+    same long table — the per-step cost now tracks *live* blocks, not the
+    padded table length.
+    """
+    from repro.kernels.paged_attention import paged_attention
+    rng = np.random.default_rng(3)
+    b, kv, g, dh, bs, nblk, live = 2, 2, 4, 64, 16, 48, 3
+    nb_pool = b * nblk + 2
+    q = jnp.asarray(rng.normal(size=(b, kv, g, dh)).astype(np.float32))
+    kp = jnp.asarray(rng.integers(-127, 128, (nb_pool, bs, kv, dh)).astype(np.int8))
+    vp = jnp.asarray(rng.integers(-127, 128, (nb_pool, bs, kv, dh)).astype(np.int8))
+    ks = jnp.asarray(rng.uniform(1e-3, 1e-1, (nb_pool, bs, kv, 1)).astype(np.float32))
+    vs = jnp.asarray(rng.uniform(1e-3, 1e-1, (nb_pool, bs, kv, 1)).astype(np.float32))
+    ids = rng.permutation(nb_pool - 1)[: b * nblk] + 1
+    pt = jnp.asarray(ids.reshape(b, nblk).astype(np.int32))
+    pos_short = jnp.asarray([live * bs - 1, live * bs - 5], np.int32)
+    pos_full = jnp.asarray([nblk * bs - 1, nblk * bs - 1], np.int32)
+
+    run = lambda table, pos: paged_attention(
+        q, kp, ks, vp, vs, table, pos, kv_bits=8, interpret=True)
+    out_long = run(pt, pos_short)
+    out_live = run(pt[:, :live], pos_short)
+    np.testing.assert_array_equal(np.asarray(out_long), np.asarray(out_live))
+
+    def clock(pos, iters=3):
+        jax.block_until_ready(run(pt, pos))                  # compile
+        t0 = time.time()
+        for _ in range(iters):
+            jax.block_until_ready(run(pt, pos))
+        return (time.time() - t0) / iters * 1e3
+
+    ms_short, ms_full = clock(pos_short), clock(pos_full)
+    speedup = ms_full / max(ms_short, 1e-9)
+    print(f"kvcache_dead_block_guard,{speedup:.2f},"
+          f"full_pos/short_pos wall at n_blocks={nblk} "
+          f"(live={live}; {ms_full:.1f}ms vs {ms_short:.1f}ms, interpret)")
+    return {"n_blocks": nblk, "live_blocks": live, "block_size": bs,
+            "bit_identical_to_truncated_table": True,
+            "ms_short_pos": ms_short, "ms_full_pos": ms_full,
+            "full_over_short_speedup": speedup}
+
+
 def capacity_sweep(cfg):
     """Max concurrently resident sequences at a fixed pool byte budget."""
     blocks_per_seq = -(-S_MAX // BLOCK)
@@ -273,6 +323,7 @@ def main(out=None):
           f"chunks={q8_m['prefill_chunks']}")
 
     capacity = capacity_sweep(cfg)
+    guard = dead_block_guard_bench()
     overcommit = overcommit_bench(cfg, model, params)
 
     result = {
@@ -288,6 +339,7 @@ def main(out=None):
                    - pfx_m["prefill_chunks"],
                    "hit_rate": pfx_m["prefix_hit_rate"]},
         "capacity": capacity,
+        "dead_block_guard": guard,
         "overcommit": overcommit,
     }
     if out:

@@ -28,6 +28,11 @@ Measurements on the reduced smollm config (CPU-sized, CI-friendly):
      recorder on vs off (alternating best-of-N); asserts <3% overhead
      and >=95% step-span coverage of the traced window.  ``--trace-out``
      saves the Perfetto timeline itself.
+  6. **Fused-decode sweep** (``--fused-decode``): paged decode tok/s and
+     host-gap for the fused single-dispatch kernel vs the legacy
+     two-dispatch composition, and for ragged live-slot vs always-padded
+     dispatch at partial occupancy (CI uploads
+     ``BENCH_decode_fused.json``).
 
 Results print as ``name,value,derived`` CSV lines and are recorded to
 ``--out`` (CI uploads ``BENCH_serving.json`` with the other artifacts).
@@ -176,6 +181,83 @@ def _decode_phase(cfg, model, params, *, trace=None, n_slots=4,
     toks = batcher.metrics.decode_slot_tokens - before
     batcher.run()                          # drain
     return toks / max(decode_s, 1e-9), batcher
+
+
+def _decode_phase_paged(cfg, model, params, *, fused, ragged, n_slots=4,
+                        n_live=None, decode_iters=24, chunk=8, seed=7,
+                        profile=False):
+    """Paged twin of :func:`_decode_phase`: fill ``n_live`` slots (default
+    all), then time ``decode_iters`` steady-state decode steps.  ``fused``
+    and ``ragged`` select the single-dispatch kernel path and the live-slot
+    occupancy-bucket dispatch respectively."""
+    from repro.runtime.kvcache import PagedBatcher
+    from repro.runtime.tracing import TraceConfig
+    max_new = n_slots + decode_iters + 8   # nobody finishes mid-window
+    batcher = PagedBatcher(model, params, ServingConfig(
+        n_slots=n_slots, s_max=chunk + max_new + 1, chunk_size=chunk,
+        kv_bits=8, block_size=4, fused_decode=fused, ragged_decode=ragged,
+        trace=TraceConfig(profile=True) if profile else None))
+    rng = np.random.default_rng(seed)
+    for r in _mk_requests(cfg, n_live or n_slots, rng, lo=4, hi=chunk,
+                          max_new=max_new):
+        batcher.submit(r)
+    steps = 0
+    while (batcher.queue or batcher._adm is not None) and steps < 10_000:
+        batcher.step()                     # admission phase (+ compiles)
+        steps += 1
+    batcher.step()                         # one warm steady-state step
+    before = batcher.metrics.decode_slot_tokens
+    t0 = time.perf_counter()
+    for _ in range(decode_iters):
+        batcher.step()
+    decode_s = time.perf_counter() - t0
+    toks = batcher.metrics.decode_slot_tokens - before
+    batcher.run()                          # drain
+    return toks / max(decode_s, 1e-9), batcher
+
+
+def fused_decode_sweep(cfg, model, params, *, decode_iters=24):
+    """The ISSUE-10 acceptance sweep: fused single-dispatch vs the legacy
+    two-dispatch composition on the paged decode phase, plus ragged
+    live-slot vs always-padded dispatch at partial occupancy.  Every row
+    carries the profiler's host-gap numbers — the before/after evidence for
+    the host-loop de-bugging (device-resident buffers, one jitted select,
+    one sync per step)."""
+    rows = []
+    for fused, ragged, n_slots, n_live in (
+            (True, True, 4, None),         # the default path
+            (False, True, 4, None),        # unfused composition
+            (True, True, 8, 2),            # ragged: 2 live of 8 slots
+            (True, False, 8, 2)):          # padded: same load, full grid
+        rate, b = _decode_phase_paged(
+            cfg, model, params, fused=fused, ragged=ragged,
+            n_slots=n_slots, n_live=n_live, decode_iters=decode_iters,
+            profile=True)
+        prof = b.profiler.summary()["decode"]
+        row = {"fused": fused, "ragged": ragged, "n_slots": n_slots,
+               "n_live": n_live or n_slots,
+               "decode_tok_per_s": rate,
+               "host_ms_p50": prof["host_ms"]["p50"],
+               "device_ms_p50": prof["device_ms"]["p50"],
+               "host_frac": prof["host_frac"]}
+        rows.append(row)
+        tag = (f"decode_fused_{'on' if fused else 'off'}"
+               f"_{'ragged' if ragged else 'padded'}"
+               f"_{row['n_live']}of{n_slots}")
+        print(f"{tag},{rate:.1f},host_frac={row['host_frac']:.3f} "
+              f"host_p50={row['host_ms_p50']:.3f}ms")
+    by = {(r["fused"], r["ragged"], r["n_live"]): r for r in rows}
+    speedups = {
+        "fused_vs_unfused_full":
+            by[(True, True, 4)]["decode_tok_per_s"] /
+            max(by[(False, True, 4)]["decode_tok_per_s"], 1e-9),
+        "ragged_vs_padded_2of8":
+            by[(True, True, 2)]["decode_tok_per_s"] /
+            max(by[(True, False, 2)]["decode_tok_per_s"], 1e-9),
+    }
+    for name, v in speedups.items():
+        print(f"decode_fused_speedup_{name},{v:.2f},steady_state")
+    return {"rows": rows, "speedups": speedups}
 
 
 def host_gap_profile(cfg, model, params):
@@ -344,6 +426,17 @@ def main(out=None, loads=(2, 4, 8), trace_out=None):
     return result
 
 
+def main_fused(out=None, decode_iters=24):
+    cfg, model, params = _setup()
+    result = {"fused_decode": fused_decode_sweep(cfg, model, params,
+                                                 decode_iters=decode_iters)}
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    return result
+
+
 def main_spmd(mesh_specs, out=None, slots_per_dev=4):
     cfg, model, params = _setup_spmd()
     if "1,1" not in mesh_specs:
@@ -374,11 +467,17 @@ if __name__ == "__main__":
                          "(needs XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=8 on CPU)")
     ap.add_argument("--slots-per-dev", type=int, default=4)
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="run the fused-vs-unfused paged decode sweep "
+                         "(ISSUE 10) instead of the load sweep; --out "
+                         "writes BENCH_decode_fused.json")
     ap.add_argument("--trace-out", default=None, metavar="OUT.json",
                     help="also write the spike bench's Perfetto trace here "
                          "(CI uploads it with the other artifacts)")
     a = ap.parse_args()
-    if a.mesh is not None:
+    if a.fused_decode:
+        main_fused(out=a.out)
+    elif a.mesh is not None:
         specs = a.mesh or ["1,1", "2,1", "8,1"]
         main_spmd(specs, out=a.out, slots_per_dev=a.slots_per_dev)
     else:

@@ -52,6 +52,12 @@ class StepSpec:
     quantized_weights: bool = False
     backend: str = "xla"      # engine dispatch backend at audit time
     mesh: object | None = None
+    # layer count when this step promises the FUSED paged decode path: each
+    # layer's attention + output projection must trace as exactly one
+    # fused-decode pallas_call (1 under lax.scan, n unrolled) with no other
+    # attention dispatch and no host-callback sync.  None = rule not bound
+    # (dense steps, xla backend, quantized-wo composition fallback).
+    fused_layers: int | None = None
 
     def default_rules(self) -> tuple[str, ...]:
         """The contract set this step must uphold, derived from its wiring.
@@ -70,6 +76,8 @@ class StepSpec:
             rules += ["pallas_call_present",
                       "no_f32_upcast_of_quantized_operands",
                       "tuning_cache_hit"]
+        if self.fused_layers:
+            rules.append("fused_decode_single_dispatch")
         return tuple(rules)
 
 

@@ -25,6 +25,11 @@ and returns findings (empty == contract holds):
                                    (input_output_alias in the module header)
   tuning_cache_hit                 every per-shard tile key resolved from
                                    the tuning cache with zero misses/sweeps
+  fused_decode_single_dispatch     the paged decode step traced exactly one
+                                   fused-decode ``pallas_call`` per layer
+                                   (1 scanned / n unrolled), no other
+                                   pallas attention dispatch, and no
+                                   host-callback primitive (host sync)
   ===============================  =========================================
 
 The artifacts (dispatch events, jaxpr, compiled HLO text, tuning-stats
@@ -180,6 +185,61 @@ def _rule_tuning_cache_hit(art: StepArtifacts) -> list[Finding]:
         locus=f"stats delta: {d}")]
 
 
+# kernel-name fragment every fused-decode pallas_call carries (the kv16
+# closure is named fused_decode_kernel_kv16 for exactly this match)
+_FUSED_KERNEL_NAME = "fused_decode_kernel"
+# primitives that round-trip through the host mid-step (a decode step
+# containing one cannot be a single async device dispatch)
+_HOST_SYNC_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                    "callback")
+
+
+def _rule_fused_decode_single_dispatch(art: StepArtifacts) -> list[Finding]:
+    """The tentpole contract of the fused ragged decode path: the compiled
+    paged decode step issues ONE fused pallas_call per layer — attention,
+    KV dequant, and the wo projection together — and nothing else that
+    dispatches attention or syncs through the host.  Under ``lax.scan`` over
+    layers the fused kernel appears once (in the scan body sub-jaxpr);
+    unrolled stacks show ``fused_layers`` of them."""
+    spec = art.spec
+    n_layers = int(spec.fused_layers or 0)
+    fused = other = 0
+    other_names: list[str] = []
+    syncs: list[str] = []
+    for eqn in jaxpr_walker.iter_eqns(art.jaxpr):
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            info = str(eqn.params.get("name_and_src_info", ""))
+            if _FUSED_KERNEL_NAME in info:
+                fused += 1
+            else:
+                other += 1
+                other_names.append(info.split(" at ")[0] or "<unnamed>")
+        elif name in _HOST_SYNC_PRIMS:
+            syncs.append(name)
+    out = []
+    if fused not in (1, n_layers):
+        out.append(Finding(
+            rule="fused_decode_single_dispatch", step=spec.name,
+            message=f"expected one fused-decode pallas_call per layer "
+                    f"(1 scanned or {n_layers} unrolled), traced {fused} — "
+                    "the decode step is not on the fused path"))
+    if other:
+        out.append(Finding(
+            rule="fused_decode_single_dispatch", step=spec.name,
+            message=f"{other} non-fused pallas_call dispatch(es) in the "
+                    "decode step — attention + projection must land as one "
+                    "fused dispatch per layer",
+            locus=", ".join(sorted(set(other_names))[:4])))
+    if syncs:
+        out.append(Finding(
+            rule="fused_decode_single_dispatch", step=spec.name,
+            message=f"host-callback primitive(s) {sorted(set(syncs))} in the "
+                    "decode step — the fused path must not sync through the "
+                    "host mid-step"))
+    return out
+
+
 RULES = {
     "no_collectives": _rule_no_collectives,
     "pallas_call_present": _rule_pallas_call_present,
@@ -187,6 +247,7 @@ RULES = {
     "scale_shape_is_per_row": _rule_scale_per_row,
     "cache_donated": _rule_cache_donated,
     "tuning_cache_hit": _rule_tuning_cache_hit,
+    "fused_decode_single_dispatch": _rule_fused_decode_single_dispatch,
 }
 
 

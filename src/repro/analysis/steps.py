@@ -45,6 +45,12 @@ CELLS = (
     AuditCell(name="smollm-2xT", precision="2xT", force_backend="pallas"),
     AuditCell(name="smollm-2xT-paged", precision="2xT", paged=True,
               kv_bits=8, force_backend="pallas"),
+    # float weights (smollm default fp32) + pallas backend: the REAL fused
+    # decode kernel fires, so the fused_decode_single_dispatch contract
+    # binds on paged:decode (quantized-wo cells stay on the engine's
+    # two-dispatch composition fallback, where it must not)
+    AuditCell(name="smollm-fp-paged-pallas", paged=True, kv_bits=8,
+              force_backend="pallas"),
     AuditCell(name="smollm-spec", paged=True, kv_bits=8, speculative=True,
               meshes=(None,)),      # windowed verify is single-host
     AuditCell(name="tp-d1024", config="tp-golden", n_slots=2, s_max=16),

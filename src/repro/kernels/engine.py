@@ -46,7 +46,7 @@ from repro.core.precision import (
     W_INT,
     W_TERNARY,
 )
-from repro.core.quantize import weight_fake_quant, weight_quant
+from repro.core.quantize import act_fake_quant, weight_fake_quant, weight_quant
 
 from . import ref, tuning
 from .binary_matmul import binary_matmul
@@ -548,6 +548,7 @@ def fake_quant_dot(x, w, cfg: PrecisionConfig, *, axis=0):
 
 ATTN_DECODE = "decode"
 ATTN_PAGED = "paged"
+ATTN_FUSED = "fused_decode"
 AttnKey = tuple[str, int, str]
 _ATTN_REGISTRY: dict[AttnKey, Callable] = {}
 
@@ -753,6 +754,154 @@ def preferred_kv_block_size(*, b: int, kv: int, g: int, dh: int, s_max: int,
         return default
     bs = int(entry["block"][2])
     return bs if s_max % bs == 0 else default
+
+
+# ---------------------------------------------------------------------------
+# fused ragged decode: paged attention + output projection, live slots only
+# ---------------------------------------------------------------------------
+def _project_wo(x, wo_p: dict, pcfg: PrecisionConfig, model_dtype):
+    """The decode output projection, op-for-op identical to the model's
+    ``qlinear_apply(p["wo"], x, cfg)`` — every branch (packed serving
+    weights, float weights, fake-quant training form) reproduces the layer's
+    numerics exactly, so composing it after a ragged attention gather stays
+    bit-identical to the padded in-layer path (all scales are per-row)."""
+    if "wt_packed" in wo_p:
+        pw = as_packed_weight(wo_p, pcfg)
+        return qmatmul(x, pw, pcfg).astype(model_dtype)
+    w = wo_p["qw"]
+    if pcfg.w_mode == W_FLOAT:
+        return jnp.dot(x, w.astype(x.dtype))
+    if pcfg.a_mode != A_FLOAT:
+        x = act_fake_quant(x.astype(jnp.float32), pcfg).astype(x.dtype)
+    return fake_quant_dot(x, w, pcfg, axis=0)
+
+
+def _wo_is_float(wo_p: dict, pcfg: PrecisionConfig) -> bool:
+    return "wt_packed" not in wo_p and pcfg.w_mode == W_FLOAT
+
+
+@register_attention(ATTN_FUSED, (16, 8, 4), BACKEND_XLA)
+def _fused_decode_xla(q, k, ks, v, vs, extras, *, kv_bits, dtype, block,
+                      interpret):
+    """Reference composition: gather live rows -> paged-attention oracle ->
+    the model's wo projection.  Per-row numerics (attention per slot, per-row
+    activation scales) make the gathered sub-batch bit-identical to the
+    padded full-batch layer math."""
+    from .paged_attention import paged_attention_ref
+    page_table, pos, slot_map, wo_p, pcfg = extras
+    ql = q[slot_map]
+    attn = paged_attention_ref(ql, k, ks, v, vs, page_table[slot_map],
+                               jnp.asarray(pos)[slot_map], kv_bits=kv_bits,
+                               out_dtype=dtype)
+    flat = attn.reshape(ql.shape[0], 1, -1)              # (L, 1, KV*G*Dh)
+    return _project_wo(flat, wo_p, pcfg, dtype)          # (L, 1, D)
+
+
+@register_attention(ATTN_FUSED, (16, 8, 4), BACKEND_PALLAS)
+def _fused_decode_pallas(q, k, ks, v, vs, extras, *, kv_bits, dtype, block,
+                         interpret):
+    """Single-dispatch fused kernel for float ``wo``; quantized ``wo``
+    configs compose the paged-attention kernel with the engine's own
+    ``qmatmul`` epilogue instead (the per-row requant epilogue must never
+    fork numerics from the registry matmul the rest of the model uses)."""
+    page_table, pos, slot_map, wo_p, pcfg = extras
+    if not _wo_is_float(wo_p, pcfg):
+        from .paged_attention import paged_attention
+        ql = q[slot_map]
+        attn = paged_attention(ql, k, ks, v, vs, page_table[slot_map],
+                               jnp.asarray(pos)[slot_map], kv_bits=kv_bits,
+                               interpret=interpret).astype(dtype)
+        flat = attn.reshape(ql.shape[0], 1, -1)
+        return _project_wo(flat, wo_p, pcfg, dtype)
+    from .decode_fused import fused_decode
+    out = fused_decode(q, k, ks, v, vs, page_table, pos, slot_map,
+                       wo_p["qw"], kv_bits=kv_bits, interpret=interpret)
+    return out[:, None, :].astype(dtype)                 # (L, 1, D)
+
+
+def fused_paged_decode(q, k_pool, k_scale, v_pool, v_scale, page_table, pos,
+                       slot_map, wo_p: dict, pcfg: PrecisionConfig, *,
+                       kv_bits: int = 8, dtype=jnp.float32,
+                       backend: str | None = None,
+                       interpret: bool | None = None):
+    """Fused ragged decode step via the registry: paged attention over the
+    **live slots only** (``slot_map`` (L,) int32 into the padded batch) with
+    the wo output projection folded in.  Returns the padded (B, 1, D)
+    projected output — live rows carry the projection, dead rows are exact
+    zeros (their residual stream is ignored by the batcher anyway).
+
+    ``slot_map`` may repeat slot ids (occupancy-bucket padding): duplicates
+    compute identical rows and the scatter writes identical values."""
+    backend = backend or default_backend()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = q.shape[0]
+    if slot_map is None:
+        slot_map = jnp.arange(b, dtype=jnp.int32)
+    slot_map = jnp.asarray(slot_map, jnp.int32)
+    fn, matched = resolve_attention_entry(ATTN_FUSED, kv_bits, backend)
+    _record_dispatch(op="fused_paged_decode", kind=ATTN_FUSED,
+                     requested_backend=backend, impl_backend=matched[2],
+                     a_bits=kv_bits, w_bits=8,
+                     m_rows=int(slot_map.shape[0]),
+                     a_scale_shape=None, block=None)
+    compact = fn(q, k_pool, k_scale, v_pool, v_scale,
+                 (page_table, pos, slot_map, wo_p, pcfg),
+                 kv_bits=kv_bits, dtype=dtype, block=None,
+                 interpret=interpret)                    # (L, 1, D)
+    d = compact.shape[-1]
+    out = jnp.zeros((b, 1, d), compact.dtype)
+    return out.at[slot_map].set(compact)
+
+
+def autotune_fused_block_size(*, b: int, kv: int, g: int, dh: int, d: int,
+                              s_max: int, kv_bits: int = 8,
+                              candidates=(16, 32, 64, 128), iters: int = 2,
+                              interpret: bool | None = None,
+                              force: bool = False, seed: int = 0) -> dict:
+    """Sweep the fused decode kernel over candidate pool block sizes (the
+    pool block is the fused kernel's sequence tile too).  Persisted under
+    tuning kind ``attn_fused_decode`` next to ``attn_paged`` so deployments
+    can compare which dispatch shape prefers which block size."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    from .decode_fused import fused_decode as kernel
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, kv, g, dh)).astype(np.float32))
+    wo = jnp.asarray(
+        rng.normal(size=(kv * g * dh, d)).astype(np.float32) * dh ** -0.5)
+    slot_map = jnp.arange(b, dtype=jnp.int32)
+    pos = jnp.full((b,), s_max - 1, jnp.int32)
+    quant = kv_bits < 16
+    qmax = (1 << (min(kv_bits, 8) - 1)) - 1 if quant else 0
+    dh_store = dh // 2 if kv_bits == 4 else dh
+
+    def measure(block):
+        bs = block[2]
+        nb = s_max // bs
+        n_pool = b * nb + 1
+        if quant:
+            mk = lambda: jnp.asarray(rng.integers(
+                -qmax, qmax + 1, (n_pool, bs, kv, dh_store)).astype(np.int8))
+            ms = lambda: jnp.asarray(rng.uniform(
+                1e-3, 1e-1, (n_pool, bs, kv, 1)).astype(np.float32))
+            kp, ksc, vp, vsc = mk(), ms(), mk(), ms()
+        else:
+            mk = lambda: jnp.asarray(
+                rng.normal(size=(n_pool, bs, kv, dh)).astype(np.float32))
+            kp, vp, ksc, vsc = mk(), mk(), None, None
+        pt = jnp.asarray(
+            rng.permutation(b * nb).reshape(b, nb).astype(np.int32) + 1)
+        return tuning.time_fn(
+            lambda: kernel(q, kp, ksc, vp, vsc, pt, pos, slot_map, wo,
+                           kv_bits=kv_bits, interpret=interpret),
+            iters=iters)
+
+    cands = [(1, dh, bs) for bs in candidates if s_max % bs == 0] \
+        or [(1, dh, s_max)]
+    return tuning.autotune(b * g, dh, s_max, kind=f"attn_{ATTN_FUSED}",
+                           a_bits=kv_bits, w_bits=8, backend=BACKEND_PALLAS,
+                           measure=measure, candidates=cands, force=force)
 
 
 # ---------------------------------------------------------------------------

@@ -27,8 +27,9 @@ Layout (per device, post-sharding):
 
 Grid: (B, KV, n_blocks), blocks innermost; scratch m/l/acc carried across a
 sequence's blocks (online softmax).  Blocks wholly beyond ``pos`` still DMA
-(their page-table entries point at the reserved null block 0) but contribute
-exact zeros through the mask.
+(their page-table entries point at the reserved null block 0) but skip the
+dot/softmax update entirely (``pl.when(j * bs <= pos)``) — bit-identical to
+masking, since a fully-masked block's update is the identity.
 """
 from __future__ import annotations
 
@@ -65,21 +66,27 @@ def _kernel(pt_ref, pos_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref, out_ref,
             x = x * scale_ref[0, :, 0]
         return x                                             # (bs, Dh)
 
-    q = q_ref[0, 0].astype(jnp.float32)                      # (G, Dh)
-    k = dequant(kp_ref, ks_ref)
-    s = jnp.dot(q, k.T) / (dh ** 0.5)                        # (G, bs)
-    idx = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    mask = idx <= pos_ref[b]                                 # (1, bs)
-    s_masked = jnp.where(mask, s, -1e30)
+    # Blocks whose first position is already past ``pos`` contribute exact
+    # zeros through the mask (p=0, m_new=m_prev, corr=1), so skipping the
+    # dot/softmax update entirely is bit-identical — dead tail blocks cost
+    # only their (null-block) DMA, not dequant + two dots per block.
+    @pl.when(j * bs <= pos_ref[b])
+    def _live_block():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, Dh)
+        k = dequant(kp_ref, ks_ref)
+        s = jnp.dot(q, k.T) / (dh ** 0.5)                    # (G, bs)
+        idx = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        mask = idx <= pos_ref[b]                             # (1, bs)
+        s_masked = jnp.where(mask, s, -1e30)
 
-    m_prev = m_ref[...]                                      # (G, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=1, keepdims=True))
-    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)             # (G, bs)
-    corr = jnp.exp(m_prev - m_new)                           # (G, 1)
-    v = dequant(vp_ref, vs_ref)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
-    m_ref[...] = m_new
+        m_prev = m_ref[...]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)         # (G, bs)
+        corr = jnp.exp(m_prev - m_new)                       # (G, 1)
+        v = dequant(vp_ref, vs_ref)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+        m_ref[...] = m_new
 
     @pl.when(j == n_blocks - 1)
     def _done():

@@ -162,8 +162,13 @@ def _batcher_loop(model, params, cfg, args, mesh=None):
             if args.autotune:
                 # sweep candidate pool block sizes (the paged kernel's
                 # sequence tile) so the lookup below returns a measured
-                # recommendation instead of the cold-cache default
+                # recommendation instead of the cold-cache default — for
+                # both dispatch shapes the decode loop can take: the
+                # two-dispatch paged-attention layer and the fused
+                # attention+projection kernel (its tile preference can
+                # differ, and the sweep records it under attn_fused_decode)
                 engine.autotune_kv_block_size(**attn_shape)
+                engine.autotune_fused_block_size(d=cfg.d_model, **attn_shape)
             sc = dataclasses.replace(
                 sc, block_size=engine.preferred_kv_block_size(**attn_shape))
             print(f"--kv-block-size 0 -> {sc.block_size} "

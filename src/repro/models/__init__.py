@@ -81,9 +81,11 @@ def build_model(cfg: ModelConfig) -> Model:
                 transformer.prefill_chunk_paged(p, tok, pool, pt, pos, cfg,
                                                 kv_bits)) if pageable else None,
             decode_step_paged=(
-                lambda p, tok, pool, pt, pos, kv_bits:
-                transformer.decode_step_paged(p, tok, pool, pt, pos, cfg,
-                                              kv_bits)) if pageable else None,
+                lambda p, tok, pool, pt, pos, kv_bits, slot_map=None,
+                fused=True:
+                transformer.decode_step_paged(
+                    p, tok, pool, pt, pos, cfg, kv_bits, slot_map=slot_map,
+                    fused=fused)) if pageable else None,
             decode_window_paged=(
                 lambda p, tok, pool, pt, pos, kv_bits:
                 transformer.decode_window_paged(p, tok, pool, pt, pos, cfg,

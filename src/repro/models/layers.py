@@ -343,7 +343,8 @@ def attn_apply(p, x, cfg: ModelConfig, positions, *, local: bool,
 
 
 def attn_apply_paged(p, x, cfg: ModelConfig, positions, *, local: bool,
-                     pool, page_table, kv_bits: int):
+                     pool, page_table, kv_bits: int, slot_map=None,
+                     fused: bool = True):
     """Attention over a block-paged KV pool (runtime.kvcache) instead of a
     per-slot dense cache.
 
@@ -361,6 +362,12 @@ def attn_apply_paged(p, x, cfg: ModelConfig, positions, *, local: bool,
     Out-of-range positions (bucket padding past the pool view) and retired
     slots (their page-table rows are zeroed) deflect writes to the null
     block.  Returns (out, new_pool).
+
+    Decode steps (Sq == 1, global, no softcap) take the **fused** path by
+    default: one engine dispatch covering paged attention *and* the ``wo``
+    projection, gridded over ``slot_map`` (live slots only; None = all
+    slots).  ``fused=False`` keeps the two-dispatch legacy path for
+    differential tests and benches.
     """
     b = x.shape[0]
     h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
@@ -398,6 +405,18 @@ def attn_apply_paged(p, x, cfg: ModelConfig, positions, *, local: bool,
         # prefetch Pallas kernel on TPU; the xla registration gathers the
         # dense view and reproduces the chunk path's _attend bit-exactly)
         q4 = q[:, 0].reshape(b, kvh, h // kvh, dh)
+        if fused:
+            # fused ragged decode: attention + wo projection in one engine
+            # dispatch over the live slots; dead rows come back as zeros
+            # (their residual stream is never emitted)
+            pcfg = signed(get_precision(cfg.precision))
+            out = engine.fused_paged_decode(
+                q4, new["k"], new.get("ks"), new["v"], new.get("vs"),
+                page_table.astype(jnp.int32), pos[:, 0], slot_map, p["wo"],
+                pcfg, kv_bits=kv_bits, dtype=x.dtype)
+            if "post_norm" in p:
+                out = rmsnorm(p["post_norm"], out, cfg.norm_eps)
+            return out, new
         out = engine.paged_attention(
             q4, new["k"], new.get("ks"), new["v"], new.get("vs"),
             page_table.astype(jnp.int32), pos[:, 0], kv_bits=kv_bits,

@@ -194,7 +194,7 @@ def make_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 
 def _paged_scan(params, x, cfg: ModelConfig, positions, pool, page_table,
-                kv_bits: int):
+                kv_bits: int, slot_map=None, fused: bool = False):
     def body(x, scanned):
         pp, pool_p = scanned
         new_pool_p = {}
@@ -203,7 +203,7 @@ def _paged_scan(params, x, cfg: ModelConfig, positions, pool, page_table,
             out, new_pool_p[f"layer_{i}"] = L.attn_apply_paged(
                 lp["attn"], x, cfg, positions, local=(mixer == "attn_local"),
                 pool=pool_p[f"layer_{i}"], page_table=page_table,
-                kv_bits=kv_bits)
+                kv_bits=kv_bits, slot_map=slot_map, fused=fused)
             x = x + out
             if ffn == "dense":
                 x = x + L.ffn_apply(lp["ffn"], x, cfg)
@@ -233,16 +233,22 @@ def prefill_chunk_paged(params, tokens, pool, page_table, pos,
 
 
 def decode_step_paged(params, token, pool, page_table, pos,
-                      cfg: ModelConfig, kv_bits: int):
+                      cfg: ModelConfig, kv_bits: int, slot_map=None,
+                      fused: bool = True):
     """Paged counterpart of :func:`decode_step`: per-slot page tables
     (B, n_blocks) resolve each slot's blocks; the new token's KV row lands in
     the slot's current block (retired slots' zeroed rows deflect to the null
-    block).  Returns (logits, pool)."""
+    block).
+
+    ``fused=True`` (default) runs each layer's attention + wo projection as
+    one fused engine dispatch over ``slot_map`` (live slots only; None = the
+    full padded batch); ``fused=False`` keeps the legacy two-dispatch layer.
+    Returns (logits, pool)."""
     b = token.shape[0]
     x = _embed(params, token, cfg)
     positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
     x, new_pool = _paged_scan(params, x, cfg, positions, pool, page_table,
-                              kv_bits)
+                              kv_bits, slot_map=slot_map, fused=fused)
     return _logits(params, x, cfg), new_pool
 
 

@@ -66,7 +66,8 @@ import numpy as np
 
 from repro.runtime.errors import PoolFootprintError
 from repro.runtime.serving import (ContinuousBatcher, Request, ServingConfig,
-                                   _Admission, _coerce_config, bucket_length)
+                                   _Admission, _coerce_config, _sample_rows,
+                                   bucket_length)
 
 from .pool import BlockPool
 from .radix import RadixPrefixCache
@@ -74,6 +75,24 @@ from .radix import RadixPrefixCache
 KV_BITS_CHOICES = (16, 8, 4)
 RESERVE_CHOICES = ("prompt", "budget")
 PREEMPTION_CHOICES = ("recompute", "off")
+
+
+def _select_paged(logits, greedy, slot_map, tok, pos, nout,
+                  temps, topks, seeds, rids):
+    """Paged counterpart of serving's dense select step: the decode step
+    returned COMPACT (L, 1, V) logits for the slots in ``slot_map``, so the
+    sampling params are gathered by slot id and the full device-resident
+    buffers are scatter-updated at those rows only.  Bucket padding repeats
+    a live slot id — every update is an idempotent ``.set`` (same key, same
+    inputs, same value), so duplicates are exact no-ops.  Returns the full
+    (n_slots,) next-token vector (dead rows keep their previous token)."""
+    nxt = _sample_rows(logits[:, 0], greedy, temps[slot_map],
+                       topks[slot_map], seeds[slot_map], rids[slot_map],
+                       nout[slot_map])
+    tok2 = tok.at[slot_map].set(nxt[:, None])
+    pos2 = pos.at[slot_map].set(pos[slot_map] + 1)
+    nout2 = nout.at[slot_map].set(nout[slot_map] + 1)
+    return tok2[:, 0], tok2, pos2, nout2
 
 
 def paged_block_bytes(cfg, block_size: int, kv_bits: int) -> int:
@@ -141,6 +160,11 @@ class PagedBatcher(ContinuousBatcher):
                 "model with cfg.kv_bits=0")
         self.kv_bits = int(config.kv_bits)
         self.block_size = int(config.block_size)
+        # fused ragged decode (read in _build_runtime, which super().__init__
+        # invokes): one engine dispatch per layer for attention + wo, over
+        # live-slot occupancy buckets instead of the padded batch
+        self._fused = bool(config.fused_decode)
+        self._ragged = bool(config.ragged_decode)
         self.prefix_cache = bool(config.prefix_cache)
         self.reserve = config.reserve
         self.preemption = config.preemption
@@ -233,14 +257,37 @@ class PagedBatcher(ContinuousBatcher):
         self._recompute_debt = {}
         self.metrics.on_kv_blocks(0, num_blocks - 1)
 
-        kv_bits = self.kv_bits
+        if self.config.autotune and self._ragged:
+            # the ragged dispatch compiles one decode program per occupancy
+            # bucket: warm the tuning cache for every bucket's M rows too,
+            # so no compiled shape ever sweeps mid-request (the base
+            # autotune in ContinuousBatcher.__init__ covered n_slots only)
+            from repro.core.precision import get_precision, signed
+            from repro.kernels import engine
+            engine.tune_serving_shapes(
+                cfg, signed(get_precision(cfg.precision)),
+                n_slots=self.n_slots, chunk_size=self.chunk_size,
+                extra_m=self._occupancy_buckets(), mesh=mesh)
 
-        def _decode_fn(p, t, pool, pt, pos_vec):
-            logits, new_pool = model.decode_step_paged(p, t, pool, pt,
-                                                       pos_vec, kv_bits)
+        kv_bits = self.kv_bits
+        fused = self._fused
+
+        def _decode_fn(p, t, pool, pt, pos_vec, slot_map):
+            # ragged live-slot dispatch: gather the live rows up front so
+            # EVERY per-layer matmul (qkv, ffn, lm head) runs at the
+            # occupancy-bucket batch, not the padded n_slots — and the
+            # fused kernel's grid walks exactly those rows.  Bucket padding
+            # repeats a live slot: its duplicate row recomputes identical
+            # values and rewrites its KV row with the identical bytes.
+            logits, new_pool = model.decode_step_paged(
+                p, t[slot_map], pool, pt[slot_map], pos_vec[slot_map],
+                kv_bits, fused=fused)
             return logits, jnp.argmax(logits[:, 0], axis=-1), new_pool
 
         self._decode_fn = _decode_fn
+        self._select_paged = jax.jit(_select_paged)
+        self._pt_dirty = True              # host page table changed
+        self._pt_dev = None                # device-resident page table
         chunk_fn = lambda p, t, pool, pt, pos: \
             model.prefill_chunk_paged(p, t, pool, pt, pos, kv_bits)
         if mesh is None:
@@ -276,7 +323,7 @@ class PagedBatcher(ContinuousBatcher):
                 decode_fn = shard_map(
                     _decode_fn, mesh=mesh,
                     in_specs=(rep_params, P(None, None), pool_specs,
-                              P(None, None), P(None)),
+                              P(None, None), P(None), P(None)),
                     out_specs=(P(None, None, None), P(None), pool_specs),
                     check_vma=False)
                 jit_chunk_fn = shard_map(
@@ -287,7 +334,7 @@ class PagedBatcher(ContinuousBatcher):
                     check_vma=False)
             self._decode = jax.jit(
                 decode_fn, donate_argnums=(2,),
-                in_shardings=(self._psh, rep, pool_sh, rep, rep),
+                in_shardings=(self._psh, rep, pool_sh, rep, rep, rep),
                 out_shardings=(logits_sh, rep, pool_sh))
             self._prefill_chunk = jax.jit(
                 jit_chunk_fn, donate_argnums=(2,),
@@ -349,14 +396,25 @@ class PagedBatcher(ContinuousBatcher):
         ``paged:`` prefix so audit reports distinguish them from the dense
         batcher's steps."""
         from repro.analysis.report import StepSpec
+        from repro.core.precision import W_FLOAT, get_precision, signed
         flags = self._audit_flags()
         pt = jnp.asarray(self._pt)
         pos = jnp.asarray(self.pos)
         toks = jnp.asarray(self.tokens)
+        slot_map = jnp.arange(self.n_slots, dtype=jnp.int32)
+        # the fused single-dispatch contract binds only where the REAL fused
+        # kernel fires: fused wiring on, pallas backend, float wo (the
+        # quantized-wo epilogue stays in the engine's two-dispatch
+        # composition fallback so its numerics never fork from qmatmul)
+        pcfg = signed(get_precision(self.model.cfg.precision))
+        fused_layers = self.model.cfg.n_layers \
+            if (self._fused and flags["backend"] == "pallas"
+                and pcfg.w_mode == W_FLOAT) else None
         steps = [
             StepSpec(name="paged:decode", fn=self._decode,
-                     args=(self.params, toks, self.pool, pt, pos),
-                     donate_argnums=(2,), **flags),
+                     args=(self.params, toks, self.pool, pt, pos, slot_map),
+                     donate_argnums=(2,), fused_layers=fused_layers,
+                     **flags),
             StepSpec(name="paged:chunk", fn=self._prefill_chunk,
                      args=(self.params,
                            jnp.zeros((1, self.chunk_size), jnp.int32),
@@ -385,6 +443,8 @@ class PagedBatcher(ContinuousBatcher):
                       jnp.zeros((self.n_slots, self.spec_k + 1), jnp.int32),
                       self.pool, pt, pos),
                 donate_argnums=(2,), **flags))
+        steps.append(self._select_audit_step(
+            "paged:select", flags, self._select_paged, slot_map))
         return steps
 
     # -------------------------------------------------------------- submit
@@ -553,6 +613,7 @@ class PagedBatcher(ContinuousBatcher):
             self._adm = None
             self._register_written(adm.req, adm.slot, adm.length)
             self._pt[adm.slot, :] = self._adm_row[0]
+            self._pt_dirty = True
             self._activate(adm.req, adm.slot, None, row)
 
     def _alloc(self, n: int) -> list[int] | None:
@@ -679,6 +740,7 @@ class PagedBatcher(ContinuousBatcher):
                 continue
             self._slot_blocks[i].append(blk[0])
             self._pt[i, b_idx] = blk[0]
+            self._pt_dirty = True
             moved = True
         if moved:
             self._gauge()
@@ -730,6 +792,7 @@ class PagedBatcher(ContinuousBatcher):
             self.pool_meta.release(bid)
         self._slot_blocks[slot] = None
         self._pt[slot, :] = 0               # dead decode writes -> null block
+        self._pt_dirty = True
         self._requeue(req, slot)
         self.metrics.on_preempt(req)
         if self.tracer.enabled:
@@ -739,25 +802,46 @@ class PagedBatcher(ContinuousBatcher):
             self.tracer.flow("t", req.rid, track=self.trace_track)
         self._gauge()
 
-    def _decode_call(self):
-        tr = self.tracer
-        if tr.enabled:
-            tr.begin("decode", "scheduler", track=self.trace_track)
-        try:
-            if self.profiler is None:
-                logits, greedy_dev, self.pool = self._decode(
-                    self.params, jnp.asarray(self.tokens), self.pool,
-                    jnp.asarray(self._pt), jnp.asarray(self.pos))
-            else:
-                with self.profiler.step("decode"):
-                    logits, greedy_dev, self.pool = self._decode(
-                        self.params, jnp.asarray(self.tokens), self.pool,
-                        jnp.asarray(self._pt), jnp.asarray(self.pos))
-                    jax.block_until_ready((logits, greedy_dev))
-        finally:
-            if tr.enabled:
-                tr.end("decode", "scheduler", track=self.trace_track)
-        return logits, np.asarray(greedy_dev, np.int32)
+    def _occupancy_bucket(self, n_live: int) -> int:
+        """Compiled batch shape for ``n_live`` live slots: the smallest
+        power of two >= n_live, capped at n_slots — so occupancy churn
+        cycles through O(log n_slots) compiled decode programs instead of
+        one per occupancy (or one padded shape computing dead rows)."""
+        b = 1
+        while b < n_live:
+            b *= 2
+        return min(b, self.n_slots)
+
+    def _occupancy_buckets(self) -> tuple[int, ...]:
+        """Every batch shape the ragged dispatch can compile."""
+        return tuple(sorted({self._occupancy_bucket(n)
+                             for n in range(1, self.n_slots + 1)}))
+
+    def _stage_loop_state(self, live: list[int]):
+        """Paged staging: the dense buffers plus the live-slot index map,
+        padded up to its occupancy bucket by REPEATING the last live slot
+        (duplicate rows recompute identical values; their KV/pt writes are
+        idempotent)."""
+        super()._stage_loop_state(live)
+        if self._ragged:
+            sm = list(live)
+            sm += [sm[-1]] * (self._occupancy_bucket(len(sm)) - len(sm))
+        else:
+            sm = list(range(self.n_slots))
+        self._dev["slot_map"] = jnp.asarray(np.asarray(sm, np.int32))
+
+    def _dispatch_decode(self):
+        if self._pt_dirty:
+            self._pt_dev = jnp.asarray(self._pt)
+            self._pt_dirty = False
+        d = self._dev
+        logits, greedy, self.pool = self._decode(
+            self.params, d["tok"], self.pool, self._pt_dev, d["pos"],
+            d["slot_map"])
+        nxt, d["tok"], d["pos"], d["nout"] = self._select_paged(
+            logits, greedy, d["slot_map"], d["tok"], d["pos"], d["nout"],
+            d["temps"], d["topks"], d["seeds"], d["rids"])
+        return nxt
 
     def _tick(self):
         if not self.tick:
@@ -801,6 +885,7 @@ class PagedBatcher(ContinuousBatcher):
                     break
                 self._slot_blocks[i].append(blk[0])
                 self._pt[i, b] = blk[0]
+                self._pt_dirty = True
             bb = b0
             while bb < b_last and bb + 1 < self.blocks_per_seq \
                     and self._pt[i, bb + 1] != 0:
@@ -890,6 +975,9 @@ class PagedBatcher(ContinuousBatcher):
                 accepted += j
                 break
         self.metrics.on_spec_round(drafted, accepted)
+        # the round mutated tokens/pos on the host: any later non-spec
+        # decode dispatch must re-stage the device loop buffers
+        self._loop_dirty = True
         if self.tracer.enabled:
             self.tracer.instant("spec_round", "scheduler",
                                 track=self.trace_track,
@@ -917,6 +1005,7 @@ class PagedBatcher(ContinuousBatcher):
             self.pool_meta.release(bid)
         self._slot_blocks[slot] = None
         self._pt[slot, :] = 0               # dead decode writes -> null block
+        self._pt_dirty = True
         self._gauge()
 
     # ---------------------------------------------------------- invariants

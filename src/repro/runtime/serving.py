@@ -104,6 +104,13 @@ class ServingConfig:
     prefix_cache: bool = True
     reserve: str = "prompt"
     preemption: str = "recompute"
+    # fused ragged decode (PagedBatcher): run each decode layer's paged
+    # attention + wo projection as ONE engine dispatch (fused_decode=False
+    # keeps the legacy two-dispatch layer), and dispatch the decode step
+    # over live slots only, bucketed to power-of-two occupancy shapes
+    # (ragged_decode=False always pads to the full (n_slots, 1) batch)
+    fused_decode: bool = True
+    ragged_decode: bool = True
     # ---- adaptive precision serving (AdaptiveServer / speculative) ------
     slo_classes: dict[str, Any] | None = None   # name -> policy.SLOClass
     brownout: bool = False
@@ -259,6 +266,50 @@ def bucket_length(length: int, chunk: int) -> int:
     return -(-length // chunk) * chunk
 
 
+# ---------------------------------------------------------------------------
+# batched next-token selection (the jitted form of per-slot _sample)
+# ---------------------------------------------------------------------------
+def _sample_rows(lg, greedy, temps, topks, seeds, rids, nouts):
+    """Next token for every row of an (R, V) logits block at once —
+    the batched, jit-friendly form of :meth:`ContinuousBatcher._sample`,
+    bit-identical row by row.
+
+    Greedy rows (temperature <= 0) pass the decode step's fused argmax
+    through untouched.  Sampled rows reproduce the per-slot reference math
+    exactly: f32 logits / T; the top-k cutoff via descending ``jnp.sort`` at
+    index k-1, which is the same float value ``jax.lax.top_k(...)[0][-1]``
+    returns; and a categorical draw under the identical
+    ``fold_in(fold_in(PRNGKey(seed), rid), n_out)`` key — PRNG bits are a
+    deterministic function of the key data, so vmapping the draw cannot
+    change any stream (tests/test_serving_ragged.py locks this in)."""
+    def one(row, g, t, k, sd, rd, n):
+        safe_t = jnp.where(t <= 0.0, jnp.float32(1.0), t)
+        z = row.astype(jnp.float32) / safe_t
+        kth = jnp.sort(z)[::-1][jnp.clip(k, 1, z.shape[-1]) - 1]
+        z = jnp.where((k > 0) & (z < kth), -jnp.inf, z)
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(sd), rd), n)
+        samp = jax.random.categorical(key, z)
+        return jnp.where(t <= 0.0, g, samp).astype(jnp.int32)
+    return jax.vmap(one)(lg, greedy, temps, topks, seeds, rids, nouts)
+
+
+def _select_dense(logits, greedy, live, tok, pos, nout,
+                  temps, topks, seeds, rids):
+    """One batched post-decode selection step over the full padded batch:
+    sample/choose every row's next token on device, advance the
+    device-resident token/pos/n_out buffers for LIVE rows only, and return
+    the (B,) next-token vector — the single value the host loop syncs on.
+    Dead/stalled rows keep their previous token and position (their sampled
+    value is masked out), so the buffers never drift from the host mirrors.
+    All ops are per-row (mask + elementwise update), keeping the pure-DP
+    sharded step collective-free."""
+    nxt = _sample_rows(logits[:, 0], greedy, temps, topks, seeds, rids, nout)
+    nxt = jnp.where(live, nxt, tok[:, 0])
+    adv = live.astype(pos.dtype)
+    return nxt, nxt[:, None], pos + adv, nout + adv
+
+
 class ContinuousBatcher:
     """Slot-based continuous batching: chunked (or whole-prompt) prefill
     interleaved with batched decode."""
@@ -341,9 +392,18 @@ class ContinuousBatcher:
         self._adm: _Admission | None = None
         self._adm_cache = None             # reused (1, s_adm) admission cache
         self._just_finished: list[Request] = []
-        # host-side next-token buffer; placed (sharded) at each decode call
+        # host-side MIRRORS of the decode loop state.  The hot loop runs on
+        # device-resident buffers (self._dev) and only re-stages them from
+        # these mirrors when the scheduler actually mutated loop state
+        # (admission/finish/requeue/stall churn) — never every step.  The
+        # emit loop keeps the mirrors current so a re-stage is always exact.
         self.tokens = np.zeros((n_slots, 1), np.int32)
+        self._dev: dict | None = None      # device loop state (lazy)
+        self._loop_dirty = True            # mirrors changed -> re-stage
+        self._live_list: list[int] | None = None   # live set at last stage
+        self._stage_count = 0              # host->device stagings (tests)
         self._build_runtime(model, cfg, mesh)
+        self._select = jax.jit(_select_dense)
 
     # ------------------------------------------------------------- runtime
     def _build_runtime(self, model, cfg, mesh):
@@ -545,7 +605,30 @@ class ContinuousBatcher:
                       jnp.zeros((1, self.chunk_size), jnp.int32),
                       adm_cache, jnp.int32(0)),
                 donate_argnums=(2,), **flags))
+        steps.append(self._select_audit_step(
+            "select", flags, self._select, jnp.ones((self.n_slots,), bool)))
         return steps
+
+    def _select_audit_step(self, name: str, flags: dict, fn, row_arg):
+        """StepSpec for the batched post-decode select dispatch.  The
+        precision flags are forced off: select touches logits and int
+        buffers only (no qmatmul), so the Pallas/scale rules cannot bind —
+        it is audited for collective-freedom under pure DP.  ``row_arg`` is
+        the third positional arg: the dense live mask, or the paged
+        batcher's slot map."""
+        from repro.analysis.report import StepSpec
+        n = self.n_slots
+        v = getattr(self.model.cfg, "padded_vocab", self.model.cfg.vocab)
+        sel_flags = dict(flags, quantized_weights=False, quantized_acts=False)
+        return StepSpec(
+            name=name, fn=fn,
+            args=(jnp.zeros((n, 1, v), jnp.float32),
+                  jnp.zeros((n,), jnp.int32), row_arg,
+                  jnp.zeros((n, 1), jnp.int32), jnp.zeros((n,), jnp.int32),
+                  jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.float32),
+                  jnp.zeros((n,), jnp.int32), jnp.zeros((n,), jnp.int32),
+                  jnp.zeros((n,), jnp.int32)),
+            **sel_flags)
 
     def _validate(self, req: Request):
         """Admission validation; raises a typed AdmissionError subclass
@@ -603,7 +686,13 @@ class ContinuousBatcher:
 
     def _sample(self, req: Request, logits_row) -> int:
         """Next token from one slot's (V,) logits row under the request's
-        sampling params.  Greedy is the exactness-preserving default."""
+        sampling params.  Greedy is the exactness-preserving default.
+
+        This is the per-slot REFERENCE implementation: the hot loop samples
+        every live slot in one jitted dispatch (:func:`_sample_rows`, bit-
+        identical row by row — tests/test_serving_ragged.py locks the
+        equivalence); this method remains for the speculative emit loop and
+        as the oracle the regression tests compare against."""
         if req.temperature <= 0.0:
             return int(jnp.argmax(logits_row))
         lg = logits_row.astype(jnp.float32) / req.temperature
@@ -626,6 +715,7 @@ class ContinuousBatcher:
         self._release_slot(req, slot)
         self.done[slot] = True
         self.slots[slot] = None
+        self._loop_dirty = True
         self._just_finished.append(req)
 
     def _release_slot(self, req: Request, slot: int):
@@ -643,6 +733,7 @@ class ContinuousBatcher:
         self.slots[slot] = None
         self.done[slot] = True
         self.stalled[slot] = False
+        self._loop_dirty = True
         self.queue.appendleft(req)
 
     # ----------------------------------------------------------------- admit
@@ -675,6 +766,7 @@ class ContinuousBatcher:
         self.tokens[slot, 0] = tok
         self.pos[slot] = length
         self.done[slot] = False
+        self._loop_dirty = True
 
     def _join_slot(self, slot: int, one_cache):
         """Copy the admission cache into slot ``slot`` (no-op for the paged
@@ -764,29 +856,87 @@ class ContinuousBatcher:
             self._activate(req, slot, one_cache, logits[0, -1])
 
     # ----------------------------------------------------------------- step
-    def _decode_call(self):
-        """One batched decode dispatch; returns (logits, greedy (B,) np)."""
+    def _live_slots(self) -> list[int]:
+        """Slots the decode step advances this iteration: occupied, not
+        done, not stalled — computed AFTER ``_pre_decode`` so allocation
+        stalls and preemptions are reflected."""
+        return [i for i in range(self.n_slots)
+                if self.slots[i] is not None and not self.done[i]
+                and not self.stalled[i]]
+
+    def _stage_loop_state(self, live: list[int]):
+        """(Re)stage the decode-loop device buffers from the host mirrors:
+        tokens, positions, per-slot output counts, the live mask, and the
+        per-slot sampling params.  Called only when the scheduler mutated
+        loop state (``_loop_dirty``) or the live set changed — the greedy
+        steady state runs entirely on the device-resident buffers with zero
+        host->device staging per step (``_stage_count`` counts stagings so
+        tests can assert exactly that)."""
+        n = self.n_slots
+        nout = np.zeros(n, np.int32)
+        temps = np.zeros(n, np.float32)
+        topks = np.zeros(n, np.int32)
+        seeds = np.zeros(n, np.int32)
+        rids = np.zeros(n, np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            nout[i] = len(req.output)
+            temps[i] = req.temperature
+            topks[i] = req.top_k
+            seeds[i] = req.seed
+            rids[i] = req.rid
+        mask = np.zeros(n, bool)
+        mask[live] = True
+        self._dev = {
+            "tok": jnp.asarray(self.tokens), "pos": jnp.asarray(self.pos),
+            "nout": jnp.asarray(nout), "live": jnp.asarray(mask),
+            "temps": jnp.asarray(temps), "topks": jnp.asarray(topks),
+            "seeds": jnp.asarray(seeds), "rids": jnp.asarray(rids),
+        }
+        self._loop_dirty = False
+        self._stage_count += 1
+
+    def _dispatch_decode(self):
+        """Decode + batched select on the device-resident loop state; the
+        paged batcher overrides this with its pool/page-table plumbing."""
+        d = self._dev
+        logits, greedy, self.cache = self._decode(
+            self.params, d["tok"], self.cache, d["pos"])
+        nxt, d["tok"], d["pos"], d["nout"] = self._select(
+            logits, greedy, d["live"], d["tok"], d["pos"], d["nout"],
+            d["temps"], d["topks"], d["seeds"], d["rids"])
+        return nxt
+
+    def _decode_call(self, live: list[int]) -> np.ndarray:
+        """One decode + select dispatch for the live slots.  Returns the
+        full (n_slots,) np.int32 next-token vector — the host loop's ONLY
+        per-step device sync; dead/stalled rows repeat their previous
+        token.  Sampling (greedy and temperature/top-k alike) happened on
+        device in the jitted select step, so there are no per-slot
+        round-trips regardless of sampling params (the old non-greedy path
+        blocked once per sampled slot per token)."""
+        if self._loop_dirty or live != self._live_list:
+            self._stage_loop_state(live)
+            self._live_list = list(live)
         tr = self.tracer
         if tr.enabled:
             tr.begin("decode", "scheduler", track=self.trace_track)
         try:
             if self.profiler is None:
-                logits, greedy_dev, self.cache = self._decode(
-                    self.params, jnp.asarray(self.tokens), self.cache,
-                    jnp.asarray(self.pos))
+                nxt = self._dispatch_decode()
             else:
-                # the device-sync boundary: block inside the bracket so the
-                # profiler splits device time from the host gap before the
-                # next dispatch
+                # the device-sync boundary: the next-token vector is the
+                # host loop's only data dependency — block inside the
+                # bracket so the profiler splits device time from the host
+                # gap before the next dispatch
                 with self.profiler.step("decode"):
-                    logits, greedy_dev, self.cache = self._decode(
-                        self.params, jnp.asarray(self.tokens), self.cache,
-                        jnp.asarray(self.pos))
-                    jax.block_until_ready((logits, greedy_dev))
+                    nxt = self._dispatch_decode()
+                    jax.block_until_ready(nxt)
         finally:
             if tr.enabled:
                 tr.end("decode", "scheduler", track=self.trace_track)
-        return logits, np.asarray(greedy_dev, np.int32)
+        return np.asarray(nxt, np.int32)
 
     def _pre_decode(self):
         """Hook before the batched decode dispatch.  The paged batcher's
@@ -842,18 +992,16 @@ class ContinuousBatcher:
             self._admit_full()
         if not all(self.done):
             self._pre_decode()
-        if not all(self.done):
-            logits, greedy = self._decode_call()
+        # stalled slots took no block this step: their write deflected to
+        # the null block and their logits would be meaningless — they stay
+        # out of the live set and re-feed the same token once a block frees
+        live = self._live_slots()
+        if live:
+            nxt = self._decode_call(live)
             self.metrics.decode_steps += 1
-            for i, req in enumerate(self.slots):
-                if req is None or self.done[i] or self.stalled[i]:
-                    # stalled slots took no block this step: their write
-                    # deflected to the null block and their logits are
-                    # meaningless — re-feed the same token at the same
-                    # position once a block frees up
-                    continue
-                tok = int(greedy[i]) if req.temperature <= 0.0 \
-                    else self._sample(req, logits[i, 0])
+            for i in live:
+                req = self.slots[i]
+                tok = int(nxt[i])
                 self.metrics.decode_slot_tokens += 1
                 self.pos[i] += 1
                 hit_eos = req.eos_id is not None and tok == req.eos_id

@@ -268,6 +268,12 @@ def test_step_spec_default_rules_gating():
                    backend="xla").default_rules()
     assert "pallas_call_present" not in ref
     assert "scale_shape_is_per_row" in ref
+    # the fused-decode promise binds its single-dispatch contract; steps
+    # without it (dense decode, composition fallback) never see the rule
+    fused = StepSpec(**base, fused_layers=2).default_rules()
+    assert "fused_decode_single_dispatch" in fused
+    assert "fused_decode_single_dispatch" not in \
+        StepSpec(**base).default_rules()
 
 
 def test_report_json_roundtrip():
@@ -394,6 +400,50 @@ warm = StepSpec(name="warm-tuning", fn=jax.jit(
     lambda x: engine.qmatmul(x, pw, pcfg)), args=(jnp.ones((16, 64)),))
 assert audit_step(warm, rules=("tuning_cache_hit",)) == []
 print("SEEDED_TUNING_OK")
+
+# 6. fused-decode single dispatch: the real fused kernel passes; the
+#    two-dispatch legacy layer fires (no fused call + a non-fused pallas
+#    attention dispatch); a host callback inside the step is flagged
+from repro.kernels.decode_fused import fused_decode
+rng6 = np.random.default_rng(6)
+B, KV, G, DH, BS, NB, D = 2, 1, 2, 4, 4, 2, 8
+q6 = jnp.asarray(rng6.standard_normal((B, KV, G, DH)).astype(np.float32))
+kp6 = jnp.asarray(rng6.integers(
+    -127, 128, (B * NB + 1, BS, KV, DH)).astype(np.int8))
+ks6 = jnp.ones((B * NB + 1, BS, KV, 1), jnp.float32)
+pt6 = jnp.arange(B * NB, dtype=jnp.int32).reshape(B, NB) + 1
+pos6 = jnp.array([3, 5], jnp.int32)
+sm6 = jnp.arange(B, dtype=jnp.int32)
+wo6 = jnp.asarray(rng6.standard_normal((KV * G * DH, D)).astype(np.float32))
+
+fused_fn = jax.jit(lambda q: fused_decode(
+    q, kp6, ks6, kp6, ks6, pt6, pos6, sm6, wo6, kv_bits=8, interpret=True))
+good = StepSpec(name="fused-step", fn=fused_fn, args=(q6,), fused_layers=1)
+assert audit_step(good, rules=("fused_decode_single_dispatch",)) == []
+
+unfused_fn = jax.jit(lambda q: engine.paged_attention(
+    q, kp6, ks6, kp6, ks6, pt6, pos6, kv_bits=8, interpret=True))
+bad = StepSpec(name="unfused-step", fn=unfused_fn, args=(q6,),
+               fused_layers=1)
+fs = audit_step(bad, rules=("fused_decode_single_dispatch",))
+assert sorted({f.rule for f in fs}) == ["fused_decode_single_dispatch"], fs
+msgs = " | ".join(f.message for f in fs)
+assert "not on the fused path" in msgs, msgs
+assert "non-fused pallas_call" in msgs, msgs
+
+def sync_fn(q):
+    out = fused_decode(q, kp6, ks6, kp6, ks6, pt6, pos6, sm6, wo6,
+                       kv_bits=8, interpret=True)
+    probe = jax.pure_callback(
+        lambda o: np.float32(0.0),
+        jax.ShapeDtypeStruct((), jnp.float32), out)
+    return out + probe
+synced = StepSpec(name="sync-step", fn=jax.jit(sync_fn), args=(q6,),
+                  fused_layers=1)
+f = only(audit_step(synced, rules=("fused_decode_single_dispatch",)),
+         "fused_decode_single_dispatch")
+assert "host" in f.message, f.message
+print("SEEDED_FUSED_OK")
 
 print("SEEDED_VIOLATIONS_OK")
 """

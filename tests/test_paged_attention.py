@@ -83,6 +83,28 @@ def test_paged_attention_masks_past_pos():
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
 
 
+def test_paged_attention_dead_block_guard_is_identity():
+    """The ``pl.when`` dead-block guard: extending the page table with dead
+    tail blocks (wholly beyond pos) must leave outputs BIT-identical to the
+    truncated just-live table — the guard skips the update entirely, so the
+    tail can neither perturb the online-softmax scratch nor the output."""
+    b, kv, g, dh, bs = 2, 2, 2, 64, 16
+    live_blocks, long_blocks = 3, 24
+    nb_pool = b * long_blocks + 2
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, dh)).astype(np.float32))
+    for kv_bits in (16, 8, 4):
+        kp, ks, vp, vs = _pool(nb_pool, bs, kv, dh, kv_bits)
+        pt_long = _page_table(b, long_blocks, nb_pool)
+        pt_live = pt_long[:, :live_blocks]
+        pos = jnp.asarray([live_blocks * bs - 1, 5], np.int32)
+        out_long = paged_attention(q, kp, ks, vp, vs, pt_long, pos,
+                                   kv_bits=kv_bits, interpret=True)
+        out_live = paged_attention(q, kp, ks, vp, vs, pt_live, pos,
+                                   kv_bits=kv_bits, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out_long),
+                                      np.asarray(out_live))
+
+
 def test_paged_ref_equals_dense_gather():
     """The paged oracle over a page table == dense decode attention over the
     gathered cache (same codes, same scales)."""
